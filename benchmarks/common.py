@@ -1,0 +1,61 @@
+"""Shared benchmark utilities: matrix suite handling, timing, format set."""
+
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (SUITE, EHYBDevice, COODevice, ELLDevice, HYBDevice,
+                        build_buckets, build_ehyb, coo_spmv, ehyb_spmv,
+                        ehyb_spmv_buckets, ell_spmv, hyb_spmv)
+
+
+@lru_cache(maxsize=None)
+def get_matrix(name: str):
+    return SUITE[name]()
+
+
+@lru_cache(maxsize=None)
+def get_ehyb(name: str, method: str = "bfs", max_width=None):
+    return build_ehyb(get_matrix(name), method=method, max_width=max_width)
+
+
+def time_fn(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds over ``repeats`` (after warmup/compile)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def build_formats(name: str, dtype=jnp.float32):
+    """All device formats for a suite matrix. Returns dict fmt -> (obj, fn)."""
+    m = get_matrix(name)
+    e = get_ehyb(name)
+    # cap pathological ELL widths (powerlaw) the way classic HYB does
+    formats = {
+        "csr": (COODevice.from_csr(m, dtype), coo_spmv),
+        "hyb": (HYBDevice.from_csr(m, dtype), hyb_spmv),
+        "ehyb": (EHYBDevice.from_ehyb(e, dtype), ehyb_spmv),
+    }
+    lens = m.row_lengths()
+    if lens.max() <= 4 * max(lens.mean(), 1):   # ELL sane only when regular
+        formats["ell"] = (ELLDevice.from_csr(m, dtype), ell_spmv)
+    b = build_buckets(e)
+    formats["ehyb_bucketed"] = (b, lambda bb, x: ehyb_spmv_buckets(bb, x,
+                                                                   dtype=dtype))
+    return formats
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,2 @@
+def emit_kv(name: str, derived: str, us: float = 0.0):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,51 @@
+"""Framework-side microbench: smoke-config train-step and decode-step wall
+times for a few architectures (CPU; relative regression tracking)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import decode_step, init_decode_state, init_model, prefill
+from repro.train import OptimizerConfig, init_train_state, make_train_step
+
+from .common import emit, time_fn
+
+
+def main():
+    out = {}
+    for arch in ("llama3_2_1b", "gemma2_2b", "moonshot_v1_16b_a3b",
+                 "rwkv6_7b", "jamba_1_5_large_398b"):
+        cfg = get_config(arch, smoke=True)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        state = init_train_state(params, cfg)
+        step = jax.jit(make_train_step(cfg, OptimizerConfig(total_steps=10)))
+        b, s = 4, 64
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (b, s), dtype=np.int32))}
+        batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+        batch["mask"] = jnp.ones((b, s), jnp.float32)
+        if cfg.family == "encdec":
+            batch["enc_frames"] = jnp.asarray(
+                rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+        t_train = time_fn(lambda st, bt: step(st, bt)[1]["loss"], state,
+                          batch, repeats=3, warmup=1)
+        emit(f"lm_train_step/{arch}", t_train * 1e6, f"b={b};s={s}")
+
+        dstate = init_decode_state(cfg, b, s + 8, jnp.float32, enc_len=s)
+        _, dstate = jax.jit(lambda p, bt, st: prefill(p, bt, cfg, st))(
+            params, batch if cfg.family == "encdec"
+            else {"tokens": batch["tokens"]}, dstate)
+        dec = jax.jit(lambda p, tk, st, pos: decode_step(p, tk, cfg, st, pos))
+        t_dec = time_fn(lambda: dec(params, batch["tokens"][:, :1], dstate,
+                                    jnp.int32(s))[0], repeats=3, warmup=1)
+        emit(f"lm_decode_step/{arch}", t_dec * 1e6, f"b={b};cache={s+8}")
+        out[arch] = (t_train, t_dec)
+    return out
+
+
+if __name__ == "__main__":
+    main()

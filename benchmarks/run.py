@@ -1,0 +1,27 @@
+"""Benchmark entry point — one module per paper table/figure.
+
+  Fig 2/3 + 4/5  -> spmv_throughput   (per-matrix GFLOP/s per format)
+  Table 1/2      -> speedup_table     (EHYB vs baselines, fp32/fp64)
+  Fig 6          -> preprocessing_time (partition/reorder × single-SpMV)
+  §3.4           -> bytes_model       (modeled HBM bytes; int16 ablation)
+  §6             -> solver_bench      (SPAI-CG amortization)
+  framework      -> lm_step_bench     (smoke train/decode step times)
+
+Prints ``name,us_per_call,derived`` CSV lines.
+"""
+import sys
+
+
+def main() -> None:
+    mods = sys.argv[1:] or ["bytes_model", "preprocessing_time",
+                            "speedup_table", "solver_bench", "lm_step_bench"]
+    import importlib
+
+    for name in mods:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        print(f"# === {name} ===")
+        mod.main()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,20 @@
+"""End-to-end serving driver (the paper-kind deliverable: EHYB is a
+kernel/serving paper, so the end-to-end example serves a small model with
+batched requests through the continuous-batching engine).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    sys.argv = [sys.argv[0], "--arch", "llama3_2_1b", "--smoke",
+                "--requests", "12", "--batch", "4", "--max-new", "8"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

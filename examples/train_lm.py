@@ -1,0 +1,34 @@
+"""End-to-end training driver: trains a smoke-scale LM for a few dozen steps
+on CPU through the full production path (mesh → sharded state → resilient
+loop → async checkpoints), then resumes from the checkpoint to prove
+restart-consistency.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 30]
+"""
+
+import argparse
+import shutil
+import sys
+import tempfile
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--arch", default="llama3_2_1b")
+    args = ap.parse_args()
+    ckpt = tempfile.mkdtemp(prefix="repro_train_lm_")
+    try:
+        sys.argv = [sys.argv[0], "--arch", args.arch, "--smoke",
+                    "--steps", str(args.steps), "--global-batch", "8",
+                    "--seq-len", "128", "--ckpt-dir", ckpt,
+                    "--ckpt-every", "10"]
+        train.main()
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""repro: EHYB-TPU — explicit-caching hybrid SpMV (Chen, 2022) inside a
+multi-pod JAX training/serving framework.
+
+Subpackages
+-----------
+core      — the paper's contribution: partitioner, EHYB format, SpMV/SpMM,
+            Krylov solvers, synthetic FEM matrix suite.
+kernels   — Pallas TPU kernels (VMEM-cached EHYB SpMV/SpMM) + jnp oracles.
+models    — LM substrate (GQA/MoE/RWKV6/Mamba/enc-dec transformers).
+configs   — the 10 assigned architectures + smoke variants.
+data      — deterministic synthetic token pipeline.
+train     — optimizer, train step, checkpointing, fault tolerance.
+serve     — decode state, prefill/decode steps, batching.
+launch    — production mesh, sharding rules, dry-run / train / serve drivers.
+roofline  — compiled-artifact roofline analysis.
+"""
+
+__version__ = "0.1.0"

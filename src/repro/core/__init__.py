@@ -1,0 +1,33 @@
+"""The paper's primary contribution: EHYB — explicit-caching hybrid SpMV.
+
+Pipeline (all host-side preprocessing is numpy, mirroring the paper's
+CPU/METIS preprocessing; all compute paths are JAX):
+
+    SparseCSR --make_partition--> Partition --build_ehyb--> EHYB
+        --EHYBDevice.from_ehyb--> device tables --ehyb_spmv / kernels-->  y
+"""
+
+from .matrices import (SUITE, SparseCSR, elasticity3d, from_coo, poisson3d,
+                       poisson3d27, powerlaw, unstructured)
+from .partition import (Partition, bfs_partition, choose_vec_size,
+                        make_partition, natural_partition)
+from .ehyb import (EHYB, EHYBBuckets, PackedEHYB, build_buckets,
+                   build_ehyb, pack_staircase)
+from .spmv import (COODevice, EHYBDevice, EHYBPackedDevice, ELLDevice,
+                   HYBDevice, coo_spmv,
+                   csr_spmv, dense_spmv, ehyb_spmv, ehyb_spmv_buckets,
+                   ell_spmv, hyb_spmv)
+from .solver import PRECONDITIONERS, SolveResult, bicgstab, cg
+
+__all__ = [
+    "SUITE", "SparseCSR", "elasticity3d", "from_coo", "poisson3d",
+    "poisson3d27", "powerlaw", "unstructured",
+    "Partition", "bfs_partition", "choose_vec_size", "make_partition",
+    "natural_partition",
+    "EHYB", "EHYBBuckets", "PackedEHYB", "build_buckets", "build_ehyb",
+    "pack_staircase", "EHYBPackedDevice",
+    "COODevice", "EHYBDevice", "ELLDevice", "HYBDevice", "coo_spmv",
+    "csr_spmv", "dense_spmv", "ehyb_spmv", "ehyb_spmv_buckets", "ell_spmv",
+    "hyb_spmv",
+    "PRECONDITIONERS", "SolveResult", "bicgstab", "cg",
+]

@@ -1,0 +1,353 @@
+"""EHYB format construction (paper §3.2–3.4, Algorithms 1–2).
+
+The Explicit-caching HYBrid format splits a partitioned, symmetrically
+reordered sparse matrix into:
+
+* a **sliced-ELL part** holding every entry whose column lies in the same
+  partition as its row.  Column indices are stored *locally* (offset within
+  the partition's x-slice) as ``uint16`` — the paper's §3.4 compact-index
+  optimization (25 % fewer bytes/nnz in fp32, 13.3 % in fp64).  Rows are
+  sorted by in-partition length inside each partition (Algo 1 line 17–18),
+  which tightens slices/tiles.
+* an **ER ("extra rows") part** holding the out-of-partition remainder in a
+  row-length-sorted padded layout with global column indices and an explicit
+  row map ``er_row_idx`` (the paper's ``yIdxER``).
+
+TPU adaptation (see DESIGN.md §2): the GPU's (partition ↔ CUDA block,
+x-slice ↔ shared memory, 32-row warp slice) becomes (partition ↔ Pallas grid
+step, x-slice ↔ VMEM block via BlockSpec, 8-row sublane slice).  Tiles are
+uniform ``(vec_size, ell_width)`` across partitions in the baseline format so
+one ``BlockSpec`` covers the whole kernel; the width-bucketed variant
+(§build_buckets) is the beyond-paper optimization that recovers most of the
+padding bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from .matrices import SparseCSR
+from .partition import Partition, make_partition
+
+
+@dataclasses.dataclass
+class EHYB:
+    """EHYB matrix. All arrays are host numpy; see ``as_jax`` for device form."""
+
+    n: int                   # true dimension
+    n_pad: int               # n_parts * vec_size
+    n_parts: int
+    vec_size: int
+    # --- sliced-ELL (cached) part: uniform tiles -------------------------
+    ell_width: int                    # W = max in-partition row width
+    ell_vals: np.ndarray              # (n_parts, vec_size, W) float
+    ell_cols: np.ndarray              # (n_parts, vec_size, W) uint16, LOCAL
+    part_widths: np.ndarray           # (n_parts,) int32 — per-partition max width
+    slice_widths: np.ndarray          # (n_parts, vec_size//sublane) int32 —
+    # per 8-row-slice max width (the paper's sliced-ELL granularity; rows are
+    # length-sorted inside each partition so slices are tight)
+    # --- ER (uncached) part ----------------------------------------------
+    er_rows: int                      # padded to sublane multiple (≥ 1 slice)
+    er_width: int
+    er_vals: np.ndarray               # (er_rows, er_width) float
+    er_cols: np.ndarray               # (er_rows, er_width) int32, GLOBAL (new order)
+    er_row_idx: np.ndarray            # (er_rows,) int32 — new-row of each ER slot
+    # --- permutations ------------------------------------------------------
+    perm: np.ndarray                  # (n_pad,) new slot -> old vertex (>=n: padding)
+    inv_perm: np.ndarray              # (n_pad,) old (padded) vertex -> new slot
+    # --- provenance / stats -------------------------------------------------
+    nnz: int
+    nnz_in: int                       # in-partition entries
+    preprocess_seconds: dict = dataclasses.field(default_factory=dict)
+
+    # .....................................................................
+    @property
+    def in_part_fraction(self) -> float:
+        return self.nnz_in / max(self.nnz, 1)
+
+    @property
+    def ell_padding_ratio(self) -> float:
+        stored = self.n_parts * self.vec_size * self.ell_width
+        return stored / max(self.nnz_in, 1)
+
+    def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2,
+                    layout: str = "sliced") -> dict:
+        """Modeled HBM traffic of one SpMV (the paper's §3.4 accounting).
+
+        ELL streams vals + uint16 local cols once; every partition streams its
+        x-slice into VMEM once (that is the explicit cache); ER streams vals +
+        int32 cols + one random x-read per entry; y written once.
+
+        layout: "sliced"  — the paper's sliced-ELL (per 8-row-slice widths;
+                            padding only inside a slice),
+                "tile"    — uniform (V, W) partition tiles (kernel v1),
+                "packed"  — per-partition packed slices padded to the max
+                            packed length across partitions (kernel v2).
+        """
+        if layout == "tile" or self.slice_widths is None:
+            ell_n = self.n_parts * self.vec_size * self.ell_width
+        elif layout == "sliced":
+            ell_n = int(self.slice_widths.sum()) * 8
+        else:  # packed
+            per_part = self.slice_widths.sum(axis=1) * 8
+            ell_n = int(per_part.max()) * self.n_parts
+        ell = ell_n * (val_bytes + col_bytes)
+        x_cache = self.n_pad * val_bytes
+        er_n = self.er_rows * self.er_width
+        er = er_n * (val_bytes + 4) + er_n * val_bytes + self.er_rows * 4
+        y = self.n_pad * val_bytes
+        return {"ell": ell, "x_cache": x_cache, "er": er, "y": y,
+                "total": ell + x_cache + er + y}
+
+    def as_jax(self, dtype=None):
+        """Return a dict of jnp arrays (lazy import keeps preprocessing
+        importable without jax)."""
+        import jax.numpy as jnp
+
+        dt = dtype or jnp.float32
+        return {
+            "ell_vals": jnp.asarray(self.ell_vals, dtype=dt),
+            "ell_cols": jnp.asarray(self.ell_cols),            # uint16
+            "er_vals": jnp.asarray(self.er_vals, dtype=dt),
+            "er_cols": jnp.asarray(self.er_cols),
+            "er_row_idx": jnp.asarray(self.er_row_idx),
+            "perm": jnp.asarray(self.perm),
+            "inv_perm": jnp.asarray(self.inv_perm),
+        }
+
+
+def build_ehyb(m: SparseCSR, part: Optional[Partition] = None,
+               method: str = "bfs", dtype_bytes: int = 4,
+               sublane: int = 8, max_width: Optional[int] = None,
+               **part_kw) -> EHYB:
+    """Algorithms 1–2 of the paper, vectorized with numpy.
+
+    ``max_width`` (beyond-paper knob, default off) caps the sliced-ELL width
+    and spills over-long in-partition rows to the ER part — a robustness valve
+    for power-law matrices.
+    """
+    t0 = time.perf_counter()
+    if part is None:
+        part = make_partition(m, method=method, dtype_bytes=dtype_bytes,
+                              **part_kw)
+    t_part = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    n, n_parts, V = m.n, part.n_parts, part.vec_size
+    n_pad = part.n_pad
+    rows = np.repeat(np.arange(n, dtype=np.int64), m.row_lengths())
+    cols = m.indices.astype(np.int64)
+    vals = m.data
+    same = part.part_vec[rows] == part.part_vec[cols]
+
+    # ---- per-row in-partition counts drive the within-partition sort
+    # (Algo 1 lines 3–18) --------------------------------------------------
+    in_counts = np.bincount(rows[same], minlength=n)
+    # current slots from the partition (grouped by partition, orig order)
+    base_slot = part.inv_perm[:n]
+    part_of = base_slot // V
+    # sort within each partition by (-in_count, orig index) — stable & exact
+    order = np.lexsort((np.arange(n), -in_counts, part_of))
+    # `order` lists vertices partition-major; rebuild slots with row-sort
+    slot_rank = np.empty(n, dtype=np.int64)
+    counts_per_part = np.bincount(part_of, minlength=n_parts)
+    starts = np.concatenate([[0], np.cumsum(counts_per_part)])
+    slot_rank[order] = np.arange(n) - starts[part_of[order]]
+    inv_perm = np.full(n_pad, -1, dtype=np.int64)
+    inv_perm[:n] = part_of * V + slot_rank
+    # padding vertices fill remaining slots of each partition
+    all_slots = np.zeros(n_pad, dtype=bool)
+    all_slots[inv_perm[:n]] = True
+    free_slots = np.flatnonzero(~all_slots)
+    inv_perm[n:] = free_slots
+    perm = np.empty(n_pad, dtype=np.int64)
+    perm[inv_perm] = np.arange(n_pad)
+
+    new_r = inv_perm[rows]
+    new_c = inv_perm[cols]
+
+    # ---- split in-partition / ER, with optional width cap -----------------
+    in_mask = same.copy()
+    if max_width is not None:
+        # spill entries beyond max_width per row (keep smallest local cols)
+        ord_in = np.lexsort((new_c, new_r))
+        rr = new_r[ord_in][same[ord_in]]
+        # rank of each in-part entry within its row
+        idx_in = ord_in[same[ord_in]]
+        row_change = np.concatenate([[True], rr[1:] != rr[:-1]])
+        grp_start = np.maximum.accumulate(np.where(row_change,
+                                                   np.arange(len(rr)), 0))
+        rank = np.arange(len(rr)) - grp_start
+        spill = idx_in[rank >= max_width]
+        in_mask[spill] = False
+
+    t_reorder0 = time.perf_counter()
+
+    # ---- fill sliced-ELL (Algo 2, lines 4–8) ------------------------------
+    sel = np.flatnonzero(in_mask)
+    order_in = sel[np.lexsort((new_c[sel], new_r[sel]))]
+    r_in = new_r[order_in]
+    widths = np.bincount(r_in, minlength=n_pad)
+    W = int(widths.max()) if len(r_in) else 1
+    W = max(W, 1)
+    part_widths = widths.reshape(n_parts, V).max(axis=1).astype(np.int32)
+    row_start = np.concatenate([[0], np.cumsum(widths)])
+    k = np.arange(len(r_in)) - row_start[r_in]
+    ell_vals = np.zeros((n_pad, W), dtype=np.float64)
+    ell_cols = np.zeros((n_pad, W), dtype=np.uint16)
+    ell_vals[r_in, k] = vals[order_in]
+    local = (new_c[order_in] - (r_in // V) * V)
+    if V > (1 << 16):
+        raise ValueError("vec_size exceeds uint16 local index range")
+    ell_cols[r_in, k] = local.astype(np.uint16)
+    ell_vals = ell_vals.reshape(n_parts, V, W)
+    ell_cols = ell_cols.reshape(n_parts, V, W)
+    # per 8-row-slice widths (paper's sliced-ELL accounting granularity)
+    slice_widths = widths.reshape(n_parts, V // sublane, sublane).max(
+        axis=2).astype(np.int32) if V % sublane == 0 else None
+
+    # ---- fill ER (Algo 2, lines 10–13; Algo 1 lines 16, 23–26) ------------
+    sel_er = np.flatnonzero(~in_mask)
+    er_counts = np.bincount(new_r[sel_er], minlength=n_pad)
+    er_rows_idx = np.flatnonzero(er_counts)
+    # global sort by descending out-count (Algo 1 line 16)
+    er_rows_idx = er_rows_idx[np.argsort(-er_counts[er_rows_idx],
+                                         kind="stable")]
+    n_er = len(er_rows_idx)
+    n_er_pad = max(sublane, -(-max(n_er, 1) // sublane) * sublane)
+    er_width = int(er_counts.max()) if n_er else 1
+    er_vals = np.zeros((n_er_pad, er_width), dtype=np.float64)
+    er_cols = np.zeros((n_er_pad, er_width), dtype=np.int32)
+    er_row_idx = np.zeros(n_er_pad, dtype=np.int32)
+    if n_er:
+        er_row_idx[:n_er] = er_rows_idx
+        er_slot = np.full(n_pad, -1, dtype=np.int64)
+        er_slot[er_rows_idx] = np.arange(n_er)
+        order_er = sel_er[np.lexsort((new_c[sel_er], new_r[sel_er]))]
+        r_er = new_r[order_er]
+        rs = np.concatenate([[0], np.cumsum(np.bincount(r_er, minlength=n_pad))])
+        kk = np.arange(len(r_er)) - rs[r_er]
+        er_vals[er_slot[r_er], kk] = vals[order_er]
+        er_cols[er_slot[r_er], kk] = new_c[order_er].astype(np.int32)
+    t_reorder = time.perf_counter() - t_reorder0
+    t_meta = t_reorder0 - t0
+
+    return EHYB(n=n, n_pad=n_pad, n_parts=n_parts, vec_size=V,
+                ell_width=W, ell_vals=ell_vals, ell_cols=ell_cols,
+                part_widths=part_widths, slice_widths=slice_widths,
+                er_rows=n_er_pad, er_width=er_width, er_vals=er_vals,
+                er_cols=er_cols, er_row_idx=er_row_idx,
+                perm=perm, inv_perm=inv_perm,
+                nnz=m.nnz, nnz_in=int(in_mask.sum()),
+                preprocess_seconds={"partition": t_part, "metadata": t_meta,
+                                    "reorder": t_reorder,
+                                    "total": t_part + t_meta + t_reorder})
+
+
+# ---------------------------------------------------------------------------
+# packed "staircase" layout (kernel v2 — beyond-paper §Perf optimization)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedEHYB:
+    """Column-major staircase packing of the sliced-ELL part.
+
+    Within a partition, rows are width-sorted (paper Algo 1 l.17), so the
+    active cells of column k form a PREFIX of rows [0, R_k).  Storing columns
+    contiguously (vals/cols of column k at ``col_starts[p,k]``) eliminates
+    inter-slice padding: HBM bytes ≈ the paper's sliced-ELL accounting,
+    while the kernel keeps static-shape vector loads (dynamic offset, fixed
+    V-length, masked by R_k).
+    """
+
+    base: EHYB
+    packed_len: int                   # L (max over partitions, + V guard)
+    packed_vals: np.ndarray           # (P, L) float
+    packed_cols: np.ndarray           # (P, L) uint16
+    col_starts: np.ndarray            # (P, W+1) int32 — column k offset
+    col_rows: np.ndarray              # (P, W) int32 — active rows R_k
+
+    def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2) -> dict:
+        b = self.base.bytes_moved(val_bytes, col_bytes, layout="sliced")
+        ell = self.base.n_parts * self.packed_len * (val_bytes + col_bytes)
+        return {**b, "ell": ell,
+                "total": ell + b["x_cache"] + b["er"] + b["y"]}
+
+
+def pack_staircase(e: EHYB) -> PackedEHYB:
+    p_, v_, w_ = e.n_parts, e.vec_size, e.ell_width
+    widths = (e.ell_vals != 0).sum(axis=2)               # (P, V) row widths
+    # R_k per partition: number of rows with width > k (rows are sorted)
+    ks = np.arange(w_)[None, None, :]
+    col_rows = (widths[:, :, None] > ks).sum(axis=1).astype(np.int32)  # (P,W)
+    lens = col_rows.sum(axis=1)
+    pack_l = int(lens.max()) + v_                        # + V over-read guard
+    packed_vals = np.zeros((p_, pack_l), dtype=e.ell_vals.dtype)
+    packed_cols = np.zeros((p_, pack_l), dtype=np.uint16)
+    col_starts = np.zeros((p_, w_ + 1), dtype=np.int32)
+    for p in range(p_):
+        off = 0
+        for k in range(w_):
+            col_starts[p, k] = off
+            r = int(col_rows[p, k])
+            packed_vals[p, off:off + r] = e.ell_vals[p, :r, k]
+            packed_cols[p, off:off + r] = e.ell_cols[p, :r, k]
+            off += r
+        col_starts[p, w_] = off
+    return PackedEHYB(base=e, packed_len=pack_l, packed_vals=packed_vals,
+                      packed_cols=packed_cols, col_starts=col_starts,
+                      col_rows=col_rows)
+
+
+# ---------------------------------------------------------------------------
+# width-bucketed variant (beyond-paper §Perf optimization)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EHYBBuckets:
+    """Partitions grouped into width buckets — one uniform tile per bucket.
+
+    The baseline format pads every partition tile to the *global* max width W;
+    on matrices with variable partition density this wastes HBM bytes (the
+    quantity the whole paper is about).  Grouping partitions into a few width
+    classes and issuing one pallas_call per class removes most padding while
+    keeping static BlockSpecs.  GPU EHYB gets the same effect from its dynamic
+    warp/slice scheduler (Algo 3), which has no TPU analogue.
+    """
+
+    base: EHYB
+    # per bucket: (part_ids, vals (B,V,Wb), cols (B,V,Wb))
+    part_ids: list        # list[np.ndarray]
+    vals: list            # list[np.ndarray]
+    cols: list            # list[np.ndarray]
+    widths: list          # list[int]
+
+    def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2) -> dict:
+        ell = sum(v.size * (val_bytes + col_bytes) for v in self.vals)
+        base = self.base.bytes_moved(val_bytes, col_bytes)
+        return {**base, "ell": ell,
+                "total": ell + base["x_cache"] + base["er"] + base["y"]}
+
+
+def build_buckets(e: EHYB, n_buckets: int = 4, lane: int = 8) -> EHYBBuckets:
+    """Group partitions by width into ≤ n_buckets classes (equal-count split,
+    widths lane-aligned so value tiles stay (8,128)-friendly)."""
+    order = np.argsort(e.part_widths, kind="stable")
+    chunks = np.array_split(order, n_buckets)
+    part_ids, vals, cols, widths = [], [], [], []
+    for ch in chunks:
+        if len(ch) == 0:
+            continue
+        wb = int(e.part_widths[ch].max())
+        wb = max(lane, -(-wb // lane) * lane)
+        wb = min(wb, e.ell_width)
+        part_ids.append(ch.astype(np.int32))
+        vals.append(np.ascontiguousarray(e.ell_vals[ch, :, :wb]))
+        cols.append(np.ascontiguousarray(e.ell_cols[ch, :, :wb]))
+        widths.append(wb)
+    return EHYBBuckets(base=e, part_ids=part_ids, vals=vals, cols=cols,
+                       widths=widths)

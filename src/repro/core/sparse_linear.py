@@ -1,0 +1,68 @@
+"""EHYBLinear — the paper's operator as an LM layer.
+
+A magnitude-pruned weight matrix is stored in EHYB and applied with the
+cached SpMM path: the *columns* of W (= input features) are partitioned, and
+each partition's slice of the activation vector plays the role of the paper's
+cached input vector.  This is integration point #2 of DESIGN.md §3 (sparse
+FFN for pruned models; see examples/sparse_ffn_lm.py).
+
+EHYB is a square format (row/col vertices share the partition); rectangular
+weights are embedded in a max(d_in, d_out) square with empty padding rows —
+the padding contributes no entries and its x-slices are never referenced.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .ehyb import EHYB, build_ehyb
+from .matrices import SparseCSR, from_coo
+from .spmv import EHYBDevice, ehyb_spmv
+
+
+def prune_to_csr(w: np.ndarray, density: float) -> SparseCSR:
+    """Magnitude-prune a dense (d_out, d_in) matrix into a square-padded CSR."""
+    d_out, d_in = w.shape
+    n = max(d_out, d_in)
+    k = max(1, int(w.size * density))
+    thresh = np.partition(np.abs(w).ravel(), -k)[-k]
+    rows, cols = np.nonzero(np.abs(w) >= thresh)
+    return from_coo(n, rows.astype(np.int64), cols.astype(np.int32),
+                    w[rows, cols].astype(np.float64), sum_duplicates=False)
+
+
+@dataclasses.dataclass
+class EHYBLinear:
+    d_in: int
+    d_out: int
+    ehyb: EHYB
+    dev: EHYBDevice
+    density: float
+
+    @classmethod
+    def from_dense(cls, w: np.ndarray, density: float = 0.1,
+                   method: str = "bfs", dtype=jnp.float32) -> "EHYBLinear":
+        d_out, d_in = w.shape
+        csr = prune_to_csr(w, density)
+        e = build_ehyb(csr, method=method)
+        return cls(d_in=d_in, d_out=d_out, ehyb=e,
+                   dev=EHYBDevice.from_ehyb(e, dtype=dtype), density=density)
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        """x: (..., d_in) → (..., d_out) via cached SpMM."""
+        lead = x.shape[:-1]
+        xt = x.reshape(-1, self.d_in).T                  # (d_in, T)
+        n = self.dev.n
+        if n > self.d_in:
+            xt = jnp.concatenate(
+                [xt, jnp.zeros((n - self.d_in, xt.shape[1]), xt.dtype)], 0)
+        yt = ehyb_spmv(self.dev, xt)                     # (n, T)
+        return yt[: self.d_out].T.reshape(*lead, self.d_out)
+
+    def bytes_vs_dense(self, val_bytes: int = 4) -> dict:
+        dense = self.d_in * self.d_out * val_bytes
+        sparse = self.ehyb.bytes_moved(val_bytes)["total"]
+        return {"dense": dense, "ehyb": sparse, "ratio": sparse / dense}

@@ -1,0 +1,292 @@
+"""JAX SpMV/SpMM paths for every format the paper evaluates.
+
+Baselines (paper §2.2/§5): COO, CSR (scalar + vector semantics collapse to
+gather + segment-sum streams under XLA), ELL, classic HYB (Bell & Garland).
+The GPU frameworks the paper races (CSR5, merge-based, holaspmv, cuSPARSE
+ALG1/2) differ from vanilla CSR only in *scheduling* — warp/thread work
+assignment — which XLA:TPU owns; their memory traffic is CSR's.  We therefore
+benchmark formats (traffic), and note the scheduling distinction in DESIGN.md.
+
+EHYB is provided both as this pure-jnp path (the oracle for the Pallas kernel,
+and itself a deployable XLA path) and as the Pallas kernel in
+``repro.kernels`` (VMEM-explicit version).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ehyb import EHYB, EHYBBuckets
+from .matrices import SparseCSR
+
+
+# ---------------------------------------------------------------------------
+# device-side format containers (jnp arrays, pytree-compatible)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class COODevice:
+    n: int
+    rows: jnp.ndarray
+    cols: jnp.ndarray
+    vals: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.rows, self.cols, self.vals), (self.n,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(aux[0], *leaves)
+
+    @classmethod
+    def from_csr(cls, m: SparseCSR, dtype=jnp.float32):
+        rows = np.repeat(np.arange(m.n, dtype=np.int32), m.row_lengths())
+        return cls(m.n, jnp.asarray(rows), jnp.asarray(m.indices),
+                   jnp.asarray(m.data, dtype=dtype))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ELLDevice:
+    n: int
+    vals: jnp.ndarray   # (n, W)
+    cols: jnp.ndarray   # (n, W) int32 (global)
+
+    def tree_flatten(self):
+        return (self.vals, self.cols), (self.n,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(aux[0], *leaves)
+
+    @classmethod
+    def from_csr(cls, m: SparseCSR, dtype=jnp.float32):
+        lens = m.row_lengths()
+        W = max(int(lens.max()) if m.n else 1, 1)
+        vals = np.zeros((m.n, W))
+        cols = np.zeros((m.n, W), dtype=np.int32)
+        rows = np.repeat(np.arange(m.n), lens)
+        start = np.concatenate([[0], np.cumsum(lens)])
+        k = np.arange(m.nnz) - start[rows]
+        vals[rows, k] = m.data
+        cols[rows, k] = m.indices
+        return cls(m.n, jnp.asarray(vals, dtype=dtype), jnp.asarray(cols))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HYBDevice:
+    """Classic HYB (Bell & Garland 2009): ELL up to width K + COO spill."""
+
+    n: int
+    ell_vals: jnp.ndarray
+    ell_cols: jnp.ndarray
+    coo_rows: jnp.ndarray
+    coo_cols: jnp.ndarray
+    coo_vals: jnp.ndarray
+
+    def tree_flatten(self):
+        return ((self.ell_vals, self.ell_cols, self.coo_rows, self.coo_cols,
+                 self.coo_vals), (self.n,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(aux[0], *leaves)
+
+    @classmethod
+    def from_csr(cls, m: SparseCSR, dtype=jnp.float32, frac: float = 0.9):
+        """K chosen so ≥ ``frac`` of rows fit fully in ELL (standard rule)."""
+        lens = m.row_lengths()
+        K = max(int(np.quantile(lens, frac)) if m.n else 1, 1)
+        rows = np.repeat(np.arange(m.n), lens)
+        start = np.concatenate([[0], np.cumsum(lens)])
+        k = np.arange(m.nnz) - start[rows]
+        in_ell = k < K
+        vals = np.zeros((m.n, K))
+        cols = np.zeros((m.n, K), dtype=np.int32)
+        vals[rows[in_ell], k[in_ell]] = m.data[in_ell]
+        cols[rows[in_ell], k[in_ell]] = m.indices[in_ell]
+        return cls(m.n, jnp.asarray(vals, dtype=dtype), jnp.asarray(cols),
+                   jnp.asarray(rows[~in_ell].astype(np.int32)),
+                   jnp.asarray(m.indices[~in_ell]),
+                   jnp.asarray(m.data[~in_ell], dtype=dtype))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EHYBDevice:
+    """Device-side EHYB (baseline uniform tiles)."""
+
+    n: int
+    n_pad: int
+    n_parts: int
+    vec_size: int
+    ell_vals: jnp.ndarray    # (P, V, W)
+    ell_cols: jnp.ndarray    # (P, V, W) uint16 local
+    er_vals: jnp.ndarray     # (R, We)
+    er_cols: jnp.ndarray     # (R, We) int32 global-new
+    er_row_idx: jnp.ndarray  # (R,)
+    perm: jnp.ndarray        # (n_pad,)
+    inv_perm: jnp.ndarray    # (n_pad,)
+
+    def tree_flatten(self):
+        leaves = (self.ell_vals, self.ell_cols, self.er_vals, self.er_cols,
+                  self.er_row_idx, self.perm, self.inv_perm)
+        return leaves, (self.n, self.n_pad, self.n_parts, self.vec_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*aux, *leaves)
+
+    @classmethod
+    def from_ehyb(cls, e: EHYB, dtype=jnp.float32):
+        t = e.as_jax(dtype=dtype)
+        return cls(e.n, e.n_pad, e.n_parts, e.vec_size, t["ell_vals"],
+                   t["ell_cols"], t["er_vals"], t["er_cols"], t["er_row_idx"],
+                   t["perm"], t["inv_perm"])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EHYBPackedDevice:
+    """Device-side packed-staircase EHYB (kernel v2)."""
+
+    n: int
+    n_pad: int
+    n_parts: int
+    vec_size: int
+    packed_vals: jnp.ndarray    # (P, L)
+    packed_cols: jnp.ndarray    # (P, L) uint16
+    col_starts: jnp.ndarray     # (P, W+1) int32
+    col_rows: jnp.ndarray       # (P, W) int32
+    er_vals: jnp.ndarray
+    er_cols: jnp.ndarray
+    er_row_idx: jnp.ndarray
+    perm: jnp.ndarray
+    inv_perm: jnp.ndarray
+
+    def tree_flatten(self):
+        leaves = (self.packed_vals, self.packed_cols, self.col_starts,
+                  self.col_rows, self.er_vals, self.er_cols, self.er_row_idx,
+                  self.perm, self.inv_perm)
+        return leaves, (self.n, self.n_pad, self.n_parts, self.vec_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*aux, *leaves)
+
+    @classmethod
+    def from_packed(cls, pk, dtype=jnp.float32):
+        e = pk.base
+        t = e.as_jax(dtype=dtype)
+        return cls(e.n, e.n_pad, e.n_parts, e.vec_size,
+                   jnp.asarray(pk.packed_vals, dtype=dtype),
+                   jnp.asarray(pk.packed_cols),
+                   jnp.asarray(pk.col_starts), jnp.asarray(pk.col_rows),
+                   t["er_vals"], t["er_cols"], t["er_row_idx"],
+                   t["perm"], t["inv_perm"])
+
+
+# ---------------------------------------------------------------------------
+# SpMV / SpMM
+# ---------------------------------------------------------------------------
+
+def _as_2d(x: jnp.ndarray) -> tuple[jnp.ndarray, bool]:
+    if x.ndim == 1:
+        return x[:, None], True
+    return x, False
+
+
+@partial(jax.jit, static_argnames=())
+def coo_spmv(m: COODevice, x: jnp.ndarray) -> jnp.ndarray:
+    x2, squeeze = _as_2d(x)
+    contrib = m.vals[:, None] * x2[m.cols]
+    y = jax.ops.segment_sum(contrib, m.rows, num_segments=m.n)
+    return y[:, 0] if squeeze else y
+
+
+# CSR in XLA-land: row-pointer semantics realized as a segment-sum over a
+# precomputed row stream (identical traffic to GPU scalar/vector CSR).
+csr_spmv = coo_spmv
+
+
+@jax.jit
+def ell_spmv(m: ELLDevice, x: jnp.ndarray) -> jnp.ndarray:
+    x2, squeeze = _as_2d(x)
+    g = x2[m.cols]                       # (n, W, R)
+    y = jnp.einsum("nw,nwr->nr", m.vals, g)
+    return y[:, 0] if squeeze else y
+
+
+@jax.jit
+def hyb_spmv(m: HYBDevice, x: jnp.ndarray) -> jnp.ndarray:
+    x2, squeeze = _as_2d(x)
+    y = jnp.einsum("nw,nwr->nr", m.ell_vals, x2[m.ell_cols])
+    spill = m.coo_vals[:, None] * x2[m.coo_cols]
+    y = y + jax.ops.segment_sum(spill, m.coo_rows, num_segments=m.n)
+    return y[:, 0] if squeeze else y
+
+
+def _ehyb_ell_part(ell_vals, ell_cols, x_parts):
+    """Cached part: per-partition gather from the partition's own x-slice.
+
+    This is the operation the Pallas kernel implements with an explicit VMEM
+    block; here it is expressed as a vmapped local gather so XLA sees the
+    locality too (all gathers index a (V,)-sized operand, not the full x)."""
+    def one_part(xv, cols, vals):     # xv: (V, R), cols: (V, W), vals: (V, W)
+        g = xv[cols.astype(jnp.int32)]           # (V, W, R)
+        return jnp.einsum("vw,vwr->vr", vals, g)
+
+    return jax.vmap(one_part)(x_parts, ell_cols, ell_vals)   # (P, V, R)
+
+
+@jax.jit
+def ehyb_spmv(m: EHYBDevice, x: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp EHYB SpMV/SpMM (oracle for the Pallas kernel)."""
+    x2, squeeze = _as_2d(x)
+    R = x2.shape[1]
+    xpad = jnp.concatenate(
+        [x2, jnp.zeros((m.n_pad - m.n, R), dtype=x2.dtype)], axis=0)
+    x_new = xpad[m.perm]                                   # reordered space
+    x_parts = x_new.reshape(m.n_parts, m.vec_size, R)
+    y_ell = _ehyb_ell_part(m.ell_vals, m.ell_cols, x_parts)
+    y_new = y_ell.reshape(m.n_pad, R)
+    # ER part: uncached global gather (small by construction)
+    g = x_new[m.er_cols]                                   # (Rr, We, R)
+    y_er = jnp.einsum("ew,ewr->er", m.er_vals, g)
+    y_new = y_new.at[m.er_row_idx].add(y_er)
+    y = y_new[m.inv_perm[: m.n]]
+    return y[:, 0] if squeeze else y
+
+
+def ehyb_spmv_buckets(b: EHYBBuckets, x: jnp.ndarray,
+                      dtype=jnp.float32) -> jnp.ndarray:
+    """Width-bucketed EHYB (beyond-paper): one dense tile op per width class."""
+    e = b.base
+    x2, squeeze = _as_2d(x)
+    R = x2.shape[1]
+    xpad = jnp.concatenate(
+        [x2, jnp.zeros((e.n_pad - e.n, R), dtype=x2.dtype)], axis=0)
+    x_new = xpad[jnp.asarray(e.perm)]
+    x_parts = x_new.reshape(e.n_parts, e.vec_size, R)
+    y_parts = jnp.zeros((e.n_parts, e.vec_size, R), dtype=x2.dtype)
+    for pid, vals, cols in zip(b.part_ids, b.vals, b.cols):
+        xv = x_parts[jnp.asarray(pid)]
+        yv = _ehyb_ell_part(jnp.asarray(vals, dtype=dtype), jnp.asarray(cols), xv)
+        y_parts = y_parts.at[jnp.asarray(pid)].set(yv)
+    y_new = y_parts.reshape(e.n_pad, R)
+    g = x_new[jnp.asarray(e.er_cols)]
+    y_er = jnp.einsum("ew,ewr->er", jnp.asarray(e.er_vals, dtype=dtype), g)
+    y_new = y_new.at[jnp.asarray(e.er_row_idx)].add(y_er)
+    y = y_new[jnp.asarray(e.inv_perm[: e.n])]
+    return y[:, 0] if squeeze else y
+
+
+def dense_spmv(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    return a @ x

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: EHYB SpMV/SpMM.
+
+ehyb_spmv.py — pl.pallas_call kernels with explicit BlockSpec VMEM tiling
+               (partition ↔ grid step; x-slice ↔ VMEM block).
+ops.py       — jit'd public wrappers (interpret=True on CPU).
+ref.py       — pure-jnp oracles used by the allclose test sweeps.
+"""
+
+from .ehyb_spmv import (ehyb_ell_pallas, ehyb_ell_packed_pallas,
+                        er_pallas)
+from .ops import (ehyb_ell_only_pallas, ehyb_spmv_packed_pallas,
+                  ehyb_spmv_pallas)
+from . import ref
+
+__all__ = ["ehyb_ell_pallas", "ehyb_ell_packed_pallas", "er_pallas",
+           "ehyb_ell_only_pallas", "ehyb_spmv_packed_pallas",
+           "ehyb_spmv_pallas", "ref"]

@@ -1,0 +1,183 @@
+"""Pallas TPU kernel for EHYB SpMV/SpMM — the paper's CUDA kernel (Algo 3),
+re-derived for the TPU memory hierarchy.
+
+Mapping (DESIGN.md §2):
+
+  CUDA block ↔ grid step ``p`` (one partition per step).
+  shared-memory x-slice ↔ the ``x_parts`` BlockSpec block ``(1, V, R)``:
+      Mosaic DMAs partition p's x-slice HBM→VMEM once per step and
+      double-buffers step p+1's slice during step p's compute — the TPU form
+      of "explicit caching" *plus* the overlap the GPU gets from warp
+      switching.
+  warp slice (32 rows) ↔ the VPU processes the whole (V, Wc) tile; the
+      8-sublane × 128-lane vregs replace SIMT lanes, and the in-partition
+      row-length sort (done at format build) keeps tiles tight.
+  uint16 col idx ↔ identical: the (1, V, W) uint16 block is the dominant
+      HBM stream; widened to int32 in-register before the VMEM gather.
+  atomic slice scheduler ↔ dropped (static grid; balance comes from the
+      nnz-balanced partitioner + width bucketing) — see DESIGN.md §7.
+
+The inner loop chunks W so the gathered ``(V, Wc, R)`` intermediate stays
+inside a VMEM budget; ``W`` is static so chunking unrolls at trace time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM working-set budget for the gathered intermediate (bytes).  v5e VMEM is
+# ~128 MiB; we keep the scratch tile well under it so the x-slice block, the
+# val/col blocks and double-buffering all fit comfortably.
+_GATHER_BUDGET = 4 * 1024 * 1024
+
+
+def _w_chunk(v: int, w: int, r: int, itemsize: int) -> int:
+    per_col = v * r * itemsize
+    return max(1, min(w, _GATHER_BUDGET // max(per_col, 1)))
+
+
+def _ehyb_ell_kernel(x_ref, vals_ref, cols_ref, y_ref, *, w_chunk: int):
+    """One grid step == one partition (the paper's CUDA block)."""
+    x = x_ref[0]                              # (V, R)  — the explicit cache
+    vals = vals_ref[0]                        # (V, W)
+    cols = cols_ref[0]                        # (V, W) uint16/int32 local
+    v, w = vals.shape
+    r = x.shape[1]
+    acc = jnp.zeros((v, r), dtype=jnp.float32)
+    for k0 in range(0, w, w_chunk):           # static unroll over W chunks
+        k1 = min(k0 + w_chunk, w)
+        c = cols[:, k0:k1].astype(jnp.int32)  # widen in-register
+        g = jnp.take(x, c, axis=0)            # (V, Wc, R) gather from VMEM
+        acc = acc + jnp.sum(vals[:, k0:k1, None].astype(jnp.float32)
+                            * g.astype(jnp.float32), axis=1)
+    y_ref[0] = acc.astype(y_ref.dtype)
+
+
+def ehyb_ell_pallas(x_parts: jnp.ndarray, ell_vals: jnp.ndarray,
+                    ell_cols: jnp.ndarray, *, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """Cached (sliced-ELL) part: y_parts (P, V, R) = EHYB_ELL(x_parts).
+
+    x_parts:  (P, V, R) reordered input, partition-major
+    ell_vals: (P, V, W)
+    ell_cols: (P, V, W) uint16 (paper §3.4) or int32 local indices
+    """
+    p, v, r = x_parts.shape
+    _, _, w = ell_vals.shape
+    w_chunk = _w_chunk(v, w, r, x_parts.dtype.itemsize)
+    kernel = functools.partial(_ehyb_ell_kernel, w_chunk=w_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, v, r), lambda i: (i, 0, 0)),   # x-slice → VMEM
+            pl.BlockSpec((1, v, w), lambda i: (i, 0, 0)),   # values
+            pl.BlockSpec((1, v, w), lambda i: (i, 0, 0)),   # local cols
+        ],
+        out_specs=pl.BlockSpec((1, v, r), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, v, r), x_parts.dtype),
+        interpret=interpret,
+    )(x_parts, ell_vals, ell_cols)
+
+
+def _ehyb_packed_kernel(x_ref, vals_ref, cols_ref, starts_ref, rows_ref,
+                        y_ref, *, w: int, v: int):
+    """Kernel v2: column-major staircase packing (paper's sliced-ELL bytes).
+
+    Per grid step (= partition, as in v1): the packed value/col streams carry
+    no inter-slice padding; column k is a contiguous segment of R_k entries
+    covering rows [0, R_k).  Loads are static-length (V) at dynamic offsets
+    (over-read into the +V guard region, masked by R_k), so Mosaic sees
+    fixed-shape vector ops."""
+    x = x_ref[0]                                   # (V, R) cached slice
+    r = x.shape[1]
+    acc = jnp.zeros((v, r), dtype=jnp.float32)
+    row_iota = jax.lax.iota(jnp.int32, v)
+    for k in range(w):                             # static unroll over columns
+        off = starts_ref[0, k]
+        rk = rows_ref[0, k]
+        vals = pl.load(vals_ref, (0, pl.dslice(off, v)))       # (V,)
+        cols = pl.load(cols_ref, (0, pl.dslice(off, v)))
+        mask = row_iota < rk
+        g = jnp.take(x, cols.astype(jnp.int32), axis=0)        # (V, R)
+        contrib = jnp.where(mask, vals.astype(jnp.float32),
+                            0.0)[:, None] * g.astype(jnp.float32)
+        # column k's segment covers rows [0, R_k) in row order
+        acc = acc + contrib
+    y_ref[0] = acc.astype(y_ref.dtype)
+
+
+def ehyb_ell_packed_pallas(x_parts: jnp.ndarray, packed_vals: jnp.ndarray,
+                           packed_cols: jnp.ndarray, col_starts: jnp.ndarray,
+                           col_rows: jnp.ndarray, *, interpret: bool = True
+                           ) -> jnp.ndarray:
+    """Cached part, packed layout: y_parts (P, V, R).
+
+    packed_vals/cols: (P, L); col_starts: (P, W+1); col_rows: (P, W)."""
+    p, v, r = x_parts.shape
+    l = packed_vals.shape[1]
+    w = col_rows.shape[1]
+    kernel = functools.partial(_ehyb_packed_kernel, w=w, v=v)
+    return pl.pallas_call(
+        kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, v, r), lambda i: (i, 0, 0)),    # x-slice cache
+            pl.BlockSpec((1, l), lambda i: (i, 0)),          # packed values
+            pl.BlockSpec((1, l), lambda i: (i, 0)),          # packed cols
+            pl.BlockSpec((1, w + 1), lambda i: (i, 0)),      # col offsets
+            pl.BlockSpec((1, w), lambda i: (i, 0)),          # col row counts
+        ],
+        out_specs=pl.BlockSpec((1, v, r), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, v, r), x_parts.dtype),
+        interpret=interpret,
+    )(x_parts, packed_vals, packed_cols, col_starts, col_rows)
+
+
+def _er_kernel(x_ref, vals_ref, cols_ref, y_ref, *, w_chunk: int):
+    """ER part: same dot-row structure but the gather hits the FULL x block
+    (uncached in the paper's sense — on TPU, a VMEM-resident copy of x that is
+    streamed once for all ER tiles rather than per-partition)."""
+    x = x_ref[...]                            # (n_pad, R)
+    vals = vals_ref[0]                        # (T, W)
+    cols = cols_ref[0]                        # (T, W) int32 global
+    t, w = vals.shape
+    r = x.shape[1]
+    acc = jnp.zeros((t, r), dtype=jnp.float32)
+    for k0 in range(0, w, w_chunk):
+        k1 = min(k0 + w_chunk, w)
+        g = jnp.take(x, cols[:, k0:k1], axis=0)
+        acc = acc + jnp.sum(vals[:, k0:k1, None].astype(jnp.float32)
+                            * g.astype(jnp.float32), axis=1)
+    y_ref[0] = acc.astype(y_ref.dtype)
+
+
+def er_pallas(x_new: jnp.ndarray, er_vals: jnp.ndarray, er_cols: jnp.ndarray,
+              *, row_tile: int = 256, interpret: bool = True) -> jnp.ndarray:
+    """ER rows → per-slot partial sums (Rr, R); caller scatter-adds."""
+    n_pad, r = x_new.shape
+    rr, w = er_vals.shape
+    row_tile = min(row_tile, rr)
+    while rr % row_tile:
+        row_tile //= 2
+    row_tile = max(row_tile, 1)
+    grid = (rr // row_tile,)
+    w_chunk = _w_chunk(row_tile, w, r, x_new.dtype.itemsize)
+    kernel = functools.partial(_er_kernel, w_chunk=w_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_pad, r), lambda i: (0, 0)),      # full x (stays)
+            pl.BlockSpec((1, row_tile, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, row_tile, w), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, row_tile, r), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], row_tile, r), x_new.dtype),
+        interpret=interpret,
+    )(x_new, er_vals.reshape(grid[0], row_tile, w),
+      er_cols.reshape(grid[0], row_tile, w)).reshape(rr, r)

@@ -1,0 +1,73 @@
+"""Jit'd public wrappers around the Pallas EHYB kernels.
+
+``interpret=True`` (default on this CPU container) runs the kernel body in
+Python via the Pallas interpreter for correctness validation; on a real TPU
+pass ``interpret=False`` to compile through Mosaic.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.spmv import EHYBDevice
+from . import ehyb_spmv as _k
+
+
+def _prep_x(m: EHYBDevice, x: jnp.ndarray):
+    x2 = x[:, None] if x.ndim == 1 else x
+    r = x2.shape[1]
+    xpad = jnp.concatenate(
+        [x2, jnp.zeros((m.n_pad - m.n, r), dtype=x2.dtype)], axis=0)
+    x_new = xpad[m.perm]
+    return x_new, x_new.reshape(m.n_parts, m.vec_size, r), x.ndim == 1
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_er_kernel"))
+def ehyb_spmv_pallas(m: EHYBDevice, x: jnp.ndarray, *,
+                     interpret: bool = True,
+                     use_er_kernel: bool = True) -> jnp.ndarray:
+    """Full EHYB SpMV/SpMM: Pallas cached-ELL part + ER part + un-permute.
+
+    x: (n,) or (n, R). Returns matching rank.
+    """
+    x_new, x_parts, squeeze = _prep_x(m, x)
+    y_parts = _k.ehyb_ell_pallas(x_parts, m.ell_vals, m.ell_cols,
+                                 interpret=interpret)
+    y_new = y_parts.reshape(m.n_pad, x_new.shape[1])
+    if use_er_kernel:
+        y_er = _k.er_pallas(x_new, m.er_vals, m.er_cols, interpret=interpret)
+    else:
+        g = x_new[m.er_cols]
+        y_er = jnp.einsum("ew,ewr->er", m.er_vals, g)
+    y_new = y_new.at[m.er_row_idx].add(y_er.astype(y_new.dtype))
+    y = y_new[m.inv_perm[: m.n]]
+    return y[:, 0] if squeeze else y
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ehyb_ell_only_pallas(m: EHYBDevice, x: jnp.ndarray, *,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Cached part only (for kernel-level benchmarking/validation)."""
+    _, x_parts, _ = _prep_x(m, x)
+    return _k.ehyb_ell_pallas(x_parts, m.ell_vals, m.ell_cols,
+                              interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ehyb_spmv_packed_pallas(m, x: jnp.ndarray, *,
+                            interpret: bool = True) -> jnp.ndarray:
+    """Kernel v2 (packed staircase): full EHYB SpMV/SpMM.
+
+    m: core.spmv.EHYBPackedDevice. x: (n,) or (n, R)."""
+    x_new, x_parts, squeeze = _prep_x(m, x)
+    y_parts = _k.ehyb_ell_packed_pallas(
+        x_parts, m.packed_vals, m.packed_cols, m.col_starts, m.col_rows,
+        interpret=interpret)
+    y_new = y_parts.reshape(m.n_pad, x_new.shape[1])
+    y_er = _k.er_pallas(x_new, m.er_vals, m.er_cols, interpret=interpret)
+    y_new = y_new.at[m.er_row_idx].add(y_er.astype(y_new.dtype))
+    y = y_new[m.inv_perm[: m.n]]
+    return y[:, 0] if squeeze else y

@@ -1,0 +1,12 @@
+"""Launch layer: production mesh, sharding rules, dry-run / train / serve
+drivers.  NOTE: ``dryrun`` must be executed as a script/module entry point
+(it sets XLA_FLAGS before importing jax) — do not import it from library
+code."""
+
+from .mesh import axis_size, batch_axes, make_host_mesh, make_production_mesh
+from .sharding import (batch_shardings, make_shard_act, param_shardings,
+                       state_shardings, train_state_shardings)
+
+__all__ = ["axis_size", "batch_axes", "make_host_mesh",
+           "make_production_mesh", "batch_shardings", "make_shard_act",
+           "param_shardings", "state_shardings", "train_state_shardings"]

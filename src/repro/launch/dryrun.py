@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# (the two lines above MUST precede every other import: jax locks the device
+# count at first initialization)
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config          # noqa: E402
+from repro.data.pipeline import make_batch_specs                # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.launch.sharding import (batch_shardings, make_shard_act,  # noqa: E402
+                                   param_shardings, state_shardings,
+                                   train_state_shardings)
+from repro.models import decode_step, init_decode_state, init_model, prefill  # noqa: E402
+from repro.models.layers import logits_fn                       # noqa: E402
+from repro.roofline import model_flops_for, roofline            # noqa: E402
+from repro.roofline.analysis import count_params                # noqa: E402
+from repro.roofline.hlo_cost import analyze_hlo                 # noqa: E402
+from repro.train import OptimizerConfig, init_train_state, make_train_step  # noqa: E402
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  1. build abstract parameters/state with ``jax.eval_shape`` (no allocation),
+  2. ``jax.jit(step, in_shardings=…, out_shardings=…).lower(**specs)``,
+  3. ``.compile()`` — proving the sharded program partitions, schedules its
+     collectives and fits (memory_analysis),
+  4. record cost_analysis / memory_analysis / parsed collective bytes to
+     ``experiments/dryrun/<mesh>/<arch>__<shape>.json`` for §Roofline.
+
+Results are cached per cell; re-runs skip completed cells unless --force.
+"""
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, dtype), tree)
+
+
+def _metric_shardings(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def build_cell(cfg, shape, mesh, *, skip_causal=None, microbatches=None,
+               serve_dtype=jnp.bfloat16, remat_override=None):
+    """Returns (jitted, arg_specs: tuple) ready for .lower(*arg_specs).
+
+    skip_causal=None → auto: triangular block enumeration for prefill
+    (no-grad; §Perf addendum 2), masked-full for train (bwd-memory-optimal).
+    """
+    if skip_causal is None:
+        skip_causal = shape.kind == "prefill"
+    import dataclasses as dc
+    if remat_override is not None:
+        cfg = dc.replace(cfg, remat=remat_override)
+    from repro.launch.sharding import dp_axes as _dpa
+    from repro.models.shard_ctx import set_sharding_context
+    set_sharding_context(mesh, _dpa(mesh, cfg))
+    shard_act = make_shard_act(mesh, cfg)
+    params_abs = _abstract(lambda: init_model(jax.random.PRNGKey(0), cfg))
+
+    if shape.kind == "train":
+        ts_abs = _abstract(lambda: init_train_state(params_abs, cfg))
+        ts_sh = train_state_shardings(ts_abs, mesh, cfg)
+        batch_abs = make_batch_specs(cfg, shape)
+        b_sh = batch_shardings(batch_abs, mesh,
+                               global_batch=shape.global_batch, cfg=cfg)
+        step = make_train_step(cfg, OptimizerConfig(),
+                               microbatches=microbatches or cfg.microbatches,
+                               skip_causal=skip_causal, shard_act=shard_act)
+        metrics_abs = _abstract(step, ts_abs, batch_abs)[1]
+        jitted = jax.jit(step, in_shardings=(ts_sh, b_sh),
+                         out_shardings=(ts_sh,
+                                        _metric_shardings(metrics_abs, mesh)),
+                         donate_argnums=(0,))
+        return jitted, (ts_abs, batch_abs)
+
+    # serving cells use bf16 weights (standard deployment)
+    params_abs = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            l.shape, serve_dtype if l.dtype == jnp.float32 and l.ndim >= 2
+            else l.dtype), params_abs)
+    p_sh = param_shardings(params_abs, mesh, cfg)
+    ctx_par = shape.name == "long_500k"
+    enc_len = shape.seq_len if cfg.family == "encdec" else 0
+
+    if shape.kind == "prefill":
+        state_abs = _abstract(lambda: init_decode_state(
+            cfg, shape.global_batch, shape.seq_len, serve_dtype,
+            enc_len=enc_len))
+        st_sh = state_shardings(state_abs, mesh, cfg,
+                                global_batch=shape.global_batch,
+                                context_parallel=ctx_par)
+        batch_abs = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)}
+        if cfg.family == "encdec":
+            batch_abs["enc_frames"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len, cfg.d_model), serve_dtype)
+        b_sh = batch_shardings(batch_abs, mesh,
+                               global_batch=shape.global_batch, cfg=cfg)
+
+        def prefill_step(params, batch, state):
+            h_last, new_state = prefill(params, batch, cfg, state,
+                                        shard_act=shard_act,
+                                        skip_causal=skip_causal)
+            logits = logits_fn(params["head"], params["embed"], h_last, cfg)
+            return logits, new_state
+
+        logits_sh = NamedSharding(mesh, P(None, None, "model"))
+        jitted = jax.jit(prefill_step, in_shardings=(p_sh, b_sh, st_sh),
+                         out_shardings=(logits_sh, st_sh),
+                         donate_argnums=(2,))
+        return jitted, (params_abs, batch_abs, state_abs)
+
+    # decode: one new token against a seq_len-deep cache
+    state_abs = _abstract(lambda: init_decode_state(
+        cfg, shape.global_batch, shape.seq_len, serve_dtype,
+        enc_len=enc_len))
+    st_sh = state_shardings(state_abs, mesh, cfg,
+                            global_batch=shape.global_batch,
+                            context_parallel=ctx_par)
+    tokens_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_sh = batch_shardings(tokens_abs, mesh,
+                             global_batch=shape.global_batch, cfg=cfg)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_fn(params, state, tokens, pos):
+        h, new_state = decode_step(params, tokens, cfg, state, pos,
+                                   shard_act=shard_act)
+        logits = logits_fn(params["head"], params["embed"], h, cfg)
+        return logits, new_state
+
+    logits_sh = NamedSharding(mesh, P(None, None, "model"))
+    jitted = jax.jit(decode_fn, in_shardings=(p_sh, st_sh, tok_sh,
+                                              NamedSharding(mesh, P())),
+                     out_shardings=(logits_sh, st_sh), donate_argnums=(1,))
+    return jitted, (params_abs, state_abs, tokens_abs, pos_abs)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             force=False, verbose=True, **build_kw) -> dict:
+    mesh_name = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+    out_dir = os.path.join(OUT_DIR, mesh_name)
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}.json")
+    if os.path.exists(out_path) and not force and not build_kw:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind}
+    if shape_name not in cfg.shapes:
+        rec["status"] = "SKIP"
+        rec["reason"] = ("full-attention arch: long_500k requires "
+                         "sub-quadratic mixer (DESIGN.md §4)")
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    try:
+        t0 = time.perf_counter()
+        jitted, specs = build_cell(cfg, shape, mesh, **build_kw)
+        lowered = jitted.lower(*specs)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        # while-loop-aware cost model (scan bodies × trip counts); raw
+        # cost_analysis() counts loop bodies once — kept for reference only
+        hc = analyze_hlo(hlo)
+        params_abs = jax.eval_shape(
+            lambda: init_model(jax.random.PRNGKey(0), cfg))
+        n_params = count_params(params_abs)
+        n_active = count_params(params_abs, active_only=True, cfg=cfg)
+        mf = model_flops_for(cfg, shape, params_abs)
+        # memory term uses dot-boundary bytes (weights + activations at
+        # matmul boundaries ≈ what a fusing TPU backend streams from HBM);
+        # the all-ops byte count from the CPU-fusion-shaped HLO is recorded
+        # as an upper bound.
+        terms = roofline(float(hc["flops"]), float(hc["dot_bytes"]),
+                         float(hc["coll_bytes"]), chips=chips,
+                         model_flops=mf)
+        rec.update({
+            "status": "OK",
+            "chips": chips,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "flops_per_device": float(hc["flops"]),
+            "bytes_per_device": float(hc["dot_bytes"]),
+            "bytes_per_device_upper": float(hc["bytes"]),
+            "collectives": hc["coll_by_op"],
+            "collectives_top": hc["coll_top"],
+            "xla_cost_analysis_raw": {
+                "flops_body_once": float(ca.get("flops", 0.0)),
+                "bytes_body_once": float(ca.get("bytes accessed", 0.0))},
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_estimate_bytes": (ma.argument_size_in_bytes
+                                        + ma.output_size_in_bytes
+                                        + ma.temp_size_in_bytes
+                                        - ma.alias_size_in_bytes),
+            },
+            "n_params": n_params,
+            "n_params_active": n_active,
+            "roofline": terms.as_dict(),
+            "hlo_bytes": len(hlo),
+        })
+        if verbose:
+            mem_gb = rec["memory"]["peak_estimate_bytes"] / 2**30
+            print(f"[{mesh_name}] {arch} × {shape_name}: OK "
+                  f"compile={t_compile:.1f}s mem/dev={mem_gb:.2f}GiB "
+                  f"dominant={terms.dominant} "
+                  f"(c={terms.compute_s*1e3:.2f}ms m={terms.memory_s*1e3:.2f}ms "
+                  f"coll={terms.collective_s*1e3:.2f}ms)", flush=True)
+        # also print the two required artifacts verbatim
+        if verbose:
+            print("  memory_analysis:", ma, flush=True)
+            print("  cost_analysis: flops=%.3e bytes=%.3e" %
+                  (terms.flops, terms.hbm_bytes), flush=True)
+    except Exception as exc:  # noqa: BLE001 — record the failure, keep going
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(exc).__name__}: {exc}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[{mesh_name}] {arch} × {shape_name}: FAIL {rec['error']}",
+                  flush=True)
+    if not build_kw:   # only cache unmodified baseline cells
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_fail = n_skip = 0
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, multi, force=args.force)
+                st = rec["status"]
+                n_ok += st == "OK"
+                n_fail += st == "FAIL"
+                n_skip += st == "SKIP"
+    print(f"dry-run complete: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL",
+          flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

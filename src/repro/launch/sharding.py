@@ -1,0 +1,237 @@
+"""Sharding rules: logical-axis specs per parameter/state leaf → NamedSharding.
+
+Strategy (DESIGN.md §5):
+* TP (`model` axis): attention fused-head dims, d_ff, experts (EP), vocab.
+* FSDP (`data` [+ `pod`] axes): the other large dim of every matrix when
+  ``cfg.fsdp`` — parameters *and* Adam moments shard identically (ZeRO).
+* DP: batch over (`pod`, `data`).
+* SP: optional sequence-sharded activations between blocks
+  (``cfg.act_sharding == "sp"``).
+* Context parallel: long-context decode shards the KV-cache sequence dim
+  over `data` when the batch is too small to.
+
+Every rule passes through a divisibility check — a dim that doesn't divide
+the axis product falls back (KV-heads → head_dim → replicate), so one rule
+table covers all 10 architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import axis_size, batch_axes
+
+# logical axes:  "tp" → model;  "fsdp" → (pod,)data;  "ep" → model (expert)
+# Rules keyed by parameter leaf name; value = logical axis per dim of the
+# UNSTACKED parameter (a leading scan/stack dim is auto-prepended None).
+PARAM_RULES = {
+    # embeddings / head
+    "embedding": ("tp", "fsdp"),
+    "pos_embedding": (None, None),
+    "w_head": ("fsdp", "tp"),
+    # norms
+    "scale": (None,), "bias": (None,),
+    "q_norm": (None,), "k_norm": (None,),
+    # attention
+    "w_q": ("fsdp", "tp"), "w_k": ("fsdp", "tp"), "w_v": ("fsdp", "tp"),
+    "w_o": ("tp", "fsdp"),
+    # dense mlp
+    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"), "w_down": ("tp", "fsdp"),
+    # moe (expert sharding variant; "ffn" variant handled in code)
+    "router": ("fsdp", None),
+    "we_gate": ("ep", "fsdp", None), "we_up": ("ep", "fsdp", None),
+    "we_down": ("ep", None, "fsdp"),
+    # mamba
+    "in_proj": ("fsdp", "tp"), "conv_w": (None, "tp"), "conv_b": ("tp",),
+    "x_proj": ("tp", None), "dt_proj": (None, "tp"), "dt_bias": ("tp",),
+    "A_log": ("tp", None), "D": ("tp",), "out_proj": ("tp", "fsdp"),
+    # rwkv time mix
+    "mu_x": (None,), "mu_rwkvg": (None, None),
+    "lora_a": ("fsdp", None), "lora_b": (None, None, None),
+    "w_r": ("fsdp", "tp"), "w_g": ("fsdp", "tp"),
+    "decay_base": (None,), "decay_a": ("fsdp", None), "decay_b": (None, None),
+    "bonus_u": ("tp", None), "ln_x": (None,),
+    # rwkv channel mix
+    "mu_k": (None,), "mu_r": (None,),
+}
+
+# FFN-sharded MoE (grok: E=8 < |model|): replicate experts, TP inside expert.
+PARAM_RULES_MOE_FFN = {
+    "we_gate": (None, "fsdp", "tp"), "we_up": (None, "fsdp", "tp"),
+    "we_down": (None, "tp", "fsdp"),
+}
+
+STATE_RULES = {
+    # KV caches (B, S, Hkv, dh): batch → data; heads → model (fallback dh)
+    "k": ("batch", "ctx", "tp_heads", "tp_dh"),
+    "v": ("batch", "ctx", "tp_heads", "tp_dh"),
+    "ck": ("batch", "ctx", "tp_heads", "tp_dh"),
+    "cv": ("batch", "ctx", "tp_heads", "tp_dh"),
+    # mamba (B, dc-1, di) / (B, di, N)
+    "conv": ("batch", None, "tp"),
+    "ssm": ("batch", "tp", None),
+    # rwkv (B,H,hs,hs) / (B,1,d)
+    "wkv": ("batch", "tp", None, None),
+    "x_prev_tm": ("batch", None, None),
+    "x_prev_cm": ("batch", None, None),
+}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        k = getattr(p, "key", None)
+        if isinstance(k, str):
+            return k
+    return ""
+
+
+def dp_axes(mesh, cfg) -> tuple:
+    """Axes that shard batch-like dims: (pod,)data, plus model when the
+    config opts into pure-DP (dp_over_model)."""
+    axes = batch_axes(mesh)
+    if getattr(cfg, "dp_over_model", False):
+        axes = axes + ("model",)
+    return axes
+
+
+def _resolve(logical: Optional[str], mesh, cfg):
+    if logical is None:
+        return None
+    if logical in ("tp", "ep"):
+        return None if getattr(cfg, "dp_over_model", False) else "model"
+    if logical == "fsdp":
+        return dp_axes(mesh, cfg) if cfg.fsdp else None
+    raise ValueError(logical)
+
+
+def _spec_for(shape, dims_logical, mesh, cfg):
+    """Build a PartitionSpec with divisibility fallbacks."""
+    ndim = len(shape)
+    rule = list(dims_logical)
+    # auto-prepend Nones for stacked leading dims (scan over units, rwkv 5-dim
+    # packs, etc.)
+    while len(rule) < ndim:
+        rule.insert(0, None)
+    rule = rule[-ndim:] if len(rule) > ndim else rule
+    spec = []
+    for size, logical in zip(shape, rule):
+        axes = _resolve(logical, mesh, cfg)
+        if axes is None:
+            spec.append(None)
+            continue
+        if size % axis_size(mesh, axes) == 0:
+            spec.append(axes)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def param_shardings(params_tree, mesh, cfg):
+    """NamedSharding pytree matching ``params_tree`` (arrays or
+    ShapeDtypeStructs)."""
+    rules = dict(PARAM_RULES)
+    if cfg.n_experts and cfg.moe_sharding == "ffn":
+        rules.update(PARAM_RULES_MOE_FFN)
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        # rwkv shares names with attention (w_r/w_k/w_v used in both tables —
+        # same rule), unknown names replicate.
+        rule = rules.get(name, tuple(None for _ in leaf.shape))
+        return NamedSharding(mesh, _spec_for(leaf.shape, rule, mesh, cfg))
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def state_shardings(state_tree, mesh, cfg, *, global_batch: int,
+                    context_parallel: bool = False):
+    """Decode-state shardings. ``context_parallel`` shards the cache sequence
+    dim over `data` (long_500k, batch=1)."""
+    b_axes = dp_axes(mesh, cfg)
+    b_ok = global_batch % axis_size(mesh, b_axes) == 0
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        rule = STATE_RULES.get(name)
+        if rule is None:
+            return NamedSharding(mesh, P())
+        shape = leaf.shape                       # (n_units, B, ...)
+        spec = [None]                            # stacked units dim
+        body = shape[1:]
+        used_tp = False
+        for i, (size, logical) in enumerate(zip(body, rule)):
+            if logical == "batch":
+                spec.append(b_axes if b_ok and size % axis_size(
+                    mesh, b_axes) == 0 else None)
+            elif logical == "ctx":
+                if context_parallel and size % mesh.shape["data"] == 0:
+                    spec.append("data")
+                else:
+                    spec.append(None)
+            elif logical == "tp_heads":
+                if size % mesh.shape["model"] == 0:
+                    spec.append("model")
+                    used_tp = True
+                else:
+                    spec.append(None)
+            elif logical == "tp_dh":
+                if not used_tp and size % mesh.shape["model"] == 0:
+                    spec.append("model")
+                else:
+                    spec.append(None)
+            elif logical == "tp":
+                spec.append("model" if size % mesh.shape["model"] == 0
+                            else None)
+            else:
+                spec.append(None)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, state_tree)
+
+
+def batch_shardings(batch_tree, mesh, *, global_batch: int, cfg=None):
+    b_axes = dp_axes(mesh, cfg) if cfg is not None else batch_axes(mesh)
+    ok = global_batch % axis_size(mesh, b_axes) == 0
+
+    def one(leaf):
+        spec = [b_axes if ok else None] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def train_state_shardings(train_state_tree, mesh, cfg):
+    """TrainState(params, OptState(m, v, step), step): moments shard like
+    params (ZeRO)."""
+    from ..train.train_step import TrainState
+    from ..train.optimizer import OptState
+
+    p_sh = param_shardings(train_state_tree.params, mesh, cfg)
+    return TrainState(
+        params=p_sh,
+        opt=OptState(m=param_shardings(train_state_tree.opt.m, mesh, cfg),
+                     v=param_shardings(train_state_tree.opt.v, mesh, cfg),
+                     step=NamedSharding(mesh, P())),
+        step=NamedSharding(mesh, P()))
+
+
+def make_shard_act(mesh, cfg):
+    """Activation constraint applied between blocks: batch over DP axes and,
+    with ``act_sharding='sp'``, sequence over `model` (Megatron SP)."""
+    b_axes = dp_axes(mesh, cfg)
+    seq_axis = ("model" if cfg.act_sharding == "sp"
+                and not getattr(cfg, "dp_over_model", False) else None)
+
+    def shard(x):
+        if x.ndim != 3:
+            return x
+        spec = P(b_axes if x.shape[0] % axis_size(mesh, b_axes) == 0 else None,
+                 seq_axis if seq_axis and x.shape[1] % mesh.shape["model"] == 0
+                 else None,
+                 None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard

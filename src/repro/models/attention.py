@@ -1,0 +1,349 @@
+"""GQA attention: chunked (FLOPs/memory-bounded) softmax attention with
+causal/bidirectional/sliding-window masks, logit softcap (Gemma-2), QK-norm
+(Chameleon), RoPE, cross-attention (Whisper), and a KV-cache decode path.
+
+The train/prefill core is a doubly-chunked online-softmax ("flash-style")
+attention: an outer scan over query chunks and an inner scan over KV chunks
+keep the live score block at (B, Hkv, G, Cq, Ck) regardless of sequence
+length, so prefill_32k / train_4k never materialize S×S.
+
+Baseline computes every (q-chunk, kv-chunk) block and masks (paper-faithful
+simplicity); ``block_skip_causal=True`` switches to the triangular block
+enumeration that skips fully-masked blocks — a §Perf hillclimb lever that
+halves causal-attention FLOPs (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _dense_init, apply_rope, cdtype, pdtype
+from .shard_ctx import constrain
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, cross: bool = False):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    dt = pdtype(cfg)
+    p = {
+        "w_q": _dense_init(ks[0], (d, hq * dh), dt),
+        "w_k": _dense_init(ks[1], (d, hkv * dh), dt),
+        "w_v": _dense_init(ks[2], (d, hkv * dh), dt),
+        "w_o": _dense_init(ks[3], (hq * dh, d), dt, scale=1.0 / np.sqrt(hq * dh)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+    return p
+
+
+def _qk_normalize(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = (xf ** 2).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _choose_chunk(s: int, target: int) -> int:
+    c = min(target, s)
+    while s % c:
+        c //= 2
+    return max(c, 1)
+
+
+def _block_attn(q, k, v, mask, softcap):
+    """One score block. q:(B,Cq,H,D); k,v:(B,Ck,H,D) (KV pre-repeated to full
+    heads). mask:(B,1,Cq,Ck) bool. Returns (scores_max, exp_sums, weighted_v)."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=-1)                                   # (B,H,Cq)
+    e = jnp.exp(s - m[..., None])
+    e = jnp.where(mask, e, 0.0)
+    l = e.sum(axis=-1)
+    wv = jnp.einsum("bhqk,bkhd->bqhd", e.astype(v.dtype), v)
+    return m, l, wv.astype(jnp.float32)
+
+
+def flash_attention(q, k, v, *, q_pos, kv_pos, causal=True, window=0,
+                    softcap=0.0, chunk_q=512, chunk_kv=1024,
+                    block_skip_causal=False, gqa_repeat=True):
+    """Doubly-chunked online-softmax attention.
+
+    q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D); q_pos: (B,Sq); kv_pos: (B,Sk).
+    GQA is realized by repeating KV to the full Hq before chunking: the
+    uniform MHA einsum then shards on the single head dim for every arch
+    (a (Hkv, G) factorization blocks TP when neither factor divides the axis
+    — e.g. grok's 8×6 on a 16-way axis; §Perf iteration 3).
+    ``gqa_repeat=False`` (decode path, Sq=1) keeps the grouped einsum —
+    repeating the full KV cache would multiply cache reads by G for one
+    query row.
+    Returns (B,Sq,Hq,D) in q.dtype.
+    """
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    if g > 1 and gqa_repeat:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    elif g > 1:
+        return _grouped_decode_attention(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+            window=window, softcap=softcap, chunk_kv=chunk_kv)
+    cq = _choose_chunk(sq, chunk_q)
+    ck = _choose_chunk(sk, chunk_kv)
+    nq, nk = sq // cq, sk // ck
+    qc = q.reshape(b, nq, cq, hq, dh).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(b, nq, cq).transpose(1, 0, 2)
+    kc = k.reshape(b, nk, ck, hq, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, ck, hq, dh).transpose(1, 0, 2, 3, 4)
+    kp = kv_pos.reshape(b, nk, ck).transpose(1, 0, 2)
+    # pin the chunk stacks: batch over DP, heads over TP (replicated when
+    # indivisible).  Without this XLA re-shards the stacks on head_dim and
+    # every scan iteration's dynamic-slice becomes an all-gather
+    # (nq·nk·layers gathers ≈ 1.1 TB/step on grok prefill; §Perf iter. 3).
+    qc = constrain(qc, None, "batch", None, "model", None)
+    kc = constrain(kc, None, "batch", None, "model", None)
+    vc = constrain(vc, None, "batch", None, "model", None)
+
+    def mask_for(qpi, kpj):
+        m = jnp.ones((b, 1, qpi.shape[-1], kpj.shape[-1]), bool)
+        diff = qpi[:, None, :, None] - kpj[:, None, None, :]
+        if causal:
+            m &= diff >= 0
+        if window:
+            m &= diff < window
+        return m
+
+    # remat the per-block body: the (B,H,Cq,Ck) score/exp tensors are
+    # recomputed in the backward pass instead of being saved per scan step —
+    # without this, scan residuals are O(S²/chunk) and the train cells OOM.
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def kv_step(carry, inp):
+        mx, l, acc, qi, qpi = carry
+        kj, vj, kpj = inp
+        mb, lb, wv = _block_attn(qi, kj, vj, mask_for(qpi, kpj), softcap)
+        mx_new = jnp.maximum(mx, mb)
+        c_old = jnp.exp(mx - mx_new)
+        c_new = jnp.exp(mb - mx_new)
+        l = l * c_old + lb * c_new
+        acc = (acc * c_old.transpose(0, 2, 1)[..., None]
+               + wv * c_new.transpose(0, 2, 1)[..., None])
+        return (mx_new, l, acc, qi, qpi), None
+
+    # triangular block enumeration (prefill/scoring perf variant): only the
+    # ~half of (q-chunk, kv-chunk) pairs with any unmasked position are
+    # visited, via a STATIC pair list (one scan, known trip count — both
+    # bwd-memory analysis and the roofline trip-count parser see it).  The
+    # carry holds the full (m, l, acc) state per q chunk, so this variant is
+    # for no-grad paths (prefill); train keeps the masked-full form whose
+    # rematerialized kv-scan is bwd-memory-optimal.
+    skip = block_skip_causal and causal and sq == sk
+
+    if skip:
+        pairs = [(i, j) for i in range(nq)
+                 for j in range(min(nk, ((i + 1) * cq + ck - 1) // ck))]
+        pi = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        pj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+        mx0 = jnp.full((nq, b, hq, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((nq, b, hq, cq), jnp.float32)
+        acc0 = jnp.zeros((nq, b, cq, hq, dh), jnp.float32)
+
+        def pair_step(carry, idx):
+            mx_a, l_a, acc_a = carry
+            i, j = idx
+            qi = jax.lax.dynamic_index_in_dim(qc, i, 0, keepdims=False)
+            qpi = jax.lax.dynamic_index_in_dim(qp, i, 0, keepdims=False)
+            kj = jax.lax.dynamic_index_in_dim(kc, j, 0, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vc, j, 0, keepdims=False)
+            kpj = jax.lax.dynamic_index_in_dim(kp, j, 0, keepdims=False)
+            st = (jax.lax.dynamic_index_in_dim(mx_a, i, 0, keepdims=False),
+                  jax.lax.dynamic_index_in_dim(l_a, i, 0, keepdims=False),
+                  jax.lax.dynamic_index_in_dim(acc_a, i, 0, keepdims=False),
+                  qi, qpi)
+            (mx, l, acc, _, _), _ = kv_step(st, (kj, vj, kpj))
+            mx_a = jax.lax.dynamic_update_index_in_dim(mx_a, mx, i, 0)
+            l_a = jax.lax.dynamic_update_index_in_dim(l_a, l, i, 0)
+            acc_a = jax.lax.dynamic_update_index_in_dim(acc_a, acc, i, 0)
+            return (mx_a, l_a, acc_a), None
+
+        (mx_a, l_a, acc_a), _ = jax.lax.scan(pair_step, (mx0, l0, acc0),
+                                             (pi, pj))
+        lt = l_a.transpose(0, 1, 3, 2)[..., None]
+        outs = (acc_a / jnp.maximum(lt, 1e-30)).astype(q.dtype)
+        return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, dh)
+
+    def q_step(_, inp):
+        qi, qpi = inp
+        mx0 = jnp.full((b, hq, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, cq), jnp.float32)
+        acc0 = jnp.zeros((b, cq, hq, dh), jnp.float32)
+        (mx, l, acc, _, _), _ = jax.lax.scan(
+            kv_step, (mx0, l0, acc0, qi, qpi), (kc, vc, kp))
+        lt = l.transpose(0, 2, 1)[..., None]
+        out = acc / jnp.maximum(lt, 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qc, qp))
+    # outs: (nq, B, Cq, Hq, D)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, dh)
+
+
+def _grouped_decode_attention(q, k, v, *, q_pos, kv_pos, causal, window,
+                              softcap, chunk_kv):
+    """Decode-shape (small Sq) attention with grouped GQA einsum: the KV
+    cache is streamed once per kv-chunk without repetition."""
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    ck = _choose_chunk(sk, chunk_kv)
+    nk = sk // ck
+    qg = q.reshape(b, sq, hkv, g, dh)
+    kc = k.reshape(b, nk, ck, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, ck, hkv, dh).transpose(1, 0, 2, 3, 4)
+    kp = kv_pos.reshape(b, nk, ck).transpose(1, 0, 2)
+    scale = 1.0 / np.sqrt(dh)
+
+    def kv_step(carry, inp):
+        mx, l, acc = carry
+        kj, vj, kpj = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kj,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = jnp.ones((b, 1, 1, sq, ck), bool)
+        diff = q_pos[:, None, None, :, None] - kpj[:, None, None, None, :]
+        if causal:
+            mask &= diff >= 0
+        if window:
+            mask &= diff < window
+        s = jnp.where(mask, s, NEG_INF)
+        mb = s.max(axis=-1)
+        e = jnp.where(mask, jnp.exp(s - mb[..., None]), 0.0)
+        lb = e.sum(axis=-1)
+        wv = jnp.einsum("bhgqk,bkhd->bqhgd", e.astype(vj.dtype), vj)
+        mx_new = jnp.maximum(mx, mb)
+        c_old = jnp.exp(mx - mx_new)
+        c_new = jnp.exp(mb - mx_new)
+        l = l * c_old + lb * c_new
+        acc = (acc * c_old.transpose(0, 3, 1, 2)[..., None]
+               + wv.astype(jnp.float32)
+               * c_new.transpose(0, 3, 1, 2)[..., None])
+        return (mx_new, l, acc), None
+
+    mx0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, sq, hkv, g, dh), jnp.float32)
+    (mx, l, acc), _ = jax.lax.scan(kv_step, (mx0, l0, acc0), (kc, vc, kp))
+    out = acc / jnp.maximum(l.transpose(0, 3, 1, 2)[..., None], 1e-30)
+    return out.astype(q.dtype).reshape(b, sq, hq, dh)
+
+
+# ---------------------------------------------------------------------------
+# module-level apply (train/prefill) and decode
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, x, kv_x, cfg):
+    dt = cdtype(cfg)
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["w_q"].astype(dt)).reshape(b, s, hq, dh)
+    src = x if kv_x is None else kv_x
+    sk = src.shape[1]
+    k = (src @ p["w_k"].astype(dt)).reshape(b, sk, hkv, dh)
+    v = (src @ p["w_v"].astype(dt)).reshape(b, sk, hkv, dh)
+    # shard on the HEAD dim only (falls back to replicated when heads don't
+    # divide the TP axis).  Without this, XLA splits the fused (H·dh) axis
+    # through head_dim, turning every QK^T block into a partial-sum
+    # all-reduce inside the chunk scans (measured 26 TB/step on
+    # prefill_32k; EXPERIMENTS.md §Perf iteration 1).
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+    if cfg.qk_norm:
+        q = _qk_normalize(q, p["q_norm"])
+        k = _qk_normalize(k, p["k_norm"])
+    return q, k, v
+
+
+def apply_attention(p, x, cfg, *, kind: str = "attn", kv_x=None,
+                    pos_offset=0, block_skip_causal=False):
+    """Train/prefill path. kind: attn | attn_local | attn_bidir | attn_cross.
+    Returns (out, kv) — kv (k, v) is reused to seed a decode cache."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, kv_x if kind == "attn_cross" else None, cfg)
+    q_pos = jnp.broadcast_to(jnp.arange(s) + pos_offset, (b, s))
+    sk = k.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(sk) + (0 if kind == "attn_cross"
+                                                else pos_offset), (b, sk))
+    if cfg.pos_embedding == "rope" and kind != "attn_cross":
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+    causal = kind in ("attn", "attn_local")
+    window = cfg.window_size if kind == "attn_local" else 0
+    out = flash_attention(
+        q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal, window=window,
+        softcap=cfg.attn_softcap, block_skip_causal=block_skip_causal)
+    out = out.reshape(b, s, -1) @ p["w_o"].astype(cdtype(cfg))
+    return out, (k, v)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype):
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, max_len, hkv, dh), dtype),
+            "v": jnp.zeros((batch, max_len, hkv, dh), dtype)}
+
+
+def decode_attention(p, x, cache, pos, cfg, *, kind="attn", chunk_kv=2048):
+    """Single-token decode: x (B,1,d); cache {"k","v"} (B,Smax,Hkv,D); pos
+    scalar int32 (current length). Returns (out, new_cache)."""
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, x, None, cfg)
+    pos_b = jnp.broadcast_to(pos[None, None], (b, 1))
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, pos_b, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos_b, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                  k_new.astype(cache["k"].dtype),
+                                                  pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                  v_new.astype(cache["v"].dtype),
+                                                  pos, axis=1)
+    smax = k_cache.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(smax), (b, smax))
+    window = cfg.window_size if kind == "attn_local" else 0
+    out = flash_attention(
+        q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+        q_pos=pos_b, kv_pos=kv_pos, causal=True, window=window,
+        softcap=cfg.attn_softcap, chunk_q=1, chunk_kv=chunk_kv,
+        gqa_repeat=False)
+    out = out.reshape(b, 1, -1) @ p["w_o"].astype(cdtype(cfg))
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def decode_cross_attention(p, x, enc_kv, cfg):
+    """Decode-time cross-attention against a precomputed encoder KV."""
+    b = x.shape[0]
+    dt = cdtype(cfg)
+    dh, hq = cfg.head_dim, cfg.n_heads
+    q = (x @ p["w_q"].astype(dt)).reshape(b, 1, hq, dh)
+    if cfg.qk_norm:
+        q = _qk_normalize(q, p["q_norm"])
+    k, v = enc_kv
+    sk = k.shape[1]
+    pos = jnp.zeros((b, 1), jnp.int32)
+    kv_pos = jnp.broadcast_to(jnp.arange(sk), (b, sk))
+    out = flash_attention(q, k.astype(dt), v.astype(dt), q_pos=pos,
+                          kv_pos=kv_pos, causal=False,
+                          softcap=cfg.attn_softcap, chunk_q=1,
+                          gqa_repeat=False)
+    return out.reshape(b, 1, -1) @ p["w_o"].astype(dt)

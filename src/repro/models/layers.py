@@ -1,0 +1,209 @@
+"""Shared model layers: norms, embeddings, positional encodings, MLPs, loss.
+
+Conventions
+-----------
+* params are nested dicts of jnp arrays; every init function is pure in its
+  PRNG key so the whole model can be ``jax.eval_shape``-initialized for the
+  dry-run (no allocation).
+* compute dtype (`cfg.dtype`, bf16) is applied at use; params stay in
+  `cfg.param_dtype` (fp32 master copies — the optimizer sees these).
+* softmax/logsumexp/norm statistics are fp32 regardless of compute dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def pad_vocab(vocab: int, multiple: int = 2048) -> int:
+    """Pad vocabulary so the vocab-parallel dimension divides the mesh
+    (standard practice: Megatron pads to a multiple of TP×128)."""
+    return -(-vocab // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _grad_same_dtype(x):
+    """Identity whose cotangent is cast to the primal dtype.
+
+    Norm statistics are computed in fp32; without this boundary the fp32
+    cotangent of the norm input promotes the entire backward residual stream
+    (and its TP all-reduces) to fp32 — 2× the ICI bytes.  Casting gradients
+    to bf16 at layer boundaries is standard Megatron/MaxText practice."""
+    return x
+
+
+def _gsd_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)     # dtype token (residuals must be
+    # JAX types, so carry a zero-size array of the primal dtype)
+
+
+def _gsd_bwd(token, g):
+    return (g.astype(token.dtype),)
+
+
+_grad_same_dtype.defvjp(_gsd_fwd, _gsd_bwd)
+
+
+def init_norm(cfg, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), pdtype(cfg)),
+                "bias": jnp.zeros((d,), pdtype(cfg))}
+    return {"scale": jnp.ones((d,), pdtype(cfg))}
+
+
+def apply_norm(p, x, cfg, eps: float = 1e-6):
+    x = _grad_same_dtype(x)
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:            # rmsnorm
+        var = (xf ** 2).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings & positions
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg):
+    v = pad_vocab(cfg.vocab_size)
+    emb = jax.random.normal(key, (v, cfg.d_model), pdtype(cfg)) * 0.02
+    p = {"embedding": emb}
+    if cfg.pos_embedding == "learned":
+        p["pos_embedding"] = jnp.zeros((cfg.max_position, cfg.d_model),
+                                       pdtype(cfg))
+    return p
+
+
+def embed_tokens(p, tokens, cfg, pos_offset=0):
+    x = jnp.take(p["embedding"].astype(cdtype(cfg)), tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if cfg.pos_embedding == "learned":
+        s = tokens.shape[-1]
+        pos = jax.lax.dynamic_slice_in_dim(
+            p["pos_embedding"].astype(cdtype(cfg)), pos_offset, s, axis=0)
+        x = x + pos
+    return x
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta), jnp.float32)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense MLPs
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def init_mlp(key, cfg, d_model=None, d_ff=None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    if cfg.act in ("swiglu", "geglu"):
+        return {"w_gate": _dense_init(ks[0], (d, f), dt),
+                "w_up": _dense_init(ks[1], (d, f), dt),
+                "w_down": _dense_init(ks[2], (f, d), dt)}
+    return {"w_up": _dense_init(ks[1], (d, f), dt),
+            "w_down": _dense_init(ks[2], (f, d), dt)}
+
+
+def apply_mlp(p, x, cfg):
+    dt = cdtype(cfg)
+    if "w_gate" in p:
+        g = x @ p["w_gate"].astype(dt)
+        u = x @ p["w_up"].astype(dt)
+        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jax.nn.gelu(x @ p["w_up"].astype(dt))
+    return h @ p["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# output head / loss
+# ---------------------------------------------------------------------------
+
+def init_lm_head(key, cfg):
+    if cfg.tie_embeddings:
+        return {}
+    v = pad_vocab(cfg.vocab_size)
+    return {"w_head": _dense_init(key, (cfg.d_model, v), pdtype(cfg))}
+
+
+def logits_fn(head_p, emb_p, x, cfg):
+    dt = cdtype(cfg)
+    if cfg.tie_embeddings:
+        w = emb_p["embedding"].astype(dt).T
+    else:
+        w = head_p["w_head"].astype(dt)
+    logits = x @ w
+    if cfg.final_softcap:
+        c = cfg.final_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def chunked_xent(head_p, emb_p, x, labels, mask, cfg, chunk: int = 512):
+    """Next-token cross-entropy without materializing fp32 (B,S,V) logits.
+
+    Scans over sequence chunks; per-chunk logits stay (B,C,V) in compute
+    dtype, logsumexp in fp32.  Vocab stays sharded (vocab-parallel loss)."""
+    b, s, _ = x.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    n_chunks = s // chunk
+    xs = (x.reshape(b, n_chunks, chunk, -1).swapaxes(0, 1),
+          labels.reshape(b, n_chunks, chunk).swapaxes(0, 1),
+          mask.reshape(b, n_chunks, chunk).swapaxes(0, 1))
+
+    # remat: recompute the (B,C,V) logits chunk in the backward pass rather
+    # than saving one per scan step (vocab-parallel but still large).
+    @jax.checkpoint
+    def body(carry, inp):
+        xc, lc, mc = inp
+        logits = logits_fn(head_p, emb_p, xc, cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (carry[0] + nll.sum(), carry[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), xs)
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,125 @@
+"""Mamba (selective SSM) block — Jamba's sequence mixer [arXiv:2312.00752,
+2403.19887].
+
+Projections and the depthwise causal conv are batched over the full sequence
+(MXU-friendly); only the diagonal SSM recurrence runs in a ``lax.scan`` over
+time carrying h: (B, d_inner, d_state).  Decode keeps (conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _dense_init, cdtype, pdtype
+
+
+def init_mamba(key, cfg):
+    d, di, n = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    r, dc = cfg.dt_rank, cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    dt = pdtype(cfg)
+    a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=dt), (di, n))
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), dt),
+        "conv_w": jax.random.normal(ks[1], (dc, di), dt) / np.sqrt(dc),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": _dense_init(ks[2], (di, r + 2 * n), dt),
+        "dt_proj": _dense_init(ks[3], (r, di), dt),
+        "dt_bias": jnp.full((di,), -4.6, dt),   # softplus^-1(0.01)
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), dt),
+        "out_proj": _dense_init(ks[5], (di, d), dt),
+    }
+
+
+def _causal_depthwise_conv(xs, w, b, init_state=None):
+    """xs: (B,S,di); w: (dc,di). Shift-and-add form (dc is tiny).
+    init_state: (B, dc-1, di) tail of the previous segment (decode/chunking).
+    """
+    dc = w.shape[0]
+    pad = init_state if init_state is not None else jnp.zeros(
+        (xs.shape[0], dc - 1, xs.shape[2]), xs.dtype)
+    xp = jnp.concatenate([pad, xs], axis=1)          # (B, S+dc-1, di)
+    out = sum(xp[:, j:j + xs.shape[1], :] * w[j] for j in range(dc))
+    return out + b
+
+
+def _ssm_scan(dt_full, x_full, b_full, c_full, a, h0, chunk: int = 128):
+    """Diagonal selective-SSM recurrence, chunked for bwd memory.
+
+    dt_full, x_full: (B,S,di); b_full, c_full: (B,S,N); a: (di,N);
+    h0: (B,di,N).  Returns (y: (B,S,di), hT).
+
+    Two-level scan: the outer scan saves the recurrent state every ``chunk``
+    steps; the rematerialized inner scan recomputes within-chunk states in
+    the backward pass — O(S/chunk + chunk) state memory instead of O(S)."""
+    s = dt_full.shape[1]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    n_chunks = s // chunk
+
+    def to_chunks(t):   # (B,S,F) -> (n_chunks, chunk, B, F)
+        return t.swapaxes(0, 1).reshape(n_chunks, chunk, *t.shape[0:1],
+                                        t.shape[2])
+
+    xs = tuple(to_chunks(t) for t in (dt_full, x_full, b_full, c_full))
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp                     # (B,di) (B,di) (B,N) (B,N)
+        da = jnp.exp(dt_t[..., None] * a)             # (B,di,N)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    @jax.checkpoint
+    def chunk_body(h, inp):
+        return jax.lax.scan(step, h, inp)
+
+    h_t, ys = jax.lax.scan(chunk_body, h0, xs)        # ys: (n_chunks, chunk, B, di)
+    y = ys.reshape(s, *ys.shape[2:]).swapaxes(0, 1)
+    return y, h_t
+
+
+def apply_mamba(p, x, cfg, state=None):
+    """x: (B,S,d). state: None (train) or {"conv","ssm"} for segment carry.
+    Returns (out, new_state)."""
+    dt_ = cdtype(cfg)
+    b, s, _ = x.shape
+    di, n = cfg.mamba_d_inner, cfg.mamba_d_state
+    r = cfg.dt_rank
+    xz = x @ p["in_proj"].astype(dt_)
+    xs_, z = jnp.split(xz, 2, axis=-1)
+    conv_in = state["conv"] if state is not None else None
+    xc = _causal_depthwise_conv(xs_, p["conv_w"].astype(dt_),
+                                p["conv_b"].astype(dt_), conv_in)
+    xc = jax.nn.silu(xc)
+    dbc = xc @ p["x_proj"].astype(dt_)
+    dt_raw, b_ssm, c_ssm = jnp.split(dbc, [r, r + n], axis=-1)
+    dts = jax.nn.softplus(
+        (dt_raw @ p["dt_proj"].astype(dt_)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h0 = (state["ssm"].astype(jnp.float32) if state is not None
+          else jnp.zeros((b, di, n), jnp.float32))
+    y, h_t = _ssm_scan(dts, xc.astype(jnp.float32),
+                       b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32),
+                       a, h0)
+    y = (y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)).astype(dt_)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt_)
+    new_state = None
+    if state is not None:
+        dc = cfg.mamba_d_conv
+        tail = jnp.concatenate([state["conv"], xs_], axis=1)[:, -(dc - 1):, :]
+        new_state = {"conv": tail.astype(state["conv"].dtype),
+                     "ssm": h_t.astype(state["ssm"].dtype)}
+    return out, new_state
+
+
+def init_mamba_state(cfg, batch: int, dtype):
+    di, n, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {"conv": jnp.zeros((batch, dc - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, n), jnp.float32)}

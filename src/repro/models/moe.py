@@ -1,0 +1,230 @@
+"""Top-k MoE with capacity dispatch (GShard semantics).
+
+Two dispatch paths:
+
+* **Distributed (`shard_map`) path** — used whenever a sharding context is
+  set (production).  Routing, sort and capacity-buffer construction run
+  *per device shard* of the token stream (local argsort over T/n_dev tokens),
+  producing a compact ``(E, C_dev, d)`` buffer whose global form is
+  capacity-sharded.  The EP relayout (capacity-sharded → expert-sharded) then
+  happens on the *compact* buffer — the canonical MoE all-to-all — instead of
+  XLA all-gathering the raw token stream, which is what a global argsort
+  forces (measured: ~25 GB/layer replicated traffic on grok-314b; see
+  EXPERIMENTS.md §Dry-run).
+* **Single-device path** — plain jit, used without a mesh (CPU tests,
+  examples).  Same math, same capacity semantics.
+
+Capacity overflow tokens are dropped (standard GShard top-k) and a
+load-balancing auxiliary loss (Switch) is returned.
+
+``moe_sharding="ffn"`` (grok-1: E=8 < TP axis 16) keeps experts replicated
+across `model` and tensor-parallelizes d_ff inside each expert.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _dense_init, cdtype, pdtype
+from . import shard_ctx
+from .shard_ctx import constrain
+
+
+def init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    dt = pdtype(cfg)
+    scale = 1.0 / np.sqrt(d)
+    return {
+        "router": _dense_init(ks[0], (d, e), dt),
+        "we_gate": jax.random.normal(ks[1], (e, d, f), dt) * scale,
+        "we_up": jax.random.normal(ks[2], (e, d, f), dt) * scale,
+        "we_down": jax.random.normal(ks[3], (e, f, d), dt) / np.sqrt(f),
+    }
+
+
+def _route_and_pack(xt, router, cfg, cap):
+    """Local routing + sort-based packing.  xt: (T, d) (a device-local shard
+    in the distributed path).  Returns (buf (E,cap+ovf-sink excluded), slot,
+    tok_of, w, aux_stats)."""
+    dt = xt.dtype
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = (xt @ router.astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # Switch aux-loss statistics (local sums; caller normalizes/reduces)
+    me_sum = probs.sum(axis=0)                                   # (E,)
+    ce_sum = jax.nn.one_hot(expert_idx[:, 0], e,
+                            dtype=jnp.float32).sum(axis=0)       # (E,)
+
+    flat_e = expert_idx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(sorted_e, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * k) - starts[sorted_e]
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, e * cap)
+    tok_of = order // k
+    w = (gate_vals.reshape(-1)[order] * keep).astype(dt)
+
+    buf = jnp.zeros((e * cap + 1, d), dt)
+    buf = buf.at[slot].add(xt[tok_of])
+    return buf[:-1].reshape(e, cap, d), slot, tok_of, w, (me_sum, ce_sum)
+
+
+def _combine(out_buf, slot, tok_of, w, t):
+    """Scatter expert outputs back to token order (local shapes)."""
+    e_cap = out_buf.shape[0] * out_buf.shape[1]
+    out_flat = out_buf.reshape(e_cap, -1)
+    gathered = out_flat[jnp.minimum(slot, e_cap - 1)]
+    y = jnp.zeros((t, out_flat.shape[1]), out_buf.dtype)
+    return y.at[tok_of].add(gathered * w[:, None])
+
+
+def _expert_ffn(p, buf, cfg):
+    dt = buf.dtype
+    gates = jnp.einsum("ecd,edf->ecf", buf, p["we_gate"].astype(dt))
+    ups = jnp.einsum("ecd,edf->ecf", buf, p["we_up"].astype(dt))
+    act = jax.nn.silu(gates) if cfg.act != "geglu" else jax.nn.gelu(gates)
+    ep = cfg.moe_sharding == "expert"
+    hidden = constrain(act * ups,
+                       *(("model", "batch", None) if ep
+                         else (None, "batch", "model")))
+    return jnp.einsum("ecf,efd->ecd", hidden, p["we_down"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# single-device path (no mesh)
+# ---------------------------------------------------------------------------
+
+def _apply_moe_local(p, x, cfg):
+    dt = cdtype(cfg)
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(np.ceil(t * k / e * cfg.capacity_factor))
+    cap = max(8, -(-cap // 8) * 8)
+    xt = x.reshape(t, d).astype(dt)
+    buf, slot, tok_of, w, (me_sum, ce_sum) = _route_and_pack(
+        xt, p["router"], cfg, cap)
+    out_buf = _expert_ffn(p, buf, cfg)
+    y = _combine(out_buf, slot, tok_of, w, t)
+    aux = e * jnp.sum((me_sum / t) * (ce_sum / t)) * cfg.router_aux_coef
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# distributed path (shard_map over the token stream)
+# ---------------------------------------------------------------------------
+
+def _token_split_axes(t, mesh, batch_axes_, include_model=True):
+    """Largest set of mesh axes (DP axes first, then model) that divides T.
+
+    FFN-sharded MoE (``include_model=False``) keeps tokens data-split only:
+    every model-peer needs every token (it owns a d_ff slice of every
+    expert), so splitting tokens over `model` would force a buffer
+    re-gather (measured 1.4 TB/step on grok prefill; §Perf iteration 2)."""
+    axes = []
+    n = 1
+    cand = list(batch_axes_) + (["model"] if include_model else [])
+    for a in cand:
+        size = mesh.shape[a]
+        if t % (n * size) == 0:
+            axes.append(a)
+            n *= size
+    return tuple(axes), n
+
+
+def _apply_moe_dist(p, x, cfg, mesh, batch_axes_):
+    from jax.sharding import PartitionSpec as P
+
+    shard_map = jax.shard_map
+    dt = cdtype(cfg)
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    ep_mode = cfg.moe_sharding == "expert"
+    split, n_split = _token_split_axes(t, mesh, batch_axes_,
+                                       include_model=ep_mode)
+    t_dev = t // n_split
+    cap_dev = int(np.ceil(t_dev * k / e * cfg.capacity_factor))
+    cap_dev = max(8, -(-cap_dev // 8) * 8)
+
+    xt = constrain(x.reshape(t, d).astype(dt), split, None)
+
+    # explicit EP exchange: when experts shard over `model` and tokens were
+    # split over `model`, move expert groups between model-peers with one
+    # all_to_all on the COMPACT capacity buffer (the canonical MoE dispatch
+    # collective) — XLA's reshard of the same layout change lowers to a full
+    # buffer all-gather (measured 3 TB/step on jamba; EXPERIMENTS.md §Perf).
+    ep = cfg.moe_sharding == "expert"
+    tp = mesh.shape["model"]
+    use_a2a = ep and "model" in split and e % tp == 0
+
+    def dispatch(xt_loc, router):
+        buf, slot, tok_of, w, (me, ce) = _route_and_pack(
+            xt_loc, router, cfg, cap_dev)
+        me = jax.lax.psum(me, split) if split else me
+        ce = jax.lax.psum(ce, split) if split else ce
+        if use_a2a:   # (E, cap, d) -> (E/tp, tp*cap, d)
+            buf = jax.lax.all_to_all(buf, "model", split_axis=0,
+                                     concat_axis=1, tiled=True)
+        return buf, slot, tok_of, w, me, ce
+
+    data_split = tuple(a for a in split if a != "model")
+    if use_a2a:
+        buf_spec = P("model", data_split if data_split else None, None)
+    else:
+        buf_spec = P(None, split if split else None, None)
+
+    buf, slot, tok_of, w, me_sum, ce_sum = shard_map(
+        dispatch, mesh=mesh,
+        in_specs=(P(split if split else None, None), P(None, None)),
+        out_specs=(buf_spec,
+                   P(split if split else None),
+                   P(split if split else None),
+                   P(split if split else None),
+                   P(None), P(None)),
+        check_vma=False,
+    )(xt, p["router"].astype(dt))
+
+    if not use_a2a:
+        # fallback relayout via sharding constraint
+        buf = constrain(buf, *(("model", "batch", None) if ep
+                               else (None, "batch", None)))
+    out_buf = _expert_ffn(p, buf, cfg)
+    if not use_a2a:
+        out_buf = constrain(out_buf, None, split if split else None, None)
+
+    def combine(out_loc, slot_loc, tok_loc, w_loc):
+        if use_a2a:   # reverse exchange: (E/tp, tp*cap, d) -> (E, cap, d)
+            out_loc = jax.lax.all_to_all(out_loc, "model", split_axis=1,
+                                         concat_axis=0, tiled=True)
+        return _combine(out_loc, slot_loc, tok_loc, w_loc, t_dev)
+
+    y = shard_map(
+        combine, mesh=mesh,
+        in_specs=(buf_spec,
+                  P(split if split else None),
+                  P(split if split else None),
+                  P(split if split else None)),
+        out_specs=P(split if split else None, None),
+        check_vma=False,
+    )(out_buf, slot, tok_of, w)
+
+    aux = e * jnp.sum((me_sum / t) * (ce_sum / t)) * cfg.router_aux_coef
+    return y.reshape(b, s, d), aux
+
+
+def apply_moe(p, x, cfg):
+    """x: (B, S, d) → (y: (B, S, d), aux_loss scalar fp32)."""
+    mesh = shard_ctx._CTX["mesh"]
+    if mesh is not None:
+        return _apply_moe_dist(p, x, cfg, mesh, shard_ctx._CTX["batch_axes"])
+    return _apply_moe_local(p, x, cfg)

@@ -1,0 +1,159 @@
+"""RWKV-6 "Finch" [arXiv:2404.05892]: attention-free mixer with
+data-dependent decay (ddlerp token shift + LoRA-modulated per-channel decay),
+plus the RWKV channel-mix FFN.
+
+Projections are full-sequence matmuls; only the WKV state recurrence scans
+over time carrying S: (B, H, hs, hs).  Decode carries (x_prev_tm, x_prev_cm,
+wkv state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _dense_init, cdtype, pdtype
+
+_LORA = 32       # ddlerp LoRA rank
+_DECAY_LORA = 64
+
+
+def init_rwkv_time_mix(key, cfg):
+    d = cfg.d_model
+    h, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    ks = jax.random.split(key, 12)
+    dt = pdtype(cfg)
+    return {
+        "mu_x": jnp.full((d,), 0.5, dt),
+        "mu_rwkvg": jnp.full((5, d), 0.5, dt),
+        "lora_a": _dense_init(ks[0], (d, 5 * _LORA), dt),
+        "lora_b": jax.random.normal(ks[1], (5, _LORA, d), dt) * 0.01,
+        "w_r": _dense_init(ks[2], (d, d), dt),
+        "w_k": _dense_init(ks[3], (d, d), dt),
+        "w_v": _dense_init(ks[4], (d, d), dt),
+        "w_g": _dense_init(ks[5], (d, d), dt),
+        "decay_base": jnp.full((d,), -4.0, dt),
+        "decay_a": _dense_init(ks[6], (d, _DECAY_LORA), dt),
+        "decay_b": jax.random.normal(ks[7], (_DECAY_LORA, d), dt) * 0.01,
+        "bonus_u": jax.random.normal(ks[8], (h, hs), dt) * 0.1,
+        "ln_x": jnp.ones((d,), dt),
+        "w_o": _dense_init(ks[9], (d, d), dt),
+    }
+
+
+def _wkv_scan(r, k, v, w, u, s0, chunk: int = 64):
+    """WKV recurrence, chunked for bwd memory.  r,k,v: (B,S,H,hs);
+    w: (B,S,H,hs) decay in (0,1); u: (H,hs) bonus; s0: (B,H,hs,hs).
+    Returns (y: (B,S,H,hs), sT).
+
+    The (B,H,hs,hs) state is large; a flat scan would save it per step for
+    the backward pass (O(S) states).  Outer scan saves every ``chunk`` steps,
+    the rematerialized inner scan recomputes within-chunk states in bwd."""
+    seq = r.shape[1]
+    chunk = min(chunk, seq)
+    while seq % chunk:
+        chunk //= 2
+    n_chunks = seq // chunk
+
+    def to_chunks(t):   # (B,S,H,hs) -> (n_chunks, chunk, B, H, hs)
+        return t.swapaxes(0, 1).reshape(n_chunks, chunk, *t.shape[:1],
+                                        *t.shape[2:])
+
+    xs = tuple(to_chunks(t) for t in (r, k, v, w))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                        # (B,H,hs)
+        akv = jnp.einsum("bhk,bhv->bhkv", kt, vt)   # outer product
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * akv)
+        s = wt[..., None] * s + akv
+        return s, y
+
+    @jax.checkpoint
+    def chunk_body(s, inp):
+        return jax.lax.scan(step, s, inp)
+
+    s_t, ys = jax.lax.scan(chunk_body, s0, xs)
+    y = ys.reshape(seq, *ys.shape[2:]).swapaxes(0, 1)
+    return y, s_t
+
+
+def apply_rwkv_time_mix(p, x, cfg, x_prev=None, wkv_state=None):
+    """x: (B,S,d).  x_prev: (B,1,d) last token of previous segment (decode)
+    or None (train: internal shift).  Returns (out, (x_last, new_state))."""
+    dt_ = cdtype(cfg)
+    b, s, d = x.shape
+    h, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    if x_prev is None:
+        x_prev_seq = jnp.concatenate(
+            [jnp.zeros((b, 1, d), x.dtype), x[:, :-1]], axis=1)
+    else:
+        x_prev_seq = jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]],
+                                     axis=1)
+    xx = x_prev_seq - x
+    # ddlerp: data-dependent token-shift amounts for r,w,k,v,g
+    xxx = x + xx * p["mu_x"].astype(dt_)
+    t5 = jnp.tanh(xxx @ p["lora_a"].astype(dt_))
+    t5 = t5.reshape(b, s, 5, _LORA).transpose(2, 0, 1, 3)
+    mods = jnp.einsum("fbsl,fld->fbsd", t5, p["lora_b"].astype(dt_))
+    mixed = x[None] + xx[None] * (p["mu_rwkvg"].astype(dt_)[:, None, None, :]
+                                  + mods)
+    xr, xw, xk, xv, xg = mixed
+    r = (xr @ p["w_r"].astype(dt_)).reshape(b, s, h, hs)
+    k = (xk @ p["w_k"].astype(dt_)).reshape(b, s, h, hs)
+    v = (xv @ p["w_v"].astype(dt_)).reshape(b, s, h, hs)
+    g = jax.nn.silu(xg @ p["w_g"].astype(dt_))
+    # data-dependent per-channel decay (Finch's signature)
+    dec = (p["decay_base"].astype(jnp.float32)
+           + (jnp.tanh(xw @ p["decay_a"].astype(dt_))
+              @ p["decay_b"].astype(dt_)).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, s, h, hs)
+    s0 = (wkv_state.astype(jnp.float32) if wkv_state is not None
+          else jnp.zeros((b, h, hs, hs), jnp.float32))
+    y, s_t = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                       v.astype(jnp.float32), w, p["bonus_u"].astype(jnp.float32),
+                       s0)
+    # per-head groupnorm
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1) [..., None]
+    y = ((y - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, d)
+    y = y.astype(dt_) * p["ln_x"].astype(dt_) * g
+    out = y @ p["w_o"].astype(dt_)
+    return out, (x[:, -1:, :], s_t)
+
+
+def init_rwkv_channel_mix(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "w_k": _dense_init(ks[0], (d, f), dt),
+        "w_r": _dense_init(ks[1], (d, d), dt),
+        "w_v": _dense_init(ks[2], (f, d), dt),
+    }
+
+
+def apply_rwkv_channel_mix(p, x, cfg, x_prev=None):
+    dt_ = cdtype(cfg)
+    b, s, d = x.shape
+    if x_prev is None:
+        x_prev_seq = jnp.concatenate(
+            [jnp.zeros((b, 1, d), x.dtype), x[:, :-1]], axis=1)
+    else:
+        x_prev_seq = jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]],
+                                     axis=1)
+    xx = x_prev_seq - x
+    xk = x + xx * p["mu_k"].astype(dt_)
+    xr = x + xx * p["mu_r"].astype(dt_)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(dt_)))
+    out = jax.nn.sigmoid(xr @ p["w_r"].astype(dt_)) * (k @ p["w_v"].astype(dt_))
+    return out, x[:, -1:, :]
+
+
+def init_rwkv_state(cfg, batch: int, dtype):
+    h, hs, d = cfg.rwkv_n_heads, cfg.rwkv_head_size, cfg.d_model
+    return {"x_prev_tm": jnp.zeros((batch, 1, d), dtype),
+            "x_prev_cm": jnp.zeros((batch, 1, d), dtype),
+            "wkv": jnp.zeros((batch, h, hs, hs), jnp.float32)}

@@ -1,0 +1,69 @@
+"""Ambient sharding context for intra-layer constraints.
+
+Layers like MoE create large *internal* tensors (dispatch buffers, expert
+hidden activations) whose sharding XLA cannot infer well from inputs alone —
+left unconstrained they replicate and blow past HBM.  The launch layer sets
+this context (mesh + which axes shard batch-like dims) before tracing;
+``constrain`` is a no-op when unset, so models stay importable/testable
+without any mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: dict = {"mesh": None, "batch_axes": None}
+
+
+def set_sharding_context(mesh, batch_axes) -> None:
+    _CTX["mesh"] = mesh
+    _CTX["batch_axes"] = tuple(batch_axes) if batch_axes else None
+
+
+def clear_sharding_context() -> None:
+    set_sharding_context(None, None)
+
+
+def _axis_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x, *spec):
+    """Apply with_sharding_constraint if a context is set.
+
+    spec entries per dim: None | 'batch' | 'model' (or any mesh axis name).
+    Dims that don't divide their axis product fall back to replicated."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    batch_axes_ = _CTX["batch_axes"] or ()
+    resolved = []
+    for size, s in zip(x.shape, spec):
+        if s is None:
+            resolved.append(None)
+            continue
+        if s == "batch":
+            axes = batch_axes_ or None
+        elif s in batch_axes_:
+            # axis already consumed by DP (dp_over_model): constraining a
+            # second dim on it would conflict — replicate instead
+            axes = None
+        else:
+            axes = s
+        if axes is None:
+            resolved.append(None)
+            continue
+        if size % _axis_size(mesh, axes) == 0:
+            resolved.append(axes)
+        else:
+            resolved.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))

@@ -1,0 +1,6 @@
+from .analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, RooflineTerms,
+                       collective_bytes, count_params, model_flops_for,
+                       roofline)
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "RooflineTerms",
+           "collective_bytes", "count_params", "model_flops_for", "roofline"]

@@ -1,0 +1,131 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Terms (per device; v5e constants):
+    compute_s    = HLO_FLOPs / PEAK_FLOPS
+    memory_s     = HLO_bytes_accessed / HBM_BW
+    collective_s = collective_result_bytes / ICI_BW
+
+``cost_analysis()`` on the SPMD-partitioned module reports *per-device*
+FLOPs/bytes, so no further division by chip count is needed (equivalent to
+the spec's total/(chips·peak) form).  Collective bytes are not in
+cost_analysis — we parse the optimized HLO and sum the result-shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (including -start async forms).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# TPU v5e, per chip
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# an HLO op line: `  %name = <shape-or-tuple> opcode(...)`
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+([a-z0-9-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective opcode over the HLO module."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, opcode = m.group(1), m.group(2)
+        base = opcode.removesuffix("-start").removesuffix("-done")
+        if base in out and not opcode.endswith("-done"):
+            out[base] += _shape_bytes(shape_str)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device collective result bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0     # 6·N·D (or 2·N·D inference), whole step
+    useful_ratio: float = 0.0    # model_flops / (flops × chips)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(flops: float, hbm_bytes: float, coll_bytes: float,
+             *, chips: int, model_flops: float = 0.0) -> RooflineTerms:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = (model_flops / (flops * chips)) if flops else 0.0
+    return RooflineTerms(flops=flops, hbm_bytes=hbm_bytes,
+                         coll_bytes=coll_bytes, compute_s=compute_s,
+                         memory_s=memory_s, collective_s=collective_s,
+                         dominant=dominant, model_flops=model_flops,
+                         useful_ratio=useful)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS: 6·N·D (train) / 2·N·D (inference forward), N_active for MoE
+# ---------------------------------------------------------------------------
+
+def count_params(params_tree, *, active_only=False, cfg=None) -> float:
+    import jax
+
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree)[0]:
+        name = ""
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        if active_only and cfg is not None and name.startswith("we_"):
+            n *= cfg.top_k / cfg.n_experts
+        total += n
+    return total
+
+
+def model_flops_for(cfg, shape, params_tree) -> float:
+    n_active = count_params(params_tree, active_only=True, cfg=cfg)
+    d_tokens = shape.global_batch * (
+        1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * d_tokens

@@ -1,0 +1,262 @@
+"""While-loop-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` (and a naive text scan) count a ``while`` body
+exactly once, but our programs are scan-heavy by design (unit stack,
+chunked attention, chunked recurrences, loss chunks): true cost = body cost ×
+trip count, recursively.  This module parses the post-optimization HLO,
+extracts static trip counts from scan-generated loop conditions, and
+computes per-device
+
+  * flops            — dot products (2·M·N·K), the dominant term; fused
+                       elementwise flops are ignored (<5 % for these models),
+  * bytes accessed   — per op: operands + result; fusions count boundary
+                       tensors only (matching HloCostAnalysis convention),
+  * collective bytes — max(operand, result) bytes per all-gather/all-reduce/
+                       reduce-scatter/all-to-all/collective-permute,
+
+each multiplied through nested while trip counts.
+
+Validated against ``cost_analysis()`` on scan-free programs and against the
+analytic 6·N·D model on the real cells (EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s+([a-z0-9\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_TRIP_RE = re.compile(r"known_trip_count[^}]*\"n\"\s*:\s*\"(\d+)\"")
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_ATTR_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_numel_bytes(shape_str: str):
+    total_n, total_b = 0, 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_n += n
+        total_b += n * _DTYPE_BYTES[dtype]
+    return total_n, total_b
+
+
+def _dims_of(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str            # remainder of the line (operands + attrs)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and "{" in line:
+                cur = Computation(m.group(1), {}, [])
+            continue
+        s = line.strip()
+        if s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE_RE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.ops[op.name] = op
+            cur.order.append(op.name)
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+class CostModel:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.entry = self._find_entry(text)
+        self._memo: Dict[str, dict] = {}
+
+    def _find_entry(self, text) -> str:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+        if m:
+            return m.group(1)
+        # fall back: largest computation
+        return max(self.comps, key=lambda c: len(self.comps[c].order))
+
+    # ------------------------------------------------------------------
+    def _trip_count(self, op: Op, cond_name: Optional[str]) -> int:
+        """Trip count from XLA's backend_config annotation (authoritative),
+        falling back to the constant in a scan-style condition."""
+        mm = _TRIP_RE.search(op.rest)
+        if mm:
+            return int(mm.group(1))
+        comp = self.comps.get(cond_name or "")
+        if comp is None:
+            return 1
+        consts = []
+        for o in comp.ops.values():
+            if o.opcode == "constant":
+                m2 = re.match(r"^(-?\d+)\)", o.rest)
+                if m2:
+                    consts.append(int(m2.group(1)))
+            m2 = _CONST_RE.search(o.rest)
+            if m2:
+                consts.append(int(m2.group(1)))
+        pos = [c for c in consts if c > 0]
+        return max(pos) if pos else 1
+
+    def _operand_shape(self, comp: Computation, operand: str) -> str:
+        op = comp.ops.get(operand)
+        return op.shape if op else ""
+
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        out_n, _ = _shape_numel_bytes(op.shape)
+        operands = _OPERAND_RE.findall(op.rest)
+        lhs_shape = self._operand_shape(comp, operands[0]) if operands else ""
+        lhs_dims = _dims_of(lhs_shape)
+        m = _CONTRACT_RE.search(op.rest)
+        k = 1
+        if m and lhs_dims:
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    k *= lhs_dims[int(idx)]
+        return 2.0 * out_n * k
+
+    def _op_bytes(self, comp: Computation, op: Op) -> float:
+        _, out_b = _shape_numel_bytes(op.shape)
+        total = out_b
+        for name in _OPERAND_RE.findall(op.rest):
+            sh = self._operand_shape(comp, name)
+            if sh:
+                _, b = _shape_numel_bytes(sh)
+                total += b
+        return total
+
+    def _collective_bytes(self, comp: Computation, op: Op) -> float:
+        _, out_b = _shape_numel_bytes(op.shape)
+        in_b = 0
+        for name in _OPERAND_RE.findall(op.rest):
+            sh = self._operand_shape(comp, name)
+            if sh:
+                _, b = _shape_numel_bytes(sh)
+                in_b += b
+        return float(max(out_b, in_b))
+
+    # ------------------------------------------------------------------
+    def cost(self, comp_name: Optional[str] = None) -> dict:
+        comp_name = comp_name or self.entry
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return {"flops": 0.0, "bytes": 0.0, "dot_bytes": 0.0,
+                    "coll_bytes": 0.0, "coll_by_op": {}, "coll_top": {}}
+        total = {"flops": 0.0, "bytes": 0.0, "dot_bytes": 0.0,
+                 "coll_bytes": 0.0, "coll_by_op": {}, "coll_top": {}}
+        self._memo[comp_name] = total      # breaks accidental cycles
+        for name in comp.order:
+            op = comp.ops[name]
+            oc = op.opcode
+            base = oc.removesuffix("-start").removesuffix("-done")
+            if oc == "while":
+                body = _CALL_ATTR_RE.search(op.rest)
+                cond = _COND_ATTR_RE.search(op.rest)
+                trips = self._trip_count(op, cond.group(1) if cond else None)
+                if body:
+                    sub = self.cost(body.group(1))
+                    total["flops"] += trips * sub["flops"]
+                    total["bytes"] += trips * sub["bytes"]
+                    total["dot_bytes"] += trips * sub["dot_bytes"]
+                    total["coll_bytes"] += trips * sub["coll_bytes"]
+                    for k, v in sub["coll_by_op"].items():
+                        total["coll_by_op"][k] = (total["coll_by_op"]
+                                                  .get(k, 0.0) + trips * v)
+                    for k, v in sub["coll_top"].items():
+                        total["coll_top"][k] = (total["coll_top"]
+                                                .get(k, 0.0) + trips * v)
+            elif oc in ("fusion", "call", "conditional", "custom-call",
+                        "async-start"):
+                # descend into called computations (fusion: count the dots
+                # inside but bytes only at the boundary)
+                total["bytes"] += self._op_bytes(comp, op)
+                mm = _CALL_ATTR_RE.search(op.rest)
+                if mm:
+                    sub = self.cost(mm.group(1))
+                    total["flops"] += sub["flops"]
+                    total["dot_bytes"] += sub["dot_bytes"]
+                    total["coll_bytes"] += sub["coll_bytes"]
+                    for k, v in sub["coll_by_op"].items():
+                        total["coll_by_op"][k] = (total["coll_by_op"]
+                                                  .get(k, 0.0) + v)
+                    for k, v in sub["coll_top"].items():
+                        total["coll_top"][k] = (total["coll_top"]
+                                                .get(k, 0.0) + v)
+            elif oc == "dot":
+                total["flops"] += self._dot_flops(comp, op)
+                b = self._op_bytes(comp, op)
+                total["bytes"] += b
+                total["dot_bytes"] += b
+            elif base in _COLLECTIVES and not oc.endswith("-done"):
+                b = self._collective_bytes(comp, op)
+                total["coll_bytes"] += b
+                total["coll_by_op"][base] = (total["coll_by_op"]
+                                             .get(base, 0.0) + b)
+                key = f"{base} {op.shape[:60]}"
+                total["coll_top"][key] = total["coll_top"].get(key, 0.0) + b
+                total["bytes"] += self._op_bytes(comp, op)
+            elif oc in ("parameter", "constant", "get-tuple-element",
+                        "tuple", "bitcast"):
+                continue
+            else:
+                total["bytes"] += self._op_bytes(comp, op)
+        self._memo[comp_name] = total
+        return total
+
+
+def analyze_hlo(text: str, top_k: int = 12) -> dict:
+    cm = CostModel(text)
+    out = dict(cm.cost())
+    out["coll_by_op"] = {k: int(v) for k, v in out["coll_by_op"].items()}
+    top = sorted(out["coll_top"].items(), key=lambda kv: -kv[1])[:top_k]
+    out["coll_top"] = [{"op": k, "bytes": int(v)} for k, v in top]
+    return out

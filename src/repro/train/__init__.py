@@ -1,0 +1,12 @@
+from .checkpoint import CheckpointManager
+from .fault_tolerance import ResilientTrainer, StragglerWatchdog
+from .optimizer import (OptimizerConfig, OptState, adamw_update,
+                        clip_by_global_norm, global_norm, init_opt_state,
+                        lr_at)
+from .train_step import TrainState, init_train_state, make_loss_fn, make_train_step
+
+__all__ = ["CheckpointManager", "ResilientTrainer", "StragglerWatchdog",
+           "OptimizerConfig", "OptState", "adamw_update",
+           "clip_by_global_norm", "global_norm", "init_opt_state", "lr_at",
+           "TrainState", "init_train_state", "make_loss_fn",
+           "make_train_step"]

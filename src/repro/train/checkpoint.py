@@ -1,0 +1,142 @@
+"""Checkpointing: atomic, async-capable, mesh-elastic.
+
+* **Atomic**: write to ``<dir>/.tmp-<step>``, fsync, ``os.replace`` to
+  ``step_<n>.npz`` then update ``manifest.json`` — a crash mid-save never
+  corrupts the latest checkpoint.
+* **Async**: ``save(..., blocking=False)`` snapshots to host memory
+  (device_get) on the caller thread — the only part that must synchronize
+  with the step loop — then serializes on a background thread, keeping
+  checkpoint I/O off the critical path.
+* **Elastic**: arrays are stored logically (unsharded, by pytree path).  On
+  restore, ``restore(..., shardings=...)`` device_puts every leaf with the
+  *target* mesh's NamedSharding, so a job can restart on a different pod
+  count / mesh shape than it saved from (checkpoint-reshard).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+SEP = "//"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template, flat: dict):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, extra: Optional[dict] = None,
+             blocking: bool = True):
+        flat = _flatten(jax.device_get(tree))     # snapshot on caller thread
+        if blocking:
+            self._write(step, flat, extra or {})
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, extra or {}),
+                daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: dict, extra: dict):
+        tmp = os.path.join(self.dir, f".tmp-{step}")
+        final = os.path.join(self.dir, f"step_{step:010d}.npz")
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+        manifest = self._manifest()
+        manifest["steps"] = sorted(set(manifest.get("steps", []) + [step]))
+        manifest["latest"] = max(manifest["steps"])
+        manifest["extra"] = extra
+        manifest["saved_at"] = time.time()
+        mtmp = os.path.join(self.dir, ".manifest.tmp")
+        with open(mtmp, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(mtmp, os.path.join(self.dir, "manifest.json"))
+        self._gc(manifest)
+
+    def _gc(self, manifest):
+        steps = manifest.get("steps", [])
+        for s in steps[:-self.keep] if self.keep else []:
+            p = os.path.join(self.dir, f"step_{s:010d}.npz")
+            if os.path.exists(p):
+                os.remove(p)
+        manifest["steps"] = steps[-self.keep:] if self.keep else steps
+
+    # -- restore --------------------------------------------------------------
+    def _manifest(self) -> dict:
+        p = os.path.join(self.dir, "manifest.json")
+        if os.path.exists(p):
+            with open(p) as f:
+                return json.load(f)
+        return {}
+
+    def latest_step(self) -> Optional[int]:
+        man = self._manifest()
+        steps = [s for s in man.get("steps", []) if os.path.exists(
+            os.path.join(self.dir, f"step_{s:010d}.npz"))]
+        return max(steps) if steps else None
+
+    def restore(self, step: int, template, shardings=None):
+        """Restore into ``template`` structure; if ``shardings`` (a matching
+        pytree of NamedSharding / None) is given, device_put each leaf with
+        it — this is the elastic-reshard path."""
+        path = os.path.join(self.dir, f"step_{step:010d}.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten_into(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda leaf, s: jax.device_put(leaf, s) if s is not None
+                else jax.device_put(leaf), tree, shardings)
+        return tree
+
+    def restore_latest(self, template, shardings=None):
+        s = self.latest_step()
+        if s is None:
+            return None, None
+        return s, self.restore(s, template, shardings)

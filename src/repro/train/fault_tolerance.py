@@ -1,0 +1,107 @@
+"""Fault tolerance for long-running multi-pod jobs.
+
+``ResilientTrainer`` wraps a step function with:
+
+* periodic (async) checkpointing + automatic restore-from-latest on restart
+  or on a step failure (retry budget, exponential backoff) — the
+  checkpoint/restart half of fault tolerance;
+* a ``StragglerWatchdog`` that tracks per-step wall time and flags steps
+  exceeding ``k×`` the running median — on a real cluster the callback would
+  feed the controller that evicts/replaces the slow host; here it records and
+  (optionally) raises so tests can assert the policy;
+* a failure-injection hook used by the test-suite to simulate preemptions.
+
+Data-pipeline resume is exact because the pipeline is stateless in `step`
+(see data.pipeline): restoring `step` restores sample order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from collections import deque
+from typing import Callable, Optional
+
+from .checkpoint import CheckpointManager
+
+log = logging.getLogger("repro.fault_tolerance")
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    factor: float = 3.0
+    window: int = 32
+    min_samples: int = 5
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+    _times: deque = dataclasses.field(default_factory=lambda: deque(maxlen=64))
+    flagged: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, seconds: float):
+        if len(self._times) >= self.min_samples:
+            med = sorted(self._times)[len(self._times) // 2]
+            if seconds > self.factor * med:
+                self.flagged.append((step, seconds, med))
+                log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                            step, seconds, med)
+                if self.on_straggler:
+                    self.on_straggler(step, seconds, med)
+        self._times.append(seconds)
+
+
+@dataclasses.dataclass
+class ResilientTrainer:
+    step_fn: Callable                     # (state, batch) -> (state, metrics)
+    batch_fn: Callable                    # step:int -> batch
+    ckpt: CheckpointManager
+    ckpt_every: int = 50
+    max_retries: int = 3
+    async_ckpt: bool = True
+    watchdog: StragglerWatchdog = dataclasses.field(
+        default_factory=StragglerWatchdog)
+    failure_injector: Optional[Callable[[int], None]] = None
+
+    def run(self, state, start_step: int, num_steps: int,
+            state_template=None, shardings=None):
+        """Run ``num_steps`` steps with restart-on-failure.  Returns
+        (final_state, metrics_history)."""
+        template = state_template if state_template is not None else state
+        latest = self.ckpt.latest_step()
+        if latest is not None and latest >= start_step:
+            state = self.ckpt.restore(latest, template, shardings)
+            start_step = latest
+            log.info("resumed from checkpoint step %d", latest)
+        history = []
+        step = start_step
+        retries = 0
+        while step < start_step + num_steps:
+            try:
+                if self.failure_injector:
+                    self.failure_injector(step)
+                t0 = time.perf_counter()
+                batch = self.batch_fn(step)
+                state, metrics = self.step_fn(state, batch)
+                dt = time.perf_counter() - t0
+                self.watchdog.observe(step, dt)
+                history.append({"step": step, "seconds": dt, **{
+                    k: float(v) for k, v in metrics.items()}})
+                step += 1
+                retries = 0
+                if step % self.ckpt_every == 0:
+                    self.ckpt.save(step, state, {"step": step},
+                                   blocking=not self.async_ckpt)
+            except Exception as exc:   # noqa: BLE001 — restart-on-any-failure
+                retries += 1
+                if retries > self.max_retries:
+                    raise
+                log.warning("step %d failed (%s); restoring (retry %d/%d)",
+                            step, exc, retries, self.max_retries)
+                time.sleep(min(2.0 ** retries * 0.01, 1.0))
+                self.ckpt.wait()
+                latest = self.ckpt.latest_step()
+                if latest is not None:
+                    state = self.ckpt.restore(latest, template, shardings)
+                    step = latest
+        self.ckpt.wait()
+        self.ckpt.save(step, state, {"step": step}, blocking=True)
+        return state, history

@@ -1,0 +1,87 @@
+"""Train step factory: loss, grad, microbatch accumulation, optimizer.
+
+``make_train_step(cfg, opt_cfg, microbatches)`` returns a pure function
+``(train_state, batch) -> (train_state, metrics)`` suitable for ``jax.jit``
+with in/out shardings from ``launch.sharding``.  Microbatch accumulation is a
+``lax.scan`` over batch slices (keeps peak activation memory at
+1/microbatches while the optimizer still sees the full global batch).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward
+from ..models.layers import chunked_xent
+from .optimizer import OptimizerConfig, OptState, adamw_update, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+    step: jnp.ndarray
+
+
+def init_train_state(params, cfg) -> TrainState:
+    return TrainState(params=params,
+                      opt=init_opt_state(params, cfg.opt_state_dtype),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def cast_params_for_compute(params, cfg):
+    """Cast fp32 master weights (≥2-D) to the compute dtype ONCE, before any
+    use: FSDP all-gathers then move bf16 instead of fp32 (2× less ICI
+    traffic), and the cast's VJP still accumulates fp32 gradients."""
+    cdt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda p: p.astype(cdt)
+        if (p.ndim >= 2 and p.dtype == jnp.float32) else p, params)
+
+
+def make_loss_fn(cfg, *, skip_causal=False, shard_act=None):
+    def loss_fn(params, batch):
+        params_c = cast_params_for_compute(params, cfg)
+        h, aux = forward(params_c, batch, cfg, skip_causal=skip_causal,
+                         shard_act=shard_act)
+        nll = chunked_xent(params_c["head"], params_c["embed"], h,
+                           batch["labels"], batch["mask"], cfg)
+        return nll + aux, {"nll": nll, "moe_aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg, opt_cfg: OptimizerConfig, *, microbatches: int = 1,
+                    skip_causal: bool = False, shard_act=None):
+    loss_fn = make_loss_fn(cfg, skip_causal=skip_causal, shard_act=shard_act)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        if microbatches == 1:
+            (loss, extras), grads = grad_fn(state.params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                (loss_a, grads_a) = carry
+                (l, _), g = grad_fn(state.params, mb)
+                return (loss_a + l, jax.tree.map(jnp.add, grads_a, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros(()), zeros), micro)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            extras = {"nll": loss, "moe_aux": jnp.zeros(())}
+        new_params, new_opt, om = adamw_update(state.params, grads,
+                                               state.opt, opt_cfg)
+        metrics = {"loss": loss, **extras, **om}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,82 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EHYBDevice, build_ehyb, ehyb_spmv, from_coo,
+                        make_partition)
+from repro.core.solver import cg
+
+
+@st.composite
+def sparse_matrix(draw, max_n=96):
+    n = draw(st.integers(8, max_n))
+    density = draw(st.floats(0.02, 0.3))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    nnz = max(n, int(n * n * density))
+    rows = rng.integers(0, n, nnz).astype(np.int64)
+    cols = rng.integers(0, n, nnz).astype(np.int32)
+    vals = rng.standard_normal(nnz)
+    # diagonal for solvability/SPD-ish structure
+    rows = np.concatenate([rows, np.arange(n)])
+    cols = np.concatenate([cols, np.arange(n, dtype=np.int32)])
+    vals = np.concatenate([vals, np.full(n, n / 4.0)])
+    return from_coo(n, rows, cols, vals)
+
+
+@given(sparse_matrix())
+@settings(max_examples=25, deadline=None)
+def test_ehyb_spmv_equals_dense(m):
+    """∀ sparse A, x: EHYB(A)·x == A·x — the fundamental format invariant."""
+    e = build_ehyb(m, n_parts=4, vec_size=-(-m.n // 4 // 8) * 8)
+    dev = EHYBDevice.from_ehyb(e)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(m.n)
+    y = np.asarray(ehyb_spmv(dev, jnp.asarray(x, dtype=jnp.float32)),
+                   dtype=np.float64)
+    y_ref = m.to_dense() @ x
+    scale = max(np.abs(y_ref).max(), 1.0)
+    assert np.abs(y - y_ref).max() / scale < 1e-4
+
+
+@given(sparse_matrix())
+@settings(max_examples=25, deadline=None)
+def test_entry_count_conserved(m):
+    """nnz(ELL) + nnz(ER) == nnz(A) (no entry lost or duplicated)."""
+    e = build_ehyb(m, n_parts=4, vec_size=-(-m.n // 4 // 8) * 8)
+    stored = int((e.ell_vals != 0).sum() + (e.er_vals != 0).sum())
+    true_nnz = int((m.data != 0).sum())
+    assert stored == true_nnz
+
+
+@given(sparse_matrix(max_n=64))
+@settings(max_examples=15, deadline=None)
+def test_partition_is_a_bijection(m):
+    p = make_partition(m, method="bfs", n_parts=4,
+                       vec_size=-(-m.n // 4 // 8) * 8)
+    assert np.array_equal(np.sort(p.perm), np.arange(p.n_pad))
+    assert np.array_equal(np.sort(p.inv_perm), np.arange(p.n_pad))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_cg_solves_spd_system(seed):
+    """CG with EHYB matvec reaches the requested tolerance on SPD systems."""
+    rng = np.random.default_rng(seed)
+    n = 64
+    a = rng.standard_normal((n, n)) * 0.1
+    spd = a @ a.T + np.eye(n) * n * 0.5
+    spd[np.abs(spd) < 0.3] = 0.0                 # sparsify
+    spd = (spd + spd.T) / 2 + np.eye(n) * n      # keep SPD
+    rows, cols = np.nonzero(spd)
+    m = from_coo(n, rows, cols.astype(np.int32), spd[rows, cols])
+    dev = EHYBDevice.from_ehyb(build_ehyb(m, n_parts=2, vec_size=32))
+    b = jnp.asarray(rng.standard_normal(n), dtype=jnp.float32)
+    r = cg(lambda v: ehyb_spmv(dev, v), b, tol=1e-5, max_iters=500)
+    assert bool(r.converged)
+    # verify the solution against dense solve
+    x_ref = np.linalg.solve(spd, np.asarray(b, dtype=np.float64))
+    err = np.abs(np.asarray(r.x) - x_ref).max() / (np.abs(x_ref).max() + 1e-9)
+    assert err < 1e-2
