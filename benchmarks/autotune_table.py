@@ -1,0 +1,56 @@
+"""Per-matrix format-selection table (the framework deliverable).
+
+For every suite matrix: the autotuner's chosen format, its modeled bytes/nnz,
+every candidate's modeled bytes/nnz, and the pattern statistics that drove
+the choice (row-length CV, in-partition fraction, ELL padding ratio).  With
+``--measure`` the measured pass also times the top model-ranked XLA-backed
+candidates and reports the measured winner.
+
+  PYTHONPATH=src python -m benchmarks.run autotune_table
+  PYTHONPATH=src python benchmarks/autotune_table.py --measure
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro import autotune as at
+from repro.core import SUITE
+
+from .common import get_ehyb, get_matrix
+from .emit_util import emit_kv
+
+
+def main(measure: bool = False, val_bytes: int = 4):
+    out = {}
+    fmt_names = at.available_formats()
+    header = ["matrix", "chosen"] + [f"{f} B/nnz" for f in fmt_names]
+    colw = max(len(h) for h in header) + 2
+    print("".join(h.ljust(colw) for h in header))
+    for name in SUITE:
+        m = get_matrix(name)
+        e = get_ehyb(name)
+        shared = {"ehyb": e}
+        stats = at.matrix_stats(m)
+        result = at.autotune(m, mode="measure" if measure else "model",
+                             shared=shared)
+        bpn = {f: b / max(m.nnz, 1)
+               for f, b in result.modeled_bytes.items()}
+        row = [name, result.format] + [f"{bpn[f]:.2f}" for f in fmt_names]
+        print("".join(c.ljust(colw) for c in row))
+        derived = (f"chosen={result.format};"
+                   f"chosen_bytes_per_nnz={bpn[result.format]:.2f};"
+                   f"row_cv={stats.row_cv:.2f};"
+                   f"in_part={e.in_part_fraction:.3f};"
+                   f"padding={e.ell_padding_ratio:.2f}")
+        if result.measured_s:
+            meas = ";".join(f"{f}={t*1e6:.0f}us"
+                            for f, t in sorted(result.measured_s.items()))
+            derived += f";measured:{meas}"
+        emit_kv(f"autotune/{name}", derived)
+        out[name] = result
+    return out
+
+
+if __name__ == "__main__":
+    main(measure="--measure" in sys.argv)

@@ -9,9 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (SUITE, EHYBDevice, COODevice, ELLDevice, HYBDevice,
-                        build_buckets, build_ehyb, coo_spmv, ehyb_spmv,
-                        ehyb_spmv_buckets, ell_spmv, hyb_spmv)
+from repro import autotune as at
+from repro.core import SUITE, build_ehyb
 
 
 @lru_cache(maxsize=None)
@@ -38,22 +37,28 @@ def time_fn(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
     return float(np.median(ts))
 
 
-def build_formats(name: str, dtype=jnp.float32):
-    """All device formats for a suite matrix. Returns dict fmt -> (obj, fn)."""
+def build_formats(name: str, dtype=jnp.float32, include=None):
+    """Registered device formats for a suite matrix: fmt -> (obj, fn).
+
+    Routed through the ``repro.autotune`` registry — the same builders the
+    unified ``spmv()`` entry point dispatches to.  Interpreter-backed kernels
+    and the dense fallback are excluded from timing sweeps by default; ELL is
+    skipped where its padding is pathological (powerlaw), as classic HYB
+    exists precisely to avoid that case.
+    """
     m = get_matrix(name)
-    e = get_ehyb(name)
-    # cap pathological ELL widths (powerlaw) the way classic HYB does
-    formats = {
-        "csr": (COODevice.from_csr(m, dtype), coo_spmv),
-        "hyb": (HYBDevice.from_csr(m, dtype), hyb_spmv),
-        "ehyb": (EHYBDevice.from_ehyb(e, dtype), ehyb_spmv),
-    }
+    shared = {"ehyb": get_ehyb(name)}
     lens = m.row_lengths()
-    if lens.max() <= 4 * max(lens.mean(), 1):   # ELL sane only when regular
-        formats["ell"] = (ELLDevice.from_csr(m, dtype), ell_spmv)
-    b = build_buckets(e)
-    formats["ehyb_bucketed"] = (b, lambda bb, x: ehyb_spmv_buckets(bb, x,
-                                                                   dtype=dtype))
+    ell_sane = lens.max() <= 4 * max(lens.mean(), 1)
+    formats = {}
+    for fmt in (include or at.available_formats()):
+        spec = at.get_format(fmt)
+        if include is None:
+            if fmt == "dense" or spec.kernel != "xla":
+                continue
+            if fmt == "ell" and not ell_sane:
+                continue
+        formats[fmt] = spec.build(m, dtype, shared)
     return formats
 
 

@@ -5,6 +5,7 @@
   Fig 6          -> preprocessing_time (partition/reorder × single-SpMV)
   §3.4           -> bytes_model       (modeled HBM bytes; int16 ablation)
   §6             -> solver_bench      (SPAI-CG amortization)
+  framework      -> autotune_table    (per-matrix chosen format + bytes/nnz)
   framework      -> lm_step_bench     (smoke train/decode step times)
 
 Prints ``name,us_per_call,derived`` CSV lines.
@@ -14,7 +15,8 @@ import sys
 
 def main() -> None:
     mods = sys.argv[1:] or ["bytes_model", "preprocessing_time",
-                            "speedup_table", "solver_bench", "lm_step_bench"]
+                            "speedup_table", "solver_bench",
+                            "autotune_table", "lm_step_bench"]
     import importlib
 
     for name in mods:

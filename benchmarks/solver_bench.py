@@ -7,10 +7,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (COODevice, EHYBDevice, PRECONDITIONERS, build_ehyb,
-                        cg, coo_spmv, ehyb_spmv)
+from repro.core import PRECONDITIONERS, build_spmv, cg
 
-from .common import emit, get_matrix, time_fn
+from .common import emit, get_ehyb, get_matrix, time_fn
 
 
 def main():
@@ -20,18 +19,22 @@ def main():
         b = jnp.asarray(np.random.default_rng(1).standard_normal(m.n),
                         dtype=jnp.float32)
         pre = PRECONDITIONERS["spai"](m)
-        e = build_ehyb(m)
-        dev_e = EHYBDevice.from_ehyb(e)
-        dev_c = COODevice.from_csr(m)
+        e = get_ehyb(name)
         res = {}
-        for fmt, mv in (("ehyb", lambda v: ehyb_spmv(dev_e, v)),
-                        ("csr", lambda v: coo_spmv(dev_c, v))):
+        # the paper's experiment through the unified entry point: same
+        # Krylov loop, swap the SpMV operator (+ the autotuned pick)
+        ops = {fmt: build_spmv(m, format=fmt, shared={"ehyb": e})
+               for fmt in ("ehyb", "csr")}
+        ops["auto"] = build_spmv(m, format="auto", shared={"ehyb": e})
+        for fmt, op in ops.items():
+            mv = op.matvec
             t = time_fn(lambda bb: cg(mv, bb, pre, tol=1e-6, max_iters=500),
                         b, repeats=3, warmup=1)
             r = cg(mv, b, pre, tol=1e-6, max_iters=500)
             res[fmt] = (t, int(r.iters), float(r.residual))
+            chosen = f";chose={op.format}" if fmt == "auto" else ""
             emit(f"solver/{name}/{fmt}", t * 1e6,
-                 f"iters={int(r.iters)};res={float(r.residual):.2e}")
+                 f"iters={int(r.iters)};res={float(r.residual):.2e}{chosen}")
         amort = e.preprocess_seconds["total"] / max(
             res["csr"][0] - res["ehyb"][0], 1e-12)
         emit(f"solver/{name}/amortize", 0.0,

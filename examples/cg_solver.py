@@ -1,10 +1,10 @@
 """FEM iterative-solver example — the paper's target workload (§1, §6).
 
-Solves A·x = b with preconditioned CG where A comes from a 3-D elasticity-like
-FEM discretization, comparing the EHYB SpMV against the CSR stream path, and
-reports how many solver iterations amortize EHYB's preprocessing (the paper's
-§6 argument: SPAI-preconditioned transient simulation ⇒ preprocessing is
-amortized over thousands of SpMVs).
+Solves A·x = b with preconditioned CG through the unified entry point
+(``solve(A, b)`` autotunes the SpMV format; forcing ``format=`` reproduces
+the paper's EHYB-vs-CSR comparison), and reports how many solver iterations
+amortize EHYB's preprocessing (the paper's §6 argument: SPAI-preconditioned
+transient simulation ⇒ preprocessing is amortized over thousands of SpMVs).
 
   PYTHONPATH=src python examples/cg_solver.py
 """
@@ -15,8 +15,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (COODevice, EHYBDevice, PRECONDITIONERS, build_ehyb,
-                        cg, coo_spmv, ehyb_spmv, elasticity3d)
+from repro import autotune as at
+from repro.core import elasticity3d, solve
 
 
 def main():
@@ -24,32 +24,33 @@ def main():
     print(f"elasticity FEM system: n={m.n} nnz={m.nnz}")
     b = jnp.asarray(np.random.default_rng(1).standard_normal(m.n),
                     dtype=jnp.float32)
-    precond = PRECONDITIONERS["spai"](m)
 
-    e = build_ehyb(m)
-    dev_e = EHYBDevice.from_ehyb(e)
-    dev_c = COODevice.from_csr(m)
-    print(f"EHYB: {e.n_parts} partitions, in-partition "
-          f"{e.in_part_fraction:.1%}, preprocess "
-          f"{e.preprocess_seconds['total']*1e3:.1f} ms")
-
+    shared = {}
+    preprocess = None
     results = {}
-    for name, mv in (("ehyb", lambda v: ehyb_spmv(dev_e, v)),
-                     ("csr", lambda v: coo_spmv(dev_c, v))):
-        r = cg(mv, b, precond, tol=1e-6, max_iters=800)   # compile
+    for fmt in ("auto", "ehyb", "csr"):
+        r = solve(m, b, format=fmt, precond="spai", tol=1e-6,
+                  max_iters=800)                                   # compile
         jax.block_until_ready(r.x)
         t0 = time.perf_counter()
-        r = cg(mv, b, precond, tol=1e-6, max_iters=800)
+        r = solve(m, b, format=fmt, precond="spai", tol=1e-6, max_iters=800)
         jax.block_until_ready(r.x)
         dt = time.perf_counter() - t0
-        results[name] = dt
-        print(f"{name:5s}: {int(r.iters)} iters, residual "
+        results[fmt] = dt
+        print(f"{fmt:5s}: {int(r.iters)} iters, residual "
               f"{float(r.residual):.2e}, converged={bool(r.converged)}, "
               f"{dt*1e3:.1f} ms")
 
+    at.estimate_bytes(m, "ehyb", shared=shared)   # host EHYB for the stats
+    e = shared["ehyb"]
+    print(f"EHYB: {e.n_parts} partitions, in-partition "
+          f"{e.in_part_fraction:.1%}, preprocess "
+          f"{e.preprocess_seconds['total']*1e3:.1f} ms")
+    preprocess = e.preprocess_seconds["total"]
+
     gain = results["csr"] - results["ehyb"]
     if gain > 0:
-        n_amortize = e.preprocess_seconds["total"] / gain
+        n_amortize = preprocess / gain
         print(f"solves to amortize preprocessing: {n_amortize:.1f} "
               f"(transient FEM runs hundreds of solves → amortized)")
     else:

@@ -1,6 +1,10 @@
-"""Quickstart: build an EHYB matrix from a synthetic FEM problem, run SpMV
-through every path (jnp reference, Pallas kernel, width-bucketed variant),
-and validate against the dense oracle.
+"""Quickstart: the unified SpMV entry point.
+
+One call — ``spmv(A, x)`` — picks the best device format for the matrix via
+the autotuner's bytes-moved cost model, builds it, and runs the product.
+Below that, the EHYB machinery the paper contributes (partition → reorder →
+sliced-ELL + ER, Pallas kernel, width buckets) is still reachable by forcing
+a format or calling the builders directly.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,8 +12,8 @@ and validate against the dense oracle.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (EHYBDevice, build_buckets, build_ehyb, ehyb_spmv,
-                        ehyb_spmv_buckets, poisson3d)
+from repro import autotune as at
+from repro.core import build_spmv, poisson3d, spmv
 from repro.kernels import ehyb_spmv_pallas
 
 
@@ -19,34 +23,45 @@ def main():
     m = poisson3d(16)
     print(f"matrix: n={m.n} nnz={m.nnz}")
 
-    # 2. preprocessing: graph partition → reorder → sliced-ELL + ER
-    e = build_ehyb(m, method="bfs")
-    print(f"partitions={e.n_parts} vec_size={e.vec_size} "
-          f"in-partition={e.in_part_fraction:.1%} "
-          f"ell_width={e.ell_width} er_rows={e.er_rows}")
-    print(f"preprocess: {e.preprocess_seconds['total']*1e3:.1f} ms "
-          f"(partition {e.preprocess_seconds['partition']*1e3:.1f} ms)")
-    bm = e.bytes_moved(4)
-    print(f"modeled HBM bytes/SpMV: {bm['total']:,} "
-          f"(ELL {bm['ell']:,}, cached-x {bm['x_cache']:,}, ER {bm['er']:,})")
-
-    # 3. SpMV through each path
-    dev = EHYBDevice.from_ehyb(e)
+    # 2. the unified entry point: autotuned format selection + SpMV
     x = jnp.asarray(np.random.default_rng(0).standard_normal(m.n),
                     dtype=jnp.float32)
     y_ref = m.spmv(np.asarray(x, dtype=np.float64))
     scale = np.abs(y_ref).max()
 
-    y_jnp = np.asarray(ehyb_spmv(dev, x))
-    y_pal = np.asarray(ehyb_spmv_pallas(dev, x))        # interpret=True (CPU)
-    y_bkt = np.asarray(ehyb_spmv_buckets(build_buckets(e), x))
-    for name, y in (("jnp", y_jnp), ("pallas", y_pal), ("bucketed", y_bkt)):
-        print(f"{name:9s} max rel err = {np.abs(y - y_ref).max()/scale:.2e}")
+    y = np.asarray(spmv(m, x))
+    print(f"spmv(A, x)  max rel err = {np.abs(y - y_ref).max()/scale:.2e}")
 
-    # 4. SpMM (multi-RHS) — used by the sparse-FFN integration
+    op = build_spmv(m)           # the reusable operator behind spmv()
+    print(f"autotuner chose: {op.format}")
+    for fmt, b in sorted(op.tuning.modeled_bytes.items(), key=lambda kv: kv[1]):
+        print(f"  {fmt:14s} modeled {b/m.nnz:7.2f} bytes/nnz")
+
+    # 3. the paper's format, forced: EHYB preprocessing stats + both paths
+    op_e = build_spmv(m, format="ehyb")
+    e = op_e.obj  # EHYBDevice; host-side stats via the autotune registry
+    shared = {}
+    at.estimate_bytes(m, "ehyb", shared=shared)
+    host = shared["ehyb"]
+    print(f"EHYB: partitions={host.n_parts} vec_size={host.vec_size} "
+          f"in-partition={host.in_part_fraction:.1%} "
+          f"ell_width={host.ell_width} er_rows={host.er_rows}")
+    print(f"preprocess: {host.preprocess_seconds['total']*1e3:.1f} ms "
+          f"(partition {host.preprocess_seconds['partition']*1e3:.1f} ms)")
+    bm = host.bytes_moved(4)
+    print(f"modeled HBM bytes/SpMV: {bm['total']:,} "
+          f"(ELL {bm['ell']:,}, cached-x {bm['x_cache']:,}, ER {bm['er']:,})")
+
+    y_e = np.asarray(op_e(x))
+    y_pal = np.asarray(ehyb_spmv_pallas(e, x))          # interpret=True (CPU)
+    for name, yy in (("ehyb (jnp)", y_e), ("ehyb (pallas)", y_pal)):
+        print(f"{name:14s} max rel err = {np.abs(yy - y_ref).max()/scale:.2e}")
+
+    # 4. SpMM (multi-RHS) through the same operator — used by the sparse-FFN
+    #    and serving integrations
     xr = jnp.asarray(np.random.default_rng(1).standard_normal((m.n, 8)),
                      dtype=jnp.float32)
-    yr = np.asarray(ehyb_spmv_pallas(dev, xr))
+    yr = np.asarray(op(xr))
     print(f"SpMM out: {yr.shape}, finite: {np.isfinite(yr).all()}")
 
 

@@ -1,0 +1,31 @@
+"""OSKI-style format autotuning for the SpMV framework.
+
+The paper ships six competing device formats; this package is the machinery
+that picks the winner per matrix (the gap the SpMV surveys identify between a
+kernel demo and a usable framework):
+
+``registry``  — one :class:`FormatSpec` per device format: how to build it,
+                how to apply it, and its modeled HBM bytes per SpMV.
+``cost``      — sparsity-pattern statistics and the §3.4 bytes-moved cost
+                model evaluated per format *without* building device arrays.
+``tuner``     — ``autotune(A)``: rank by modeled bytes, optionally time the
+                top candidates on-device, cache the choice keyed by a
+                sparsity-pattern hash.
+
+The user-facing entry point is ``repro.core.spmv.spmv(A, x)`` /
+``build_spmv(A)``, which route here lazily.
+"""
+
+from .registry import (FORMATS, FormatSpec, available_formats, build_format,
+                       get_format, register_format)
+from .cost import (MatrixStats, estimate_bytes, matrix_key, matrix_stats,
+                   model_table, pattern_hash, rank_formats)
+from .tuner import TuneResult, autotune, clear_cache, tune_cache_info
+
+__all__ = [
+    "FORMATS", "FormatSpec", "available_formats", "build_format",
+    "get_format", "register_format",
+    "MatrixStats", "estimate_bytes", "matrix_key", "matrix_stats",
+    "model_table", "pattern_hash", "rank_formats",
+    "TuneResult", "autotune", "clear_cache", "tune_cache_info",
+]

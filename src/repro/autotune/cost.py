@@ -1,0 +1,104 @@
+"""Sparsity-pattern statistics and the bytes-moved cost model.
+
+SpMV is memory-bound on every target the paper considers, so modeled HBM
+bytes per SpMV (EHYB §3.4 accounting) rank formats without touching the
+device.  Formats that gather x *uncached* have data-dependent x traffic; we
+bracket it between the two classical bounds — perfect cache (each x entry
+read once) and no cache (one read per nnz) — and rank on the midpoint, the
+same treatment for every uncached format so the bracket cancels out of
+within-family comparisons.  EHYB's cached reads are exact (one VMEM fill per
+partition): that determinism is the paper's point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core.matrices import SparseCSR
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixStats:
+    """Pattern-only statistics that drive the cost model."""
+
+    n: int
+    nnz: int
+    avg_row: float
+    max_row: int
+    row_cv: float            # row-length coefficient of variation (std/mean)
+    density: float
+    empty_rows: int
+
+    @classmethod
+    def from_csr(cls, m: SparseCSR) -> "MatrixStats":
+        lens = m.row_lengths()
+        avg = float(lens.mean()) if m.n else 0.0
+        return cls(
+            n=m.n, nnz=m.nnz, avg_row=avg,
+            max_row=int(lens.max()) if m.n else 0,
+            row_cv=float(lens.std() / max(avg, 1e-12)) if m.n else 0.0,
+            density=m.nnz / max(m.n * m.n, 1),
+            empty_rows=int((lens == 0).sum()),
+        )
+
+
+def matrix_stats(m: SparseCSR) -> MatrixStats:
+    return MatrixStats.from_csr(m)
+
+
+def _x_stream_bytes(stats: MatrixStats, val_bytes: int) -> int:
+    """Midpoint of the [perfect-cache, no-cache] x-traffic bracket."""
+    return (stats.n + stats.nnz) * val_bytes // 2
+
+
+def pattern_hash(m: SparseCSR) -> str:
+    """Stable hash of the sparsity pattern (values excluded: format selection
+    depends only on where the entries are, not what they are)."""
+    h = hashlib.sha256()
+    h.update(np.int64(m.n).tobytes())
+    h.update(np.ascontiguousarray(m.indptr, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(m.indices, dtype=np.int32).tobytes())
+    return h.hexdigest()[:16]
+
+
+def matrix_key(m: SparseCSR) -> str:
+    """Pattern *and* values hash — the key for caches that hold built device
+    arrays (unlike tuning decisions, those depend on the entry values)."""
+    h = hashlib.sha256()
+    h.update(pattern_hash(m).encode())
+    h.update(np.ascontiguousarray(m.data).tobytes())
+    return h.hexdigest()[:16]
+
+
+def estimate_bytes(m: SparseCSR, fmt: str, val_bytes: int = 4,
+                   shared: Optional[dict] = None,
+                   stats: Optional[MatrixStats] = None) -> int:
+    """Modeled HBM bytes of one SpMV of ``m`` in format ``fmt``."""
+    from .registry import get_format
+
+    return int(get_format(fmt).model(m, stats or matrix_stats(m), val_bytes,
+                                     {} if shared is None else shared))
+
+
+def model_table(m: SparseCSR, val_bytes: int = 4,
+                candidates=None, shared: Optional[dict] = None
+                ) -> Dict[str, int]:
+    """Per-format modeled bytes; one shared EHYB build serves the family."""
+    from .registry import available_formats
+
+    shared = {} if shared is None else shared
+    stats = matrix_stats(m)
+    return {f: estimate_bytes(m, f, val_bytes, shared, stats)
+            for f in (candidates or available_formats())}
+
+
+def rank_formats(m: SparseCSR, val_bytes: int = 4, candidates=None,
+                 shared: Optional[dict] = None) -> list[tuple[str, int]]:
+    """Formats sorted by modeled bytes, cheapest first (ties: by name, so
+    rankings are deterministic)."""
+    table = model_table(m, val_bytes, candidates, shared)
+    return sorted(table.items(), key=lambda kv: (kv[1], kv[0]))

@@ -1,0 +1,199 @@
+"""Format registry: every device SpMV format behind one uniform interface.
+
+A :class:`FormatSpec` bundles the three things the framework needs to treat a
+format as a candidate:
+
+* ``build(m, dtype, shared)``  — construct the device container and return
+  ``(obj, apply)`` with ``apply(obj, x)`` the jitted SpMV/SpMM path;
+* ``model(m, stats, val_bytes, shared)`` — modeled HBM bytes of one SpMV in
+  that format (the paper's §3.4 accounting), computable from the sparsity
+  pattern alone — no device arrays are allocated for losers;
+* ``kernel`` — which execution engine backs it ("xla" or
+  "pallas-interpret"); the tuner's measured pass skips interpreter-backed
+  kernels on CPU where their timings are meaningless.
+
+The EHYB-family formats share one host-side EHYB build per matrix via the
+``shared`` dict (allocated per autotune/build call), so ranking all six
+candidates costs one partitioning pass, not three.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from ..core.ehyb import EHYB, build_buckets, build_ehyb, pack_staircase
+from ..core.matrices import SparseCSR
+from ..core.spmv import (COODevice, EHYBDevice, EHYBPackedDevice, ELLDevice,
+                         HYBDevice, coo_spmv, ehyb_spmv, ehyb_spmv_buckets,
+                         ell_spmv, hyb_spmv)
+from .cost import MatrixStats, _x_stream_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatSpec:
+    name: str
+    build: Callable[..., tuple]        # (m, dtype, shared) -> (obj, apply)
+    model: Callable[..., int]          # (m, stats, val_bytes, shared) -> bytes
+    kernel: str = "xla"                # "xla" | "pallas-interpret"
+    description: str = ""
+
+
+FORMATS: Dict[str, FormatSpec] = {}
+
+
+def register_format(spec: FormatSpec) -> FormatSpec:
+    if spec.name in FORMATS:
+        raise ValueError(f"format {spec.name!r} already registered")
+    FORMATS[spec.name] = spec
+    return spec
+
+
+def get_format(name: str) -> FormatSpec:
+    try:
+        return FORMATS[name]
+    except KeyError:
+        raise KeyError(f"unknown SpMV format {name!r}; "
+                       f"registered: {sorted(FORMATS)}") from None
+
+
+def available_formats() -> list[str]:
+    return sorted(FORMATS)
+
+
+def build_format(name: str, m: SparseCSR, dtype=None,
+                 shared: Optional[dict] = None) -> tuple:
+    """Build ``name``'s device container for ``m``; returns (obj, apply)."""
+    import jax.numpy as jnp
+
+    return get_format(name).build(m, dtype or jnp.float32, shared or {})
+
+
+# ---------------------------------------------------------------------------
+# shared host-side EHYB build (one partitioning pass for the whole family)
+# ---------------------------------------------------------------------------
+
+from ..core.cache import BoundedCache
+
+_HOST_EHYB = BoundedCache(maxsize=16)   # matrix_key -> host EHYB
+
+
+def shared_ehyb(m: SparseCSR, shared: dict) -> EHYB:
+    """Host EHYB for ``m``: per-call ``shared`` dict first, then a bounded
+    global memo — so the cost model, the device builders, and any caller
+    asking for stats all reuse one partitioning pass per matrix."""
+    if "ehyb" not in shared:
+        from .cost import matrix_key
+
+        key = matrix_key(m)
+        e = _HOST_EHYB.get(key)
+        if e is None:
+            e = _HOST_EHYB[key] = build_ehyb(m)
+        shared["ehyb"] = e
+    return shared["ehyb"]
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+def _build_csr(m, dtype, shared):
+    return COODevice.from_csr(m, dtype), coo_spmv
+
+
+def _build_ell(m, dtype, shared):
+    return ELLDevice.from_csr(m, dtype), ell_spmv
+
+
+def _build_hyb(m, dtype, shared):
+    return HYBDevice.from_csr(m, dtype), hyb_spmv
+
+
+def _build_ehyb(m, dtype, shared):
+    return EHYBDevice.from_ehyb(shared_ehyb(m, shared), dtype), ehyb_spmv
+
+
+def _build_ehyb_bucketed(m, dtype, shared):
+    b = build_buckets(shared_ehyb(m, shared))
+    return b, lambda bb, x: ehyb_spmv_buckets(bb, x, dtype=dtype)
+
+
+def _build_ehyb_packed(m, dtype, shared):
+    from ..kernels.ops import ehyb_spmv_packed_pallas
+
+    pk = pack_staircase(shared_ehyb(m, shared))
+    return (EHYBPackedDevice.from_packed(pk, dtype),
+            lambda d, x: ehyb_spmv_packed_pallas(d, x, interpret=True))
+
+
+def _build_dense(m, dtype, shared):
+    import jax.numpy as jnp
+
+    a = jnp.asarray(m.to_dense(), dtype=dtype)
+    return a, lambda aa, x: aa @ x
+
+
+# ---------------------------------------------------------------------------
+# byte models (one SpMV, fp-width ``val_bytes``); x-stream bounds in cost.py
+# ---------------------------------------------------------------------------
+
+def _model_csr(m, stats: MatrixStats, vb: int, shared) -> int:
+    # COO stream realization of CSR semantics: rows + cols int32 per nnz
+    idx = 8 * stats.nnz
+    return idx + vb * stats.nnz + _x_stream_bytes(stats, vb) + vb * stats.n
+
+
+def _model_ell(m, stats: MatrixStats, vb: int, shared) -> int:
+    stored = stats.n * stats.max_row
+    return stored * (vb + 4) + _x_stream_bytes(stats, vb) + vb * stats.n
+
+
+def _model_hyb(m, stats: MatrixStats, vb: int, shared) -> int:
+    lens = m.row_lengths()
+    k = max(int(np.quantile(lens, 0.9)) if stats.n else 1, 1)
+    spill = int(np.maximum(lens - k, 0).sum())
+    ell = stats.n * k * (vb + 4)
+    coo = spill * (vb + 8)
+    return ell + coo + _x_stream_bytes(stats, vb) + vb * stats.n
+
+
+def _model_ehyb(m, stats, vb, shared) -> int:
+    return shared_ehyb(m, shared).bytes_moved(vb, layout="tile")["total"]
+
+
+def _model_ehyb_bucketed(m, stats, vb, shared) -> int:
+    return build_buckets(shared_ehyb(m, shared)).bytes_moved(vb)["total"]
+
+
+def _model_ehyb_packed(m, stats, vb, shared) -> int:
+    return shared_ehyb(m, shared).bytes_moved(vb, layout="packed")["total"]
+
+
+def _model_dense(m, stats, vb, shared) -> int:
+    return stats.n * stats.n * vb + 2 * stats.n * vb
+
+
+register_format(FormatSpec(
+    "csr", _build_csr, _model_csr,
+    description="COO/CSR gather + segment-sum stream (paper's baseline)"))
+register_format(FormatSpec(
+    "ell", _build_ell, _model_ell,
+    description="ELLPACK padded to the global max row width"))
+register_format(FormatSpec(
+    "hyb", _build_hyb, _model_hyb,
+    description="classic HYB (Bell & Garland): ELL to 90th pct + COO spill"))
+register_format(FormatSpec(
+    "ehyb", _build_ehyb, _model_ehyb,
+    description="EHYB uniform tiles, uint16 local cols, explicit x cache"))
+register_format(FormatSpec(
+    "ehyb_bucketed", _build_ehyb_bucketed, _model_ehyb_bucketed,
+    description="EHYB with width-bucketed partition tiles"))
+register_format(FormatSpec(
+    "ehyb_packed", _build_ehyb_packed, _model_ehyb_packed,
+    kernel="pallas-interpret",
+    description="EHYB packed staircase (Pallas kernel v2)"))
+register_format(FormatSpec(
+    "dense", _build_dense, _model_dense,
+    description="dense matmul (wins only on tiny/near-dense matrices)"))

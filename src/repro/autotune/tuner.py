@@ -1,0 +1,114 @@
+"""The autotuner: model-ranked, optionally measured, pattern-hash cached.
+
+``autotune(A)`` is OSKI's tuning loop adapted to this framework:
+
+1. **cost-model pass** — rank every registered format by modeled HBM bytes
+   (``cost.rank_formats``; one shared EHYB host build serves the family);
+2. **measured pass** (``mode="measure"``) — build the ``top_k`` model-ranked
+   candidates and time their jitted SpMV on the current backend, picking the
+   fastest.  Interpreter-backed kernels are skipped on CPU where their
+   timings say nothing about device performance;
+3. **cache** — the decision is memoized under (pattern hash, dtype, mode,
+   candidate set): re-tuning the same sparsity pattern is a dict lookup, and
+   a fixed pattern hash always yields the same selection (pinned by
+   tests/test_autotune.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core.cache import BoundedCache
+from ..core.matrices import SparseCSR
+from .cost import pattern_hash, rank_formats
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    format: str                       # the winner
+    key: str                          # sparsity-pattern hash
+    mode: str                         # "model" | "measure"
+    modeled_bytes: Dict[str, int]     # per-candidate modeled HBM bytes
+    measured_s: Optional[Dict[str, float]]  # per-timed-candidate seconds
+
+
+_CACHE = BoundedCache(maxsize=128)    # TuneResults are small host dicts
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def tune_cache_info() -> dict:
+    return {"entries": len(_CACHE), "keys": sorted(k[0] for k in _CACHE.keys())}
+
+
+def _time_spmv(apply, obj, x, repeats: int = 3, warmup: int = 1) -> float:
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(apply(obj, x))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(apply(obj, x))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
+             candidates=None, top_k: int = 3, use_cache: bool = True,
+             shared: Optional[dict] = None) -> TuneResult:
+    """Select the SpMV format for ``m``; see module docstring for the passes.
+
+    ``shared`` (optional dict) carries the host EHYB build across the cost
+    model, the measured pass, and the caller's subsequent ``build_format`` —
+    one partitioning pass end to end.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from .registry import available_formats, get_format
+
+    if mode not in ("model", "measure"):
+        raise ValueError(f"mode must be 'model' or 'measure', got {mode!r}")
+    dtype = dtype or jnp.float32
+    cand = tuple(candidates or available_formats())
+    key = pattern_hash(m)
+    cache_key = (key, jnp.dtype(dtype).name, mode, cand)
+    if use_cache and cache_key in _CACHE:
+        return _CACHE[cache_key]
+
+    shared = {} if shared is None else shared
+    val_bytes = jnp.dtype(dtype).itemsize
+    ranked = rank_formats(m, val_bytes, cand, shared)
+    modeled = dict(ranked)
+    # the winner must be executable efficiently on the current backend:
+    # interpreter-backed kernels are ranked (their modeled bytes are the TPU
+    # story) but never *selected* on CPU, where they would run in Python
+    on_cpu = jax.default_backend() == "cpu"
+    eligible = [f for f, _ in ranked
+                if not (on_cpu and get_format(f).kernel != "xla")]
+    winner = (eligible or [ranked[0][0]])[0]
+    measured = None
+
+    if mode == "measure":
+        timed = eligible[:top_k]
+        if timed:
+            x = jnp.asarray(
+                np.random.default_rng(0).standard_normal(m.n), dtype=dtype)
+            measured = {}
+            for f in timed:
+                obj, apply = get_format(f).build(m, dtype, shared)
+                measured[f] = _time_spmv(apply, obj, x)
+            winner = min(sorted(measured), key=measured.get)
+
+    result = TuneResult(format=winner, key=key, mode=mode,
+                        modeled_bytes=modeled, measured_s=measured)
+    if use_cache:
+        _CACHE[cache_key] = result
+    return result

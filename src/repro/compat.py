@@ -1,0 +1,42 @@
+"""Version-compat shims over the moving parts of the jax API.
+
+The repo targets the jax the container ships (0.4.x today) while staying
+forward-compatible with the 0.5+/0.6+ API renames:
+
+* ``jax.sharding.AxisType`` (new) vs no axis types at all (old) — meshes are
+  built through :func:`make_mesh`, which passes ``axis_types`` only when the
+  running jax understands it.
+* ``jax.shard_map(..., check_vma=...)`` (new) vs
+  ``jax.experimental.shard_map.shard_map(..., check_rep=...)`` (old) — use
+  :func:`shard_map`, which maps the replication-check flag to whichever
+  keyword exists.
+
+Keeping every call site on these two helpers is what the sharding tests pin.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types when the API supports them."""
+    axis_type = getattr(getattr(jax, "sharding", None), "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(axis_type.Auto,) * len(axis_names))
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_rep: bool = False):
+    """Dispatch to ``jax.shard_map`` (new) or experimental shard_map (old)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_rep)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_rep)

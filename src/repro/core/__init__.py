@@ -14,10 +14,10 @@ from .partition import (Partition, bfs_partition, choose_vec_size,
 from .ehyb import (EHYB, EHYBBuckets, PackedEHYB, build_buckets,
                    build_ehyb, pack_staircase)
 from .spmv import (COODevice, EHYBDevice, EHYBPackedDevice, ELLDevice,
-                   HYBDevice, coo_spmv,
+                   HYBDevice, SpMVOperator, build_spmv, coo_spmv,
                    csr_spmv, dense_spmv, ehyb_spmv, ehyb_spmv_buckets,
-                   ell_spmv, hyb_spmv)
-from .solver import PRECONDITIONERS, SolveResult, bicgstab, cg
+                   ell_spmv, hyb_spmv, spmv)
+from .solver import PRECONDITIONERS, SolveResult, bicgstab, cg, solve
 
 __all__ = [
     "SUITE", "SparseCSR", "elasticity3d", "from_coo", "poisson3d",
@@ -26,8 +26,9 @@ __all__ = [
     "natural_partition",
     "EHYB", "EHYBBuckets", "PackedEHYB", "build_buckets", "build_ehyb",
     "pack_staircase", "EHYBPackedDevice",
-    "COODevice", "EHYBDevice", "ELLDevice", "HYBDevice", "coo_spmv",
+    "COODevice", "EHYBDevice", "ELLDevice", "HYBDevice", "SpMVOperator",
+    "build_spmv", "coo_spmv",
     "csr_spmv", "dense_spmv", "ehyb_spmv", "ehyb_spmv_buckets", "ell_spmv",
-    "hyb_spmv",
-    "PRECONDITIONERS", "SolveResult", "bicgstab", "cg",
+    "hyb_spmv", "spmv",
+    "PRECONDITIONERS", "SolveResult", "bicgstab", "cg", "solve",
 ]

@@ -26,10 +26,43 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .spmv import EHYBDevice
+from ..compat import shard_map
+from .ehyb import EHYBBuckets
+from .spmv import EHYBDevice, SpMVOperator
 
 
-def build_dist_spmv(dev: EHYBDevice, mesh, axis: str = "data"):
+def build_dist_spmv(dev, mesh, axis: str = "data"):
+    """Distributed SpMV over ``mesh[axis]``.
+
+    ``dev`` may be an :class:`EHYBDevice`; a host ``SparseCSR`` (routed
+    through ``build_spmv(format="ehyb")`` — distribution requires the
+    partition-local format); or a unified :class:`SpMVOperator` whose
+    container the EHYB tiling can be recovered from (``ehyb`` directly,
+    ``ehyb_bucketed`` via its host build).  Operators in other formats
+    (e.g. an autotuned ``csr`` winner) carry no partition structure — pass
+    the SparseCSR, or ``build_spmv(A, format="ehyb")``, instead.
+    """
+    if isinstance(dev, SpMVOperator):
+        obj = dev.obj
+        if isinstance(obj, EHYBDevice):
+            dev = obj
+        elif isinstance(obj, EHYBBuckets):
+            dev = EHYBDevice.from_ehyb(obj.base)
+        else:
+            raise TypeError(
+                f"build_dist_spmv cannot recover EHYB partition structure "
+                f"from a {dev.format!r} operator; pass the SparseCSR or "
+                f"build_spmv(A, format='ehyb')")
+    if not isinstance(dev, EHYBDevice):
+        from .matrices import SparseCSR
+        from .spmv import build_spmv
+
+        if isinstance(dev, SparseCSR):
+            dev = build_spmv(dev, format="ehyb").obj
+        else:
+            raise TypeError(
+                f"build_dist_spmv needs an EHYB-backed matrix, got "
+                f"{type(dev).__name__}")
     n_dev = mesh.shape[axis]
     if dev.n_parts % n_dev:
         raise ValueError(f"n_parts {dev.n_parts} must divide devices {n_dev}")
@@ -59,12 +92,12 @@ def build_dist_spmv(dev: EHYBDevice, mesh, axis: str = "data"):
             scatter_dimension=0, tiled=True)
         return y_parts + y_sc.reshape(y_parts.shape)
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None, None), P(axis, None, None),
                   P(axis, None, None), P(axis, None), P(axis, None),
                   P(axis)),
-        out_specs=P(axis, None, None), check_vma=False)
+        out_specs=P(axis, None, None))
 
     @jax.jit
     def spmv(x):

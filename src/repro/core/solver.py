@@ -150,3 +150,34 @@ def bicgstab(matvec: Callable, b: jnp.ndarray,
     x, r, k = out[0], out[1], out[-1]
     res = jnp.linalg.norm(r) / bnorm
     return SolveResult(x=x, iters=k, residual=res, converged=res <= tol)
+
+
+SOLVERS = {"cg": cg, "bicgstab": bicgstab}
+
+from .cache import BoundedCache
+
+_PRE_CACHE = BoundedCache(maxsize=16)
+
+
+def solve(a: SparseCSR, b: jnp.ndarray, *, method: str = "cg",
+          precond: str = "jacobi", format: str = "auto",
+          tol: float = 1e-6, max_iters: int = 500) -> SolveResult:
+    """Solve ``A x = b`` through the unified SpMV entry point.
+
+    The matrix goes through ``build_spmv`` (autotuned format selection by
+    default), and the chosen operator's matvec drives the Krylov loop — the
+    paper's experiment (same solver, swap the SpMV) as a one-liner.  Both the
+    operator and the preconditioner are memoized per matrix, so repeated
+    solves reuse one XLA compilation of the whole Krylov loop.
+    """
+    from .. import autotune as at
+    from .spmv import cached_spmv_operator
+
+    if method not in SOLVERS:
+        raise ValueError(f"unknown method {method!r}; have {sorted(SOLVERS)}")
+    op = cached_spmv_operator(a, format=format, dtype=b.dtype)
+    pre_key = (at.matrix_key(a), precond)
+    pre = _PRE_CACHE.get(pre_key)
+    if pre is None:
+        pre = _PRE_CACHE[pre_key] = PRECONDITIONERS[precond](a)
+    return SOLVERS[method](op.matvec, b, pre, tol=tol, max_iters=max_iters)

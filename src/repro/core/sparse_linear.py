@@ -1,26 +1,32 @@
-"""EHYBLinear — the paper's operator as an LM layer.
+"""SparseLinear — a pruned weight matrix as an LM layer, any format.
 
-A magnitude-pruned weight matrix is stored in EHYB and applied with the
-cached SpMM path: the *columns* of W (= input features) are partitioned, and
-each partition's slice of the activation vector plays the role of the paper's
-cached input vector.  This is integration point #2 of DESIGN.md §3 (sparse
-FFN for pruned models; see examples/sparse_ffn_lm.py).
+A magnitude-pruned weight matrix is stored in whichever registered SpMV
+format the autotuner picks (or a forced one) and applied with the unified
+SpMM path: the *columns* of W (= input features) are partitioned, and — in
+the EHYB family — each partition's slice of the activation vector plays the
+role of the paper's cached input vector.  This is integration point #2 of
+DESIGN.md §3 (sparse FFN for pruned models; see examples/sparse_ffn_lm.py)
+and the sparse-decode-head option of ``serve.engine``.
 
-EHYB is a square format (row/col vertices share the partition); rectangular
+The formats are square (row/col vertices share the partition); rectangular
 weights are embedded in a max(d_in, d_out) square with empty padding rows —
 the padding contributes no entries and its x-slices are never referenced.
+
+``EHYBLinear`` (the original class) is ``SparseLinear`` pinned to the EHYB
+format, keeping its host-side ``.ehyb`` handle for bytes accounting.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from .ehyb import EHYB, build_ehyb
+from .ehyb import EHYB
 from .matrices import SparseCSR, from_coo
-from .spmv import EHYBDevice, ehyb_spmv
+from .spmv import SpMVOperator, build_spmv
 
 
 def prune_to_csr(w: np.ndarray, density: float) -> SparseCSR:
@@ -35,34 +41,59 @@ def prune_to_csr(w: np.ndarray, density: float) -> SparseCSR:
 
 
 @dataclasses.dataclass
-class EHYBLinear:
+class SparseLinear:
     d_in: int
     d_out: int
-    ehyb: EHYB
-    dev: EHYBDevice
+    op: SpMVOperator
     density: float
+    csr: Optional[SparseCSR] = None   # host pattern (bytes accounting)
+    ehyb: Optional[EHYB] = None       # host EHYB when the format built one
+
+    @classmethod
+    def from_dense(cls, w: np.ndarray, density: float = 0.1,
+                   format: str = "auto", dtype=jnp.float32,
+                   partition_method: Optional[str] = None,
+                   **build_kw) -> "SparseLinear":
+        d_out, d_in = w.shape
+        csr = prune_to_csr(w, density)
+        shared: dict = {}
+        if partition_method is not None:      # non-default partitioner for
+            from .ehyb import build_ehyb      # the EHYB-family formats
+
+            shared["ehyb"] = build_ehyb(csr, method=partition_method)
+        op = build_spmv(csr, format=format, dtype=dtype, shared=shared,
+                        **build_kw)
+        return cls(d_in=d_in, d_out=d_out, op=op, density=density,
+                   csr=csr, ehyb=shared.get("ehyb"))
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        """x: (..., d_in) → (..., d_out) via the unified SpMM path."""
+        lead = x.shape[:-1]
+        xt = x.reshape(-1, self.d_in).T                  # (d_in, T)
+        n = self.op.n
+        if n > self.d_in:
+            xt = jnp.concatenate(
+                [xt, jnp.zeros((n - self.d_in, xt.shape[1]), xt.dtype)], 0)
+        yt = self.op(xt)                                 # (n, T)
+        return yt[: self.d_out].T.reshape(*lead, self.d_out)
+
+    def bytes_vs_dense(self, val_bytes: int = 4) -> dict:
+        from .. import autotune as at
+
+        dense = self.d_in * self.d_out * val_bytes
+        if self.ehyb is not None:
+            sparse = self.ehyb.bytes_moved(val_bytes)["total"]
+        else:
+            sparse = at.estimate_bytes(self.csr, self.op.format, val_bytes)
+        return {"dense": dense, "format": self.op.format,
+                "sparse": sparse, "ehyb": sparse, "ratio": sparse / dense}
+
+
+class EHYBLinear(SparseLinear):
+    """The paper's layer: SparseLinear pinned to the EHYB format."""
 
     @classmethod
     def from_dense(cls, w: np.ndarray, density: float = 0.1,
                    method: str = "bfs", dtype=jnp.float32) -> "EHYBLinear":
-        d_out, d_in = w.shape
-        csr = prune_to_csr(w, density)
-        e = build_ehyb(csr, method=method)
-        return cls(d_in=d_in, d_out=d_out, ehyb=e,
-                   dev=EHYBDevice.from_ehyb(e, dtype=dtype), density=density)
-
-    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
-        """x: (..., d_in) → (..., d_out) via cached SpMM."""
-        lead = x.shape[:-1]
-        xt = x.reshape(-1, self.d_in).T                  # (d_in, T)
-        n = self.dev.n
-        if n > self.d_in:
-            xt = jnp.concatenate(
-                [xt, jnp.zeros((n - self.d_in, xt.shape[1]), xt.dtype)], 0)
-        yt = ehyb_spmv(self.dev, xt)                     # (n, T)
-        return yt[: self.d_out].T.reshape(*lead, self.d_out)
-
-    def bytes_vs_dense(self, val_bytes: int = 4) -> dict:
-        dense = self.d_in * self.d_out * val_bytes
-        sparse = self.ehyb.bytes_moved(val_bytes)["total"]
-        return {"dense": dense, "ehyb": sparse, "ratio": sparse / dense}
+        return super().from_dense(w, density, format="ehyb", dtype=dtype,
+                                  partition_method=method)

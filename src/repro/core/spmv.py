@@ -290,3 +290,99 @@ def ehyb_spmv_buckets(b: EHYBBuckets, x: jnp.ndarray,
 
 def dense_spmv(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     return a @ x
+
+
+# ---------------------------------------------------------------------------
+# unified entry point: spmv(A, x) / build_spmv(A)
+# ---------------------------------------------------------------------------
+# One API over every registered format.  Format selection, the cost model and
+# the measured pass live in ``repro.autotune`` (imported lazily so host-side
+# preprocessing stays importable without pulling the registry in).  Every
+# consumer — solvers, the sparse linear layer, serving, benchmarks, the
+# examples — routes through here; later PRs (sharding, batching,
+# multi-backend) plug new formats into the registry and inherit the callers.
+
+@dataclasses.dataclass
+class SpMVOperator:
+    """A sparse matrix bound to its selected device format.
+
+    ``op(x)`` runs the SpMV/SpMM; ``op.format`` names the chosen format;
+    ``op.tuning`` (when selected by the autotuner) holds the full
+    :class:`repro.autotune.TuneResult` with the per-format modeled bytes.
+    """
+
+    format: str
+    obj: object                       # device container of ``format``
+    apply: callable                   # (obj, x) -> y
+    n: int
+    nnz: int
+    tuning: object = None             # TuneResult | None
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.apply(self.obj, x)
+
+    @property
+    def matvec(self):
+        """The bare ``x -> y`` closure (what the Krylov solvers take)."""
+        return self.__call__
+
+
+def build_spmv(a, format: str = "auto", dtype=None, *, mode: str = "model",
+               candidates=None, shared: dict = None) -> SpMVOperator:
+    """Build the unified SpMV operator for CSR matrix ``a``.
+
+    format="auto"    — pick via the autotuner (cost model; ``mode="measure"``
+                       additionally times the top candidates on-device);
+    format=<name>    — force a registered format ("csr", "ell", "hyb",
+                       "ehyb", "ehyb_bucketed", "ehyb_packed", "dense").
+    """
+    from .. import autotune as at
+
+    dtype = dtype or jnp.float32
+    shared = {} if shared is None else shared   # carries the host EHYB build
+    tuning = None
+    if format == "auto":
+        tuning = at.autotune(a, dtype, mode=mode, candidates=candidates,
+                             shared=shared)
+        format = tuning.format
+    obj, apply = at.get_format(format).build(a, dtype, shared)
+    return SpMVOperator(format=format, obj=obj, apply=apply, n=a.n,
+                        nnz=a.nnz, tuning=tuning)
+
+
+from .cache import BoundedCache
+
+_OP_CACHE = BoundedCache(maxsize=16)
+
+
+def cached_spmv_operator(a, format: str = "auto", dtype=None) -> SpMVOperator:
+    """``build_spmv`` memoized under the value-inclusive matrix hash (LRU,
+    bounded — transient workloads that update values per step evict old
+    operators instead of leaking device arrays).
+
+    Returning the *same* operator object for the same (matrix, format,
+    dtype) keeps its matvec jit-cache-stable: repeated ``spmv()``/``solve()``
+    calls neither rebuild device arrays nor retrigger XLA compilation.
+    """
+    from .. import autotune as at
+
+    dtype = dtype or jnp.float32
+    key = (at.matrix_key(a), format, jnp.dtype(dtype).name)
+    op = _OP_CACHE.get(key)
+    if op is None:
+        op = _OP_CACHE[key] = build_spmv(a, format, dtype)
+    return op
+
+
+def spmv(a, x: jnp.ndarray, format: str = "auto", dtype=None) -> jnp.ndarray:
+    """Unified SpMV: ``y = A @ x`` for a SparseCSR ``A`` in the best format.
+
+    The built operator is cached under the sparsity-pattern hash, so repeated
+    calls on the same pattern pay one build.  Hot loops should hold the
+    operator from :func:`build_spmv` directly (no per-call hashing).
+    ``x`` may be (n,) or (n, R); dtype defaults to ``x.dtype``.
+    """
+    if isinstance(a, SpMVOperator):
+        return a(x)
+    x = jnp.asarray(x)
+    return cached_spmv_operator(a, format, dtype or x.dtype)(x)

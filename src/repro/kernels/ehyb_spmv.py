@@ -100,8 +100,10 @@ def _ehyb_packed_kernel(x_ref, vals_ref, cols_ref, starts_ref, rows_ref,
     for k in range(w):                             # static unroll over columns
         off = starts_ref[0, k]
         rk = rows_ref[0, k]
-        vals = pl.load(vals_ref, (0, pl.dslice(off, v)))       # (V,)
-        cols = pl.load(cols_ref, (0, pl.dslice(off, v)))
+        # leading index must be a Slice: jax<=0.4 interpret-mode discharge
+        # chokes on a bare python-int indexer
+        vals = pl.load(vals_ref, (pl.dslice(0, 1), pl.dslice(off, v)))[0]
+        cols = pl.load(cols_ref, (pl.dslice(0, 1), pl.dslice(off, v)))[0]
         mask = row_iota < rk
         g = jnp.take(x, cols.astype(jnp.int32), axis=0)        # (V, R)
         contrib = jnp.where(mask, vals.astype(jnp.float32),

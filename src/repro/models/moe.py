@@ -144,7 +144,7 @@ def _token_split_axes(t, mesh, batch_axes_, include_model=True):
 def _apply_moe_dist(p, x, cfg, mesh, batch_axes_):
     from jax.sharding import PartitionSpec as P
 
-    shard_map = jax.shard_map
+    from ..compat import shard_map
     dt = cdtype(cfg)
     b, s, d = x.shape
     t = b * s
@@ -191,7 +191,6 @@ def _apply_moe_dist(p, x, cfg, mesh, batch_axes_):
                    P(split if split else None),
                    P(split if split else None),
                    P(None), P(None)),
-        check_vma=False,
     )(xt, p["router"].astype(dt))
 
     if not use_a2a:
@@ -215,7 +214,6 @@ def _apply_moe_dist(p, x, cfg, mesh, batch_axes_):
                   P(split if split else None),
                   P(split if split else None)),
         out_specs=P(split if split else None, None),
-        check_vma=False,
     )(out_buf, slot, tok_of, w)
 
     aux = e * jnp.sum((me_sum / t) * (ce_sum / t)) * cfg.router_aux_coef

@@ -9,6 +9,13 @@ the vLLM-style decoupling of request lifetime from batch shape, minus paging.
 
 Sampling: greedy or temperature (per-request), computed on host from the
 device logits of the single new position.
+
+Sparse decode head (``sparse_head_density``): the LM head is the largest
+single decode-step matmul (d_model × vocab every token).  When set, the head
+weights are magnitude-pruned and served through the unified SpMV entry point
+(``repro.core.spmv`` → format autotuner), so decode inherits whichever
+format wins for the pruned head's sparsity pattern — the serving-side
+integration of the paper's explicit-caching SpMM.
 """
 
 from __future__ import annotations
@@ -40,7 +47,9 @@ class Request:
 
 class ServeEngine:
     def __init__(self, params, cfg, *, batch: int = 4, max_len: int = 256,
-                 max_prompt: int = 64, state_dtype=jnp.float32, seed: int = 0):
+                 max_prompt: int = 64, state_dtype=jnp.float32, seed: int = 0,
+                 sparse_head_density: Optional[float] = None,
+                 sparse_head_format: str = "auto"):
         self.params, self.cfg = params, cfg
         self.batch, self.max_len, self.max_prompt = batch, max_len, max_prompt
         self.queue: deque[Request] = deque()
@@ -49,25 +58,53 @@ class ServeEngine:
         self.state = init_decode_state(cfg, batch, max_len, state_dtype,
                                        enc_len=max_prompt)
         self.rng = np.random.default_rng(seed)
-        self._decode = jax.jit(partial(self._decode_impl, cfg=cfg))
-        self._prefill_one = jax.jit(partial(self._prefill_impl, cfg=cfg))
+        self.sparse_head = self._build_sparse_head(
+            sparse_head_density, sparse_head_format)
+        self._decode = jax.jit(partial(self._decode_impl, cfg=cfg,
+                                       head=self.sparse_head))
+        self._prefill_one = jax.jit(partial(self._prefill_impl, cfg=cfg,
+                                            head=self.sparse_head))
+
+    def _build_sparse_head(self, density, fmt):
+        """Prune the LM head into the unified-SpMV sparse layer (or None)."""
+        if density is None:
+            return None
+        from ..core.sparse_linear import SparseLinear
+
+        if self.cfg.tie_embeddings:
+            w_head = np.asarray(self.params["embed"]["embedding"],
+                                dtype=np.float32)           # (V, d)
+        else:
+            w_head = np.asarray(self.params["head"]["w_head"],
+                                dtype=np.float32).T          # (d,V) -> (V, d)
+        return SparseLinear.from_dense(w_head, density=density, format=fmt)
 
     # ---- compiled pieces ---------------------------------------------------
     @staticmethod
-    def _decode_impl(params, tokens, state, pos_vec, cfg):
+    def _head_logits(params, h, cfg, head):
+        if head is None:
+            return logits_fn(params["head"], params["embed"], h, cfg)
+        logits = head(h)
+        if cfg.final_softcap:
+            c = cfg.final_softcap
+            logits = jnp.tanh(logits / c) * c
+        return logits
+
+    @staticmethod
+    def _decode_impl(params, tokens, state, pos_vec, cfg, head=None):
         # per-slot positions: run with the max and rely on per-slot causal
         # masks via per-slot pos (we pass a vector but decode uses a scalar
         # write index per step; slots advance in lock-step so we use the
         # per-slot position to mask logits host-side)
         pos = pos_vec.max()
         h, new_state = decode_step(params, tokens, cfg, state, pos)
-        logits = logits_fn(params["head"], params["embed"], h, cfg)
+        logits = ServeEngine._head_logits(params, h, cfg, head)
         return logits[:, 0], new_state
 
     @staticmethod
-    def _prefill_impl(params, batchd, state_slice, cfg):
+    def _prefill_impl(params, batchd, state_slice, cfg, head=None):
         h_last, st = prefill(params, batchd, cfg, state_slice)
-        logits = logits_fn(params["head"], params["embed"], h_last, cfg)
+        logits = ServeEngine._head_logits(params, h_last, cfg, head)
         return logits[:, 0], st
 
     # ---- request management -------------------------------------------------

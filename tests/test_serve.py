@@ -74,3 +74,24 @@ def test_eos_stops_generation():
     done = engine2.run_until_done()
     assert done[0].generated[-1] == ref[1]
     assert len(done[0].generated) <= 3
+
+
+def test_sparse_head_decode_matches_dense_head_at_high_density():
+    """The unified-SpMV decode head (sparse_head_density) reproduces the
+    dense head's greedy generations when pruning keeps (nearly) all weights
+    — the serving-side integration of the format framework."""
+    cfg = get_config("llama3_2_1b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompt = np.arange(1, 9, dtype=np.int32)
+
+    outs = {}
+    for name, kw in (("dense", {}), ("sparse", {"sparse_head_density": 1.0})):
+        engine = ServeEngine(params, cfg, batch=1, max_len=64, max_prompt=16,
+                             **kw)
+        engine.submit(Request(uid=0, prompt=prompt, max_new_tokens=5))
+        outs[name] = engine.run_until_done()[0].generated
+    assert outs["sparse"] == outs["dense"]
+    assert engine.sparse_head is not None
+    assert engine.sparse_head.op.format in (
+        __import__("repro.autotune", fromlist=["available_formats"])
+        .available_formats())

@@ -156,8 +156,8 @@ def test_dist_spmv_matches_local():
         m = poisson3d(12)
         e = build_ehyb(m, n_parts=8, vec_size=-(-m.n // 8 // 8) * 8)
         dev = EHYBDevice.from_ehyb(e)
-        mesh = jax.make_mesh((8,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((8,), ('data',))
         spmv = build_dist_spmv(dev, mesh, 'data')
         x = jnp.asarray(np.random.default_rng(0).standard_normal(m.n),
                         dtype=jnp.float32)
