@@ -4,25 +4,123 @@
   Table 1/2      -> speedup_table     (EHYB vs baselines, fp32/fp64)
   Fig 6          -> preprocessing_time (partition/reorder × single-SpMV)
   §3.4           -> bytes_model       (modeled HBM bytes; int16 ablation)
-  §6             -> solver_bench      (SPAI-CG amortization)
+  §6             -> solver_bench      (SPAI-CG amortization, original vs
+                                       permuted execution space)
   framework      -> autotune_table    (per-matrix chosen format + bytes/nnz)
   framework      -> lm_step_bench     (smoke train/decode step times)
 
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines, and writes the
+machine-readable perf trajectory:
+
+  BENCH_spmv.json    — per (matrix × format): measured ns/iter, GFLOP/s,
+                       rel-err, modeled HBM bytes (+ per-nnz);
+  BENCH_solver.json  — per (matrix × format × execution space): CG seconds,
+                       iters-to-converge, residual, modeled bytes/iteration
+                       (the permuted-space records show the
+                       2·n_pad·val_bytes perm-round-trip reduction).
+
+Usage:
+  python -m benchmarks.run                      # full module list + JSON
+  python -m benchmarks.run --quick              # tiny config (CI smoke)
+  python -m benchmarks.run bytes_model          # one module, CSV only
+  python -m benchmarks.run --json solver_bench  # one module + JSON
+  python -m benchmarks.run --json-dir out/      # JSON location
+
+BENCH_*.json is written on default/--quick runs (no explicit module list) or
+when --json is passed; an explicit module list alone stays CSV-only so a
+quick single-table run never triggers the measured SpMV sweep.
 """
+
+from __future__ import annotations
+
+import argparse
+import inspect
+import json
+import pathlib
 import sys
 
+DEFAULT_MODS = ["bytes_model", "preprocessing_time", "speedup_table",
+                "solver_bench", "autotune_table", "lm_step_bench"]
+QUICK_MODS = ["solver_bench"]
 
-def main() -> None:
-    mods = sys.argv[1:] or ["bytes_model", "preprocessing_time",
-                            "speedup_table", "solver_bench",
-                            "autotune_table", "lm_step_bench"]
+
+def collect_spmv_records(quick: bool = False, rows=None) -> list:
+    """Measured SpMV timings joined with the modeled-bytes table.
+
+    ``rows`` (from a speedup_table/spmv_throughput run earlier in the same
+    invocation) skips re-timing the whole suite."""
+    from repro import autotune as at
+
+    from . import spmv_throughput
+    from .common import get_ehyb, get_matrix
+
+    if rows is None:
+        suite = ("poisson3d_16",) if quick else None
+        rows = spmv_throughput.run("f32", suite=suite)
+    records = []
+    for name, fmts in rows.items():
+        m = get_matrix(name)
+        table = at.model_table(m, 4, shared={"ehyb": get_ehyb(name)})
+        for fmt, (t, gflops, err) in fmts.items():
+            records.append({
+                "matrix": name, "n": m.n, "nnz": m.nnz, "format": fmt,
+                "dtype": "f32", "ns_per_iter": t * 1e9, "gflops": gflops,
+                "relerr": err, "modeled_bytes": table[fmt],
+                "modeled_bytes_per_nnz": table[fmt] / max(m.nnz, 1)})
+    return records
+
+
+def _run_module(name: str, quick: bool):
     import importlib
 
-    for name in mods:
-        mod = importlib.import_module(f"benchmarks.{name}")
-        print(f"# === {name} ===")
-        mod.main()
+    mod = importlib.import_module(f"benchmarks.{name}")
+    print(f"# === {name} ===")
+    if "quick" in inspect.signature(mod.main).parameters:
+        return mod.main(quick=quick)
+    return mod.main()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("modules", nargs="*", help="benchmark modules to run")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny matrix config (CI smoke)")
+    ap.add_argument("--json-dir", default=None,
+                    help="where to write BENCH_*.json (default: repo root "
+                         "for full runs; bench-out/ for --quick, so a tiny "
+                         "config never overwrites the committed full-suite "
+                         "trajectory)")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_*.json even with an explicit module list")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_*.json")
+    args = ap.parse_args(argv)
+
+    mods = args.modules or (QUICK_MODS if args.quick else DEFAULT_MODS)
+    results = {name: _run_module(name, args.quick) for name in mods}
+
+    if args.no_json or (args.modules and not args.json):
+        return
+    if args.json_dir is None:
+        root = pathlib.Path(__file__).parent.parent
+        out_dir = root / "bench-out" if args.quick else root
+    else:
+        out_dir = pathlib.Path(args.json_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    print("# === BENCH json ===")
+    rows = (results.get("speedup_table") or {}).get("rows_f32") \
+        or results.get("spmv_throughput", {}).get("f32")
+    spmv_records = collect_spmv_records(args.quick, rows=rows)
+    solver_records = results.get("solver_bench")
+    if solver_records is None:
+        from . import solver_bench
+
+        solver_records = solver_bench.main(quick=args.quick)
+    for fname, payload in (("BENCH_spmv.json", spmv_records),
+                           ("BENCH_solver.json", solver_records)):
+        path = out_dir / fname
+        path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+        print(f"wrote {path} ({len(payload)} records)")
 
 
 if __name__ == '__main__':

@@ -8,6 +8,22 @@ read once) and no cache (one read per nnz) — and rank on the midpoint, the
 same treatment for every uncached format so the bracket cancels out of
 within-family comparisons.  EHYB's cached reads are exact (one VMEM fill per
 partition): that determinism is the paper's point.
+
+**Workload context.**  The model is context-sensitive because the traffic of
+an EHYB-family SpMV depends on where its vectors live:
+
+* ``context="spmv"`` — a one-shot original-space call.  EHYB pays the
+  per-call permutation round trip (``perm`` gather in, ``inv_perm`` gather
+  out: 2·n_pad·val_bytes), with the ER contribution fused into the single
+  kernel launch.
+* ``context="solver"`` — an iterative hot loop running in the permuted
+  space (``core.solver.solve``'s contract): the permutation is hoisted out
+  of the loop and amortized to zero, so the per-iteration bytes drop by
+  exactly the round-trip term.  This is what ``solve(format="auto")`` ranks
+  on, and why a format can lose for one-shot calls yet win inside a solver.
+
+Non-EHYB formats have no reordered space; their accounting is
+context-independent.
 """
 
 from __future__ import annotations
@@ -76,29 +92,36 @@ def matrix_key(m: SparseCSR) -> str:
 
 def estimate_bytes(m: SparseCSR, fmt: str, val_bytes: int = 4,
                    shared: Optional[dict] = None,
-                   stats: Optional[MatrixStats] = None) -> int:
-    """Modeled HBM bytes of one SpMV of ``m`` in format ``fmt``."""
+                   stats: Optional[MatrixStats] = None,
+                   context: str = "spmv") -> int:
+    """Modeled HBM bytes of one SpMV of ``m`` in format ``fmt``.
+
+    ``context="solver"`` models one hot-loop iteration in the operator's
+    native (permuted) space; ``"spmv"`` models a one-shot original-space
+    call — see the module docstring."""
     from .registry import get_format
 
     return int(get_format(fmt).model(m, stats or matrix_stats(m), val_bytes,
-                                     {} if shared is None else shared))
+                                     {} if shared is None else shared,
+                                     context=context))
 
 
 def model_table(m: SparseCSR, val_bytes: int = 4,
-                candidates=None, shared: Optional[dict] = None
-                ) -> Dict[str, int]:
+                candidates=None, shared: Optional[dict] = None,
+                context: str = "spmv") -> Dict[str, int]:
     """Per-format modeled bytes; one shared EHYB build serves the family."""
     from .registry import available_formats
 
     shared = {} if shared is None else shared
     stats = matrix_stats(m)
-    return {f: estimate_bytes(m, f, val_bytes, shared, stats)
+    return {f: estimate_bytes(m, f, val_bytes, shared, stats, context)
             for f in (candidates or available_formats())}
 
 
 def rank_formats(m: SparseCSR, val_bytes: int = 4, candidates=None,
-                 shared: Optional[dict] = None) -> list[tuple[str, int]]:
+                 shared: Optional[dict] = None,
+                 context: str = "spmv") -> list[tuple[str, int]]:
     """Formats sorted by modeled bytes, cheapest first (ties: by name, so
     rankings are deterministic)."""
-    table = model_table(m, val_bytes, candidates, shared)
+    table = model_table(m, val_bytes, candidates, shared, context)
     return sorted(table.items(), key=lambda kv: (kv[1], kv[0]))

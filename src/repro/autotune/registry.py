@@ -5,12 +5,17 @@ format as a candidate:
 
 * ``build(m, dtype, shared)``  — construct the device container and return
   ``(obj, apply)`` with ``apply(obj, x)`` the jitted SpMV/SpMM path;
-* ``model(m, stats, val_bytes, shared)`` — modeled HBM bytes of one SpMV in
-  that format (the paper's §3.4 accounting), computable from the sparsity
-  pattern alone — no device arrays are allocated for losers;
+* ``model(m, stats, val_bytes, shared, context=...)`` — modeled HBM bytes of
+  one SpMV in that format (the paper's §3.4 accounting), computable from the
+  sparsity pattern alone — no device arrays are allocated for losers.
+  ``context`` distinguishes one-shot original-space calls ("spmv") from
+  permuted-space solver iterations ("solver") — see ``cost.py``;
 * ``kernel`` — which execution engine backs it ("xla" or
   "pallas-interpret"); the tuner's measured pass skips interpreter-backed
-  kernels on CPU where their timings are meaningless.
+  kernels on CPU where their timings are meaningless;
+* ``permuted`` — optional ``apply_permuted(obj, x_new)`` running the SpMV in
+  the format's reordered padded space (EHYB family), the hook behind
+  ``SpMVOperator.matvec_permuted`` and the permuted-space solver loop.
 
 The EHYB-family formats share one host-side EHYB build per matrix via the
 ``shared`` dict (allocated per autotune/build call), so ranking all six
@@ -26,8 +31,10 @@ import numpy as np
 
 from ..core.ehyb import EHYB, build_buckets, build_ehyb, pack_staircase
 from ..core.matrices import SparseCSR
-from ..core.spmv import (COODevice, EHYBDevice, EHYBPackedDevice, ELLDevice,
-                         HYBDevice, coo_spmv, ehyb_spmv, ehyb_spmv_buckets,
+from ..core.spmv import (COODevice, EHYBBucketsDevice, EHYBDevice,
+                         EHYBPackedDevice, ELLDevice, HYBDevice, coo_spmv,
+                         ehyb_buckets_spmv, ehyb_buckets_spmv_permuted,
+                         ehyb_spmv, ehyb_spmv_buckets, ehyb_spmv_permuted,
                          ell_spmv, hyb_spmv)
 from .cost import MatrixStats, _x_stream_bytes
 
@@ -36,9 +43,10 @@ from .cost import MatrixStats, _x_stream_bytes
 class FormatSpec:
     name: str
     build: Callable[..., tuple]        # (m, dtype, shared) -> (obj, apply)
-    model: Callable[..., int]          # (m, stats, val_bytes, shared) -> bytes
+    model: Callable[..., int]          # (m, stats, vb, shared, context) -> B
     kernel: str = "xla"                # "xla" | "pallas-interpret"
     description: str = ""
+    permuted: Optional[Callable] = None   # (obj, x_new) -> y_new, or None
 
 
 FORMATS: Dict[str, FormatSpec] = {}
@@ -95,6 +103,18 @@ def shared_ehyb(m: SparseCSR, shared: dict) -> EHYB:
     return shared["ehyb"]
 
 
+def shared_buckets(m: SparseCSR, shared: dict):
+    """Width-bucketed view of the shared EHYB build, memoized on the host
+    EHYB instance — the cost model and the device builder reuse one
+    bucketing pass (it copies every ELL tile, so rebuilding per model
+    evaluation is measurable on large matrices)."""
+    e = shared_ehyb(m, shared)
+    b = getattr(e, "_buckets", None)
+    if b is None:
+        b = e._buckets = build_buckets(e)
+    return b
+
+
 # ---------------------------------------------------------------------------
 # builders
 # ---------------------------------------------------------------------------
@@ -116,16 +136,21 @@ def _build_ehyb(m, dtype, shared):
 
 
 def _build_ehyb_bucketed(m, dtype, shared):
-    b = build_buckets(shared_ehyb(m, shared))
-    return b, lambda bb, x: ehyb_spmv_buckets(bb, x, dtype=dtype)
+    b = shared_buckets(m, shared)
+    return EHYBBucketsDevice.from_buckets(b, dtype), ehyb_buckets_spmv
 
 
 def _build_ehyb_packed(m, dtype, shared):
     from ..kernels.ops import ehyb_spmv_packed_pallas
 
     pk = pack_staircase(shared_ehyb(m, shared))
-    return (EHYBPackedDevice.from_packed(pk, dtype),
-            lambda d, x: ehyb_spmv_packed_pallas(d, x, interpret=True))
+    return EHYBPackedDevice.from_packed(pk, dtype), ehyb_spmv_packed_pallas
+
+
+def _packed_permuted(d, x_new):
+    from ..kernels.ops import ehyb_spmv_packed_pallas_permuted
+
+    return ehyb_spmv_packed_pallas_permuted(d, x_new)
 
 
 def _build_dense(m, dtype, shared):
@@ -136,21 +161,27 @@ def _build_dense(m, dtype, shared):
 
 
 # ---------------------------------------------------------------------------
-# byte models (one SpMV, fp-width ``val_bytes``); x-stream bounds in cost.py
+# byte models (one SpMV, fp-width ``val_bytes``); x-stream bounds in cost.py.
+# ``context``: "spmv" = one-shot original-space call; "solver" = one
+# permuted-space hot-loop iteration (EHYB family drops the perm round trip —
+# non-EHYB formats have no reordered space, so their models ignore it).
 # ---------------------------------------------------------------------------
 
-def _model_csr(m, stats: MatrixStats, vb: int, shared) -> int:
+def _model_csr(m, stats: MatrixStats, vb: int, shared,
+               context: str = "spmv") -> int:
     # COO stream realization of CSR semantics: rows + cols int32 per nnz
     idx = 8 * stats.nnz
     return idx + vb * stats.nnz + _x_stream_bytes(stats, vb) + vb * stats.n
 
 
-def _model_ell(m, stats: MatrixStats, vb: int, shared) -> int:
+def _model_ell(m, stats: MatrixStats, vb: int, shared,
+               context: str = "spmv") -> int:
     stored = stats.n * stats.max_row
     return stored * (vb + 4) + _x_stream_bytes(stats, vb) + vb * stats.n
 
 
-def _model_hyb(m, stats: MatrixStats, vb: int, shared) -> int:
+def _model_hyb(m, stats: MatrixStats, vb: int, shared,
+               context: str = "spmv") -> int:
     lens = m.row_lengths()
     k = max(int(np.quantile(lens, 0.9)) if stats.n else 1, 1)
     spill = int(np.maximum(lens - k, 0).sum())
@@ -159,19 +190,28 @@ def _model_hyb(m, stats: MatrixStats, vb: int, shared) -> int:
     return ell + coo + _x_stream_bytes(stats, vb) + vb * stats.n
 
 
-def _model_ehyb(m, stats, vb, shared) -> int:
-    return shared_ehyb(m, shared).bytes_moved(vb, layout="tile")["total"]
+def _ehyb_space(context: str) -> str:
+    return "permuted" if context == "solver" else "original"
 
 
-def _model_ehyb_bucketed(m, stats, vb, shared) -> int:
-    return build_buckets(shared_ehyb(m, shared)).bytes_moved(vb)["total"]
+def _model_ehyb(m, stats, vb, shared, context: str = "spmv") -> int:
+    return shared_ehyb(m, shared).bytes_moved(
+        vb, layout="tile", space=_ehyb_space(context),
+        fused_er=True)["total"]
 
 
-def _model_ehyb_packed(m, stats, vb, shared) -> int:
-    return shared_ehyb(m, shared).bytes_moved(vb, layout="packed")["total"]
+def _model_ehyb_bucketed(m, stats, vb, shared, context: str = "spmv") -> int:
+    return shared_buckets(m, shared).bytes_moved(
+        vb, space=_ehyb_space(context), fused_er=True)["total"]
 
 
-def _model_dense(m, stats, vb, shared) -> int:
+def _model_ehyb_packed(m, stats, vb, shared, context: str = "spmv") -> int:
+    return shared_ehyb(m, shared).bytes_moved(
+        vb, layout="packed", space=_ehyb_space(context),
+        fused_er=True)["total"]
+
+
+def _model_dense(m, stats, vb, shared, context: str = "spmv") -> int:
     return stats.n * stats.n * vb + 2 * stats.n * vb
 
 
@@ -186,14 +226,17 @@ register_format(FormatSpec(
     description="classic HYB (Bell & Garland): ELL to 90th pct + COO spill"))
 register_format(FormatSpec(
     "ehyb", _build_ehyb, _model_ehyb,
-    description="EHYB uniform tiles, uint16 local cols, explicit x cache"))
+    description="EHYB uniform tiles, uint16 local cols, explicit x cache",
+    permuted=ehyb_spmv_permuted))
 register_format(FormatSpec(
     "ehyb_bucketed", _build_ehyb_bucketed, _model_ehyb_bucketed,
-    description="EHYB with width-bucketed partition tiles"))
+    description="EHYB with width-bucketed partition tiles",
+    permuted=ehyb_buckets_spmv_permuted))
 register_format(FormatSpec(
     "ehyb_packed", _build_ehyb_packed, _model_ehyb_packed,
     kernel="pallas-interpret",
-    description="EHYB packed staircase (Pallas kernel v2)"))
+    description="EHYB packed staircase (fused Pallas megakernel v2)",
+    permuted=_packed_permuted))
 register_format(FormatSpec(
     "dense", _build_dense, _model_dense,
     description="dense matmul (wins only on tiny/near-dense matrices)"))

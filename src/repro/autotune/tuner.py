@@ -34,6 +34,7 @@ class TuneResult:
     mode: str                         # "model" | "measure"
     modeled_bytes: Dict[str, int]     # per-candidate modeled HBM bytes
     measured_s: Optional[Dict[str, float]]  # per-timed-candidate seconds
+    context: str = "spmv"             # workload the model ranked for
 
 
 _CACHE = BoundedCache(maxsize=128)    # TuneResults are small host dicts
@@ -62,12 +63,18 @@ def _time_spmv(apply, obj, x, repeats: int = 3, warmup: int = 1) -> float:
 
 def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
              candidates=None, top_k: int = 3, use_cache: bool = True,
-             shared: Optional[dict] = None) -> TuneResult:
+             shared: Optional[dict] = None,
+             context: str = "spmv") -> TuneResult:
     """Select the SpMV format for ``m``; see module docstring for the passes.
 
     ``shared`` (optional dict) carries the host EHYB build across the cost
     model, the measured pass, and the caller's subsequent ``build_format`` —
     one partitioning pass end to end.
+
+    ``context`` selects the workload the byte model ranks for: "spmv"
+    (one-shot original-space call) or "solver" (permuted-space hot-loop
+    iteration; EHYB-family candidates drop the per-call permutation round
+    trip) — see ``cost.py``.  Decisions are cached per context.
     """
     import jax
     import jax.numpy as jnp
@@ -76,16 +83,18 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
 
     if mode not in ("model", "measure"):
         raise ValueError(f"mode must be 'model' or 'measure', got {mode!r}")
+    if context not in ("spmv", "solver"):
+        raise ValueError(f"context must be 'spmv' or 'solver', got {context!r}")
     dtype = dtype or jnp.float32
     cand = tuple(candidates or available_formats())
     key = pattern_hash(m)
-    cache_key = (key, jnp.dtype(dtype).name, mode, cand)
+    cache_key = (key, jnp.dtype(dtype).name, mode, cand, context)
     if use_cache and cache_key in _CACHE:
         return _CACHE[cache_key]
 
     shared = {} if shared is None else shared
     val_bytes = jnp.dtype(dtype).itemsize
-    ranked = rank_formats(m, val_bytes, cand, shared)
+    ranked = rank_formats(m, val_bytes, cand, shared, context)
     modeled = dict(ranked)
     # the winner must be executable efficiently on the current backend:
     # interpreter-backed kernels are ranked (their modeled bytes are the TPU
@@ -108,7 +117,8 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
             winner = min(sorted(measured), key=measured.get)
 
     result = TuneResult(format=winner, key=key, mode=mode,
-                        modeled_bytes=modeled, measured_s=measured)
+                        modeled_bytes=modeled, measured_s=measured,
+                        context=context)
     if use_cache:
         _CACHE[cache_key] = result
     return result

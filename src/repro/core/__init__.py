@@ -12,12 +12,15 @@ from .matrices import (SUITE, SparseCSR, elasticity3d, from_coo, poisson3d,
 from .partition import (Partition, bfs_partition, choose_vec_size,
                         make_partition, natural_partition)
 from .ehyb import (EHYB, EHYBBuckets, PackedEHYB, build_buckets,
-                   build_ehyb, pack_staircase)
-from .spmv import (COODevice, EHYBDevice, EHYBPackedDevice, ELLDevice,
-                   HYBDevice, SpMVOperator, build_spmv, coo_spmv,
-                   csr_spmv, dense_spmv, ehyb_spmv, ehyb_spmv_buckets,
-                   ell_spmv, hyb_spmv, spmv)
-from .solver import PRECONDITIONERS, SolveResult, bicgstab, cg, solve
+                   build_ehyb, group_er_by_partition, pack_staircase)
+from .spmv import (COODevice, EHYBBucketsDevice, EHYBDevice,
+                   EHYBPackedDevice, ELLDevice, HYBDevice, SpMVOperator,
+                   build_spmv, coo_spmv, csr_spmv, dense_spmv,
+                   ehyb_buckets_spmv, ehyb_buckets_spmv_permuted, ehyb_spmv,
+                   ehyb_spmv_buckets, ehyb_spmv_permuted, ell_spmv, hyb_spmv,
+                   spmv)
+from .solver import (PRECONDITIONERS, SolveResult, bicgstab, cg,
+                     precond_for, precond_inv_diag, solve)
 
 __all__ = [
     "SUITE", "SparseCSR", "elasticity3d", "from_coo", "poisson3d",
@@ -25,10 +28,12 @@ __all__ = [
     "Partition", "bfs_partition", "choose_vec_size", "make_partition",
     "natural_partition",
     "EHYB", "EHYBBuckets", "PackedEHYB", "build_buckets", "build_ehyb",
-    "pack_staircase", "EHYBPackedDevice",
-    "COODevice", "EHYBDevice", "ELLDevice", "HYBDevice", "SpMVOperator",
-    "build_spmv", "coo_spmv",
-    "csr_spmv", "dense_spmv", "ehyb_spmv", "ehyb_spmv_buckets", "ell_spmv",
-    "hyb_spmv", "spmv",
-    "PRECONDITIONERS", "SolveResult", "bicgstab", "cg", "solve",
+    "group_er_by_partition", "pack_staircase", "EHYBPackedDevice",
+    "COODevice", "EHYBBucketsDevice", "EHYBDevice", "ELLDevice", "HYBDevice",
+    "SpMVOperator", "build_spmv", "coo_spmv",
+    "csr_spmv", "dense_spmv", "ehyb_buckets_spmv",
+    "ehyb_buckets_spmv_permuted", "ehyb_spmv", "ehyb_spmv_buckets",
+    "ehyb_spmv_permuted", "ell_spmv", "hyb_spmv", "spmv",
+    "PRECONDITIONERS", "SolveResult", "bicgstab", "cg", "precond_for",
+    "precond_inv_diag", "solve",
 ]

@@ -28,10 +28,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from .ehyb import EHYBBuckets
-from .spmv import EHYBDevice, SpMVOperator
+from .spmv import EHYBBucketsDevice, EHYBDevice, SpMVOperator
 
 
-def build_dist_spmv(dev, mesh, axis: str = "data"):
+def build_dist_spmv(dev, mesh, axis: str = "data", space: str = "original"):
     """Distributed SpMV over ``mesh[axis]``.
 
     ``dev`` may be an :class:`EHYBDevice`; a host ``SparseCSR`` (routed
@@ -41,11 +41,21 @@ def build_dist_spmv(dev, mesh, axis: str = "data"):
     ``ehyb_bucketed`` via its host build).  Operators in other formats
     (e.g. an autotuned ``csr`` winner) carry no partition structure — pass
     the SparseCSR, or ``build_spmv(A, format="ehyb")``, instead.
+
+    ``space="permuted"`` returns a function over permuted-space (n_pad[, R])
+    vectors: the pad/``perm``/``inv_perm`` host-level gathers disappear, so
+    a distributed solver loop pays only the shard-local compute plus the ER
+    halo exchange per iteration (the same once-per-solve permutation
+    contract as ``core.solver.solve``).
     """
+    if space not in ("original", "permuted"):
+        raise ValueError(f"unknown space {space!r}")
     if isinstance(dev, SpMVOperator):
         obj = dev.obj
         if isinstance(obj, EHYBDevice):
             dev = obj
+        elif isinstance(obj, EHYBBucketsDevice):
+            dev = EHYBDevice.from_ehyb(obj.host.base)
         elif isinstance(obj, EHYBBuckets):
             dev = EHYBDevice.from_ehyb(obj.base)
         else:
@@ -100,16 +110,27 @@ def build_dist_spmv(dev, mesh, axis: str = "data"):
         out_specs=P(axis, None, None))
 
     @jax.jit
+    def spmv_permuted(x_new):
+        x2 = x_new[:, None] if x_new.ndim == 1 else x_new
+        r = x2.shape[1]
+        x_parts = x2.reshape(dev.n_parts, dev.vec_size, r)
+        y_parts = mapped(x_parts, dev.ell_vals, dev.ell_cols,
+                         er_vals, er_cols, er_row_idx)
+        y_new = y_parts.reshape(dev.n_pad, r)
+        return y_new[:, 0] if x_new.ndim == 1 else y_new
+
+    if space == "permuted":
+        return spmv_permuted
+
+    @jax.jit
     def spmv(x):
         x2 = x[:, None] if x.ndim == 1 else x
         r = x2.shape[1]
         xpad = jnp.concatenate(
             [x2, jnp.zeros((dev.n_pad - dev.n, r), x2.dtype)], axis=0)
         x_new = xpad[dev.perm]
-        x_parts = x_new.reshape(dev.n_parts, dev.vec_size, r)
-        y_parts = mapped(x_parts, dev.ell_vals, dev.ell_cols,
-                         er_vals, er_cols, er_row_idx)
-        y = y_parts.reshape(dev.n_pad, r)[dev.inv_perm[: dev.n]]
+        y_new = spmv_permuted(x_new)
+        y = y_new.reshape(dev.n_pad, r)[dev.inv_perm[: dev.n]]
         return y[:, 0] if x.ndim == 1 else y
 
     return spmv

@@ -75,7 +75,8 @@ class EHYB:
         return stored / max(self.nnz_in, 1)
 
     def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2,
-                    layout: str = "sliced") -> dict:
+                    layout: str = "sliced", space: str = "permuted",
+                    fused_er: bool = True) -> dict:
         """Modeled HBM traffic of one SpMV (the paper's §3.4 accounting).
 
         ELL streams vals + uint16 local cols once; every partition streams its
@@ -87,6 +88,23 @@ class EHYB:
                 "tile"    — uniform (V, W) partition tiles (kernel v1),
                 "packed"  — per-partition packed slices padded to the max
                             packed length across partitions (kernel v2).
+
+        space: which vector space the caller hands x/y over in.
+               "permuted" — the kernel-proper traffic (x and y already live in
+               the EHYB-reordered space; this is what the paper's accounting
+               measures and what the permuted-space solver loop pays per
+               iteration);
+               "original" — adds the per-call permutation round trip
+               (``perm`` gather on x plus ``inv_perm`` gather on y:
+               2·n_pad·val_bytes), the overhead a single original-space
+               ``spmv()`` call cannot avoid.
+
+        fused_er: ER contribution computed inside the main kernel (each
+               partition owns its ER rows; x is VMEM-resident once for all of
+               them) — the default, matching the shipped execution paths —
+               vs a second launch with one random x-read per ER entry plus a
+               caller-side scatter-add (2·er_rows·val_bytes of y
+               read-modify-write), kept for the ablation.
         """
         if layout == "tile" or self.slice_widths is None:
             ell_n = self.n_parts * self.vec_size * self.ell_width
@@ -98,10 +116,31 @@ class EHYB:
         ell = ell_n * (val_bytes + col_bytes)
         x_cache = self.n_pad * val_bytes
         er_n = self.er_rows * self.er_width
-        er = er_n * (val_bytes + 4) + er_n * val_bytes + self.er_rows * 4
+        has_er = bool(self.er_vals.any())
+        if fused_er:
+            # vals + cols stream once — at the PADDED per-partition tile
+            # size (P, E, We) the fused kernel actually reads, not the flat
+            # table (consistent with the ELL term, which also counts its
+            # padding); the ER x-gather hits the resident VMEM copy of x
+            # (streamed in once, bounded by n_pad); the scatter-add
+            # disappears (each grid step accumulates its own ER rows into
+            # its (V, R) output block).
+            if has_er:
+                g = group_er_by_partition(self)
+                er_x = min(er_n, self.n_pad) * val_bytes
+                er = (g["er_p_vals"].size * (val_bytes + 4) + er_x
+                      + g["er_p_rows"].size * 4)
+            else:
+                er = 0      # ER stage skipped statically
+        else:
+            er = (er_n * (val_bytes + 4) + er_n * val_bytes
+                  + self.er_rows * 4
+                  + (2 * self.er_rows * val_bytes if has_er else 0))
         y = self.n_pad * val_bytes
+        perm = 2 * self.n_pad * val_bytes if space == "original" else 0
         return {"ell": ell, "x_cache": x_cache, "er": er, "y": y,
-                "total": ell + x_cache + er + y}
+                "perm": perm,
+                "total": ell + x_cache + er + y + perm}
 
     def as_jax(self, dtype=None):
         """Return a dict of jnp arrays (lazy import keeps preprocessing
@@ -249,6 +288,56 @@ def build_ehyb(m: SparseCSR, part: Optional[Partition] = None,
 
 
 # ---------------------------------------------------------------------------
+# ER-by-partition grouping (fused-megakernel metadata)
+# ---------------------------------------------------------------------------
+
+def group_er_by_partition(e: EHYB, sublane: int = 8) -> dict:
+    """Map every ER slot to its owning partition (``er_row_idx // vec_size``).
+
+    The fused EHYB kernel runs one grid step per partition; giving step ``p``
+    its own ER rows lets it accumulate them into the same (V, R) output block
+    as the sliced-ELL part — no second pallas_call, no caller-side
+    scatter-add.  Returns uniform (P, E, We) tiles (E = max ER rows owned by
+    any partition, sublane-aligned; empty slots hold zero values and row 0,
+    which contribute nothing):
+
+      ``er_p_vals``  (P, E, We) float
+      ``er_p_cols``  (P, E, We) int32 global-new column indices
+      ``er_p_rows``  (P, E)     int32 LOCAL row index within the partition
+
+    The result is memoized on ``e`` so the device builders (uniform + packed)
+    and the bytes model share one grouping pass.
+    """
+    cached = getattr(e, "_er_grouped", None)
+    if cached is not None and cached["sublane"] == sublane:
+        return cached
+    p_, v_, we = e.n_parts, e.vec_size, e.er_width
+    live = np.flatnonzero((e.er_vals != 0).any(axis=1))
+    owner = e.er_row_idx[live] // v_
+    counts = np.bincount(owner, minlength=p_) if len(live) else \
+        np.zeros(p_, dtype=np.int64)
+    em = int(counts.max()) if len(live) else 0
+    ep = max(sublane, -(-max(em, 1) // sublane) * sublane)
+    er_p_vals = np.zeros((p_, ep, we), dtype=e.er_vals.dtype)
+    er_p_cols = np.zeros((p_, ep, we), dtype=np.int32)
+    er_p_rows = np.zeros((p_, ep), dtype=np.int32)
+    if len(live):
+        order = np.argsort(owner, kind="stable")
+        src = live[order]
+        own = owner[order]
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        slot = np.arange(len(src)) - starts[own]
+        er_p_vals[own, slot] = e.er_vals[src]
+        er_p_cols[own, slot] = e.er_cols[src]
+        er_p_rows[own, slot] = (e.er_row_idx[src] % v_).astype(np.int32)
+    out = {"er_p_vals": er_p_vals, "er_p_cols": er_p_cols,
+           "er_p_rows": er_p_rows, "has_er": bool(len(live)),
+           "n_er_live": int(len(live)), "sublane": sublane}
+    e._er_grouped = out
+    return out
+
+
+# ---------------------------------------------------------------------------
 # packed "staircase" layout (kernel v2 — beyond-paper §Perf optimization)
 # ---------------------------------------------------------------------------
 
@@ -271,14 +360,26 @@ class PackedEHYB:
     col_starts: np.ndarray            # (P, W+1) int32 — column k offset
     col_rows: np.ndarray              # (P, W) int32 — active rows R_k
 
-    def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2) -> dict:
-        b = self.base.bytes_moved(val_bytes, col_bytes, layout="sliced")
+    def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2,
+                    space: str = "permuted", fused_er: bool = True) -> dict:
+        b = self.base.bytes_moved(val_bytes, col_bytes, layout="sliced",
+                                  space=space, fused_er=fused_er)
         ell = self.base.n_parts * self.packed_len * (val_bytes + col_bytes)
         return {**b, "ell": ell,
-                "total": ell + b["x_cache"] + b["er"] + b["y"]}
+                "total": ell + b["x_cache"] + b["er"] + b["y"] + b["perm"]}
 
 
 def pack_staircase(e: EHYB) -> PackedEHYB:
+    """Pack the (P, V, W) tiles column-major with no inter-slice padding.
+
+    Vectorized as one numpy scatter: cell (p, v, k) is active when
+    ``v < col_rows[p, k]`` (rows are width-sorted, so column k's active rows
+    are the prefix [0, R_k)), and its destination within partition p's packed
+    stream is ``col_starts[p, k] + v``.  The previous O(P·W) Python fill loop
+    dominated preprocessing on large matrices; the scatter is recorded in
+    ``preprocess_seconds["pack"]``.
+    """
+    t0 = time.perf_counter()
     p_, v_, w_ = e.n_parts, e.vec_size, e.ell_width
     widths = (e.ell_vals != 0).sum(axis=2)               # (P, V) row widths
     # R_k per partition: number of rows with width > k (rows are sorted)
@@ -289,15 +390,13 @@ def pack_staircase(e: EHYB) -> PackedEHYB:
     packed_vals = np.zeros((p_, pack_l), dtype=e.ell_vals.dtype)
     packed_cols = np.zeros((p_, pack_l), dtype=np.uint16)
     col_starts = np.zeros((p_, w_ + 1), dtype=np.int32)
-    for p in range(p_):
-        off = 0
-        for k in range(w_):
-            col_starts[p, k] = off
-            r = int(col_rows[p, k])
-            packed_vals[p, off:off + r] = e.ell_vals[p, :r, k]
-            packed_cols[p, off:off + r] = e.ell_cols[p, :r, k]
-            off += r
-        col_starts[p, w_] = off
+    col_starts[:, 1:] = np.cumsum(col_rows, axis=1)
+    active = np.arange(v_)[None, :, None] < col_rows[:, None, :]  # (P, V, W)
+    pi, vi, ki = np.nonzero(active)
+    dest = col_starts[pi, ki] + vi
+    packed_vals[pi, dest] = e.ell_vals[pi, vi, ki]
+    packed_cols[pi, dest] = e.ell_cols[pi, vi, ki]
+    e.preprocess_seconds["pack"] = time.perf_counter() - t0
     return PackedEHYB(base=e, packed_len=pack_l, packed_vals=packed_vals,
                       packed_cols=packed_cols, col_starts=col_starts,
                       col_rows=col_rows)
@@ -307,8 +406,8 @@ def pack_staircase(e: EHYB) -> PackedEHYB:
 # width-bucketed variant (beyond-paper §Perf optimization)
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class EHYBBuckets:
+@dataclasses.dataclass(eq=False)     # identity hash: host handle rides in
+class EHYBBuckets:                   # jit-static aux data of the device form
     """Partitions grouped into width buckets — one uniform tile per bucket.
 
     The baseline format pads every partition tile to the *global* max width W;
@@ -326,11 +425,14 @@ class EHYBBuckets:
     cols: list            # list[np.ndarray]
     widths: list          # list[int]
 
-    def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2) -> dict:
+    def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2,
+                    space: str = "permuted", fused_er: bool = True) -> dict:
         ell = sum(v.size * (val_bytes + col_bytes) for v in self.vals)
-        base = self.base.bytes_moved(val_bytes, col_bytes)
+        base = self.base.bytes_moved(val_bytes, col_bytes, space=space,
+                                     fused_er=fused_er)
         return {**base, "ell": ell,
-                "total": ell + base["x_cache"] + base["er"] + base["y"]}
+                "total": ell + base["x_cache"] + base["er"] + base["y"]
+                + base["perm"]}
 
 
 def build_buckets(e: EHYB, n_buckets: int = 4, lane: int = 8) -> EHYBBuckets:

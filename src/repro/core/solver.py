@@ -1,8 +1,9 @@
 """Krylov solvers — the paper's target workload (§1, §6).
 
-EHYB exists to accelerate the SpMV inside preconditioned iterative solvers for
-FEM linear systems, where thousands of iterations amortize the preprocessing
-(the paper's §6 argument: SPAI-preconditioned transient simulation).  We ship:
+EHYB exists to accelerate the SpMV inside preconditioned iterative solvers
+for FEM linear systems, where thousands of iterations amortize the
+preprocessing (the paper's §6 argument: SPAI-preconditioned transient
+simulation).  We ship:
 
 * ``cg``        — conjugate gradients (SPD systems; paper's FEM focus),
 * ``bicgstab``  — for the non-symmetric CFD/circuit cases,
@@ -14,12 +15,48 @@ Solvers take an opaque ``matvec`` so any format path (CSR/ELL/HYB/EHYB jnp or
 the Pallas kernel) drops in — that is exactly the paper's experiment: same
 Krylov loop, swap the SpMV.  Loops are ``lax.while_loop`` so the whole solve
 is one XLA program (device-resident, multi-pod shardable).
+
+DESIGN — permuted-space execution (the once-per-solve permutation contract)
+===========================================================================
+
+EHYB-family formats compute in a symmetrically reordered, padded vector
+space: Ã = P A Pᵀ over n_pad slots, with all-zero padding rows/columns.
+The naive loop pays, *per iteration*, a pad + ``perm`` gather on the way
+into the kernel and an ``inv_perm`` gather on the way out — 2·n_pad
+values of pure data movement that the format had already eliminated from
+the multiply itself.  ``solve()`` therefore hoists the permutation out of
+the loop whenever the chosen operator ``supports_permuted``:
+
+    b̃    = op.to_permuted(b)              # once per solve
+    M̃⁻¹  = permuted preconditioner diag    # once per solve
+    loop:  op.matvec_permuted (+ axpy/dot updates), entirely in x̃-space
+    x    = op.from_permuted(x̃)            # once per solve
+
+Correctness: P is a permutation (orthogonal), so every inner product and
+norm the Krylov recurrences use is identical in both spaces, and the
+padding coordinates — zero in b̃, zero rows in Ã, zero in x̃₀ — stay
+exactly zero through every iteration.  The permuted-space iterates are the
+original-space iterates re-indexed: same trajectory up to floating-point
+summation order (pinned by tests/test_permuted_space.py).
+
+Residual accounting: both solvers carry ‖r‖² in the ``while_loop`` state
+(computed as a byproduct of the residual update) instead of re-reading the
+full residual vector in the loop condition — one fewer n-sized HBM pass
+per iteration.  With ``fused_update=True`` (TPU), the CG vector updates
+(both axpys, the diagonal-preconditioner apply, and both dot reductions)
+collapse into one Pallas pass over the vectors
+(``repro.kernels.solver_step.fused_cg_update``).
+
+The traffic model behind format selection mirrors this contract:
+``autotune`` ranks with ``context="solver"`` (permuted space, fused ER —
+see ``repro.autotune.cost``), which is how ``solve(format="auto")`` picks
+formats for iterative workloads.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,38 +73,58 @@ class SolveResult(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# preconditioners (return a linear operator x -> M @ x)
+# preconditioners (diagonal family: an inverse-diagonal array + closure form)
 # ---------------------------------------------------------------------------
 
-def identity_precond(_: SparseCSR) -> Callable:
-    return lambda r: r
-
-
-def jacobi_precond(m: SparseCSR) -> Callable:
-    diag = np.ones(m.n)
+def _matrix_diag(m: SparseCSR) -> tuple[np.ndarray, np.ndarray]:
     rows = np.repeat(np.arange(m.n), m.row_lengths())
-    on_diag = rows == m.indices
-    diag[rows[on_diag]] = m.data[on_diag]
-    inv = jnp.asarray(1.0 / np.where(diag == 0, 1.0, diag), dtype=jnp.float32)
-    return lambda r: inv * r
-
-
-def spai_diag_precond(m: SparseCSR) -> Callable:
-    """Diagonal SPAI: argmin_M ||I − MA||_F over diagonal M.
-
-    Row-wise closed form m_i = a_ii / Σ_j a_ij².  (The paper cites full-pattern
-    SPAI/FSAI solvers [10][13]; the diagonal pattern is the cheapest member of
-    that family and keeps the container CPU-tractable.)
-    """
-    rows = np.repeat(np.arange(m.n), m.row_lengths())
-    row_sq = np.zeros(m.n)
-    np.add.at(row_sq, rows, m.data ** 2)
     diag = np.zeros(m.n)
     on_diag = rows == m.indices
     diag[rows[on_diag]] = m.data[on_diag]
-    mdiag = diag / np.where(row_sq == 0, 1.0, row_sq)
-    inv = jnp.asarray(np.where(mdiag == 0, 1.0, mdiag), dtype=jnp.float32)
-    return lambda r: inv * r
+    return rows, diag
+
+
+def precond_inv_diag(m: SparseCSR, kind: str) -> Optional[np.ndarray]:
+    """The inverse-diagonal array M⁻¹ of preconditioner ``kind`` (None for
+    identity).  Exposing the array — not just a closure — is what lets
+    ``solve()`` permute it once per solve for permuted-space execution."""
+    if kind == "none":
+        return None
+    rows, diag = _matrix_diag(m)
+    if kind == "jacobi":
+        d = np.where(diag == 0, 1.0, diag)
+        return (1.0 / d).astype(np.float64)
+    if kind == "spai":
+        # Diagonal SPAI: argmin_M ||I − MA||_F over diagonal M; row-wise
+        # closed form m_i = a_ii / Σ_j a_ij².  (The paper cites full-pattern
+        # SPAI/FSAI solvers [10][13]; the diagonal pattern is the cheapest
+        # member of that family and keeps the container CPU-tractable.)
+        row_sq = np.zeros(m.n)
+        np.add.at(row_sq, rows, m.data ** 2)
+        mdiag = diag / np.where(row_sq == 0, 1.0, row_sq)
+        return np.where(mdiag == 0, 1.0, mdiag).astype(np.float64)
+    raise ValueError(f"unknown preconditioner {kind!r}; "
+                     f"have {sorted(PRECONDITIONERS)}")
+
+
+def _diag_closure(inv: Optional[np.ndarray]) -> Callable:
+    if inv is None:
+        return lambda r: r
+    invj = jnp.asarray(inv, dtype=jnp.float32)
+    return lambda r: invj * r
+
+
+def identity_precond(_: SparseCSR) -> Callable:
+    return _diag_closure(None)
+
+
+def jacobi_precond(m: SparseCSR) -> Callable:
+    return _diag_closure(precond_inv_diag(m, "jacobi"))
+
+
+def spai_diag_precond(m: SparseCSR) -> Callable:
+    """Diagonal SPAI closure (see :func:`precond_inv_diag`)."""
+    return _diag_closure(precond_inv_diag(m, "spai"))
 
 
 PRECONDITIONERS = {
@@ -81,35 +138,73 @@ PRECONDITIONERS = {
 # solvers
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("matvec", "precond", "max_iters"))
+@partial(jax.jit, static_argnames=("matvec", "precond", "max_iters",
+                                   "fused_update"))
 def cg(matvec: Callable, b: jnp.ndarray, precond: Callable = lambda r: r,
-       tol: float = 1e-6, max_iters: int = 500) -> SolveResult:
-    """Preconditioned conjugate gradients (device-resident loop)."""
+       tol: float = 1e-6, max_iters: int = 500, *,
+       fused_update: bool = False,
+       precond_inv: Optional[jnp.ndarray] = None) -> SolveResult:
+    """Preconditioned conjugate gradients (device-resident loop).
+
+    ‖r‖² rides in the loop state (no extra residual pass in ``cond``).
+    ``fused_update=True`` routes the vector updates through the fused Pallas
+    CG-step kernel (requires the diagonal-preconditioner array
+    ``precond_inv``; ones = identity).  Intended for TPU — on CPU the
+    interpreted kernel is for validation only.
+    """
+    if fused_update:
+        from ..kernels.solver_step import fused_cg_update
+
+        # keep M⁻¹ at ≥fp32 regardless of b's dtype, matching the precision
+        # of the closure path (the kernel computes in fp32 internally)
+        inv_vec = (jnp.ones(b.shape, jnp.promote_types(b.dtype, jnp.float32))
+                   if precond_inv is None
+                   else jnp.asarray(precond_inv,
+                                    jnp.promote_types(precond_inv.dtype,
+                                                      jnp.float32)))
+    dt = b.dtype
+    acc = jnp.promote_types(dt, jnp.float32)   # dots/norms in ≥fp32
+
+    def _dot(u, v):
+        return jnp.vdot(u.astype(acc), v.astype(acc))
+
     x0 = jnp.zeros_like(b)
     r0 = b - matvec(x0)
-    z0 = precond(r0)
+    z0 = (precond(r0) if not fused_update else inv_vec * r0).astype(dt)
     p0 = z0
-    rz0 = jnp.vdot(r0, z0)
-    bnorm = jnp.maximum(jnp.linalg.norm(b), 1e-30)
+    rz0 = _dot(r0, z0)
+    rr0 = jnp.real(_dot(r0, r0))
+    # floor must be representable in acc (1e-60 underflows fp32
+    # to 0.0 -> 0/0 = NaN on a zero rhs)
+    bnorm2 = jnp.maximum(jnp.real(_dot(b, b)), jnp.finfo(acc).tiny)
+    thresh2 = (tol ** 2) * bnorm2
 
     def cond(state):
-        _, r, _, _, k = state
-        return (jnp.linalg.norm(r) / bnorm > tol) & (k < max_iters)
+        _, _, _, _, rr, k = state
+        return (rr > thresh2) & (k < max_iters)
 
     def body(state):
-        x, r, p, rz, k = state
+        x, r, p, rz, rr, k = state
         ap = matvec(p)
-        alpha = rz / jnp.maximum(jnp.vdot(p, ap), 1e-30)
-        x = x + alpha * p
-        r = r - alpha * ap
-        z = precond(r)
-        rz_new = jnp.vdot(r, z)
+        alpha = rz / jnp.maximum(_dot(p, ap), 1e-30)
+        if fused_update:
+            x, r, z, rz_new, rr_new = fused_cg_update(x, r, p, ap, inv_vec,
+                                                      alpha)
+            rz_new = rz_new.astype(rz.dtype)
+            rr_new = rr_new.astype(rr.dtype)
+        else:
+            x = (x + alpha * p).astype(dt)
+            r = (r - alpha * ap).astype(dt)
+            z = precond(r).astype(dt)
+            rz_new = _dot(r, z)
+            rr_new = jnp.real(_dot(r, r))
         beta = rz_new / jnp.maximum(rz, 1e-30)
-        p = z + beta * p
-        return x, r, p, rz_new, k + 1
+        p = (z + beta * p).astype(dt)
+        return x, r, p, rz_new, rr_new, k + 1
 
-    x, r, _, _, k = jax.lax.while_loop(cond, body, (x0, r0, p0, rz0, 0))
-    res = jnp.linalg.norm(r) / bnorm
+    x, _, _, _, rr, k = jax.lax.while_loop(
+        cond, body, (x0, r0, p0, rz0, rr0, 0))
+    res = jnp.sqrt(rr / bnorm2)
     return SolveResult(x=x, iters=k, residual=res, converged=res <= tol)
 
 
@@ -117,38 +212,54 @@ def cg(matvec: Callable, b: jnp.ndarray, precond: Callable = lambda r: r,
 def bicgstab(matvec: Callable, b: jnp.ndarray,
              precond: Callable = lambda r: r, tol: float = 1e-6,
              max_iters: int = 500) -> SolveResult:
-    """Preconditioned BiCGStab for non-symmetric systems."""
+    """Preconditioned BiCGStab for non-symmetric systems.
+
+    As in :func:`cg`, ‖r‖² is carried in the loop state — computed where the
+    residual update already has ``r`` in registers — so the loop condition
+    costs no extra vector pass."""
+    dt = b.dtype
+    acc = jnp.promote_types(dt, jnp.float32)   # dots/norms in ≥fp32
+
+    def _dot(u, v):
+        return jnp.vdot(u.astype(acc), v.astype(acc))
+
     x0 = jnp.zeros_like(b)
     r0 = b - matvec(x0)
     rhat = r0
-    bnorm = jnp.maximum(jnp.linalg.norm(b), 1e-30)
-    init = (x0, r0, r0, jnp.ones(()), jnp.ones(()), jnp.ones(()),
-            jnp.zeros_like(b), jnp.zeros_like(b), 0)
+    rr0 = jnp.real(_dot(r0, r0))
+    # floor must be representable in acc (1e-60 underflows fp32
+    # to 0.0 -> 0/0 = NaN on a zero rhs)
+    bnorm2 = jnp.maximum(jnp.real(_dot(b, b)), jnp.finfo(acc).tiny)
+    thresh2 = (tol ** 2) * bnorm2
+    one = jnp.ones((), acc)
+    init = (x0, r0, r0, one, one, one,
+            jnp.zeros_like(b), jnp.zeros_like(b), rr0, 0)
 
     def cond(state):
-        _, r, *_, k = state
-        return (jnp.linalg.norm(r) / bnorm > tol) & (k < max_iters)
+        *_, rr, k = state
+        return (rr > thresh2) & (k < max_iters)
 
     def body(state):
-        x, r, _, rho, alpha, omega, v, p, k = state
-        rho_new = jnp.vdot(rhat, r)
+        x, r, _, rho, alpha, omega, v, p, _, k = state
+        rho_new = _dot(rhat, r)
         beta = (rho_new / jnp.where(rho == 0, 1e-30, rho)) * (
             alpha / jnp.where(omega == 0, 1e-30, omega))
-        p = r + beta * (p - omega * v)
-        ph = precond(p)
+        p = (r + beta * (p - omega * v)).astype(dt)
+        ph = precond(p).astype(dt)
         v = matvec(ph)
-        alpha = rho_new / jnp.maximum(jnp.vdot(rhat, v), 1e-30)
-        s = r - alpha * v
-        sh = precond(s)
+        alpha = rho_new / jnp.maximum(_dot(rhat, v), 1e-30)
+        s = (r - alpha * v).astype(dt)
+        sh = precond(s).astype(dt)
         t = matvec(sh)
-        omega = jnp.vdot(t, s) / jnp.maximum(jnp.vdot(t, t), 1e-30)
-        x = x + alpha * ph + omega * sh
-        r = s - omega * t
-        return x, r, rhat, rho_new, alpha, omega, v, p, k + 1
+        omega = _dot(t, s) / jnp.maximum(_dot(t, t), 1e-30)
+        x = (x + alpha * ph + omega * sh).astype(dt)
+        r = (s - omega * t).astype(dt)
+        rr = jnp.real(_dot(r, r))
+        return x, r, rhat, rho_new, alpha, omega, v, p, rr, k + 1
 
     out = jax.lax.while_loop(cond, body, init)
-    x, r, k = out[0], out[1], out[-1]
-    res = jnp.linalg.norm(r) / bnorm
+    x, rr, k = out[0], out[-2], out[-1]
+    res = jnp.sqrt(rr / bnorm2)
     return SolveResult(x=x, iters=k, residual=res, converged=res <= tol)
 
 
@@ -156,28 +267,120 @@ SOLVERS = {"cg": cg, "bicgstab": bicgstab}
 
 from .cache import BoundedCache
 
-_PRE_CACHE = BoundedCache(maxsize=16)
+_PRE_CACHE = BoundedCache(maxsize=32)
+
+
+def precond_for(a: SparseCSR, kind: str, op=None,
+                space: str = "original") -> Callable:
+    """Public form of the once-per-solve preconditioner setup: the closure
+    for matrix ``a`` in the given execution space.  ``space="permuted"``
+    needs the bound :class:`~repro.core.spmv.SpMVOperator` ``op`` (its
+    ``perm`` carries the diagonal into the reordered space exactly the way
+    ``solve()`` does it) — benchmarks and external solvers should use this
+    rather than re-deriving the permutation convention."""
+    from .. import autotune as at
+
+    key = at.matrix_key(a)
+    if space == "permuted":
+        if op is None or not op.supports_permuted:
+            raise ValueError("space='permuted' needs an operator with a "
+                             "permuted execution space")
+        return _cached_precond(a, kind, key, perm=np.asarray(op.obj.perm),
+                               n_pad=op.n_pad)[0]
+    return _cached_precond(a, kind, key)[0]
+
+
+def _cached_precond(a: SparseCSR, kind: str, key: str,
+                    perm: Optional[np.ndarray] = None,
+                    n_pad: int = 0) -> tuple[Callable, Optional[np.ndarray]]:
+    """Preconditioner closure (+ inverse-diagonal array) for ``a``, memoized
+    so repeated solves reuse one XLA-compilable closure.  With ``perm`` the
+    diagonal is carried into the permuted space once: slot i gets the inverse
+    diagonal of original vertex ``perm[i]``; padding slots get 1.0 (their
+    residual coordinates are identically zero, so any finite value works).
+
+    The cache key includes the permutation's content hash — two operators
+    over the same matrix may carry different partitionings (different
+    ``n_parts``/method via a caller-supplied EHYB build), and each needs its
+    own permuted diagonal."""
+    if perm is None:
+        cache_key = (key, kind, "original")
+    else:
+        cache_key = (key, kind, "permuted", n_pad,
+                     hash(np.ascontiguousarray(perm).tobytes()))
+    hit = _PRE_CACHE.get(cache_key)
+    if hit is not None:
+        return hit
+    inv = precond_inv_diag(a, kind)
+    if inv is not None and perm is not None:
+        inv_pad = np.ones(n_pad)
+        inv_pad[perm < a.n] = inv[perm[perm < a.n]]
+        inv = inv_pad
+    out = (_diag_closure(inv), inv)
+    _PRE_CACHE[cache_key] = out
+    return out
 
 
 def solve(a: SparseCSR, b: jnp.ndarray, *, method: str = "cg",
           precond: str = "jacobi", format: str = "auto",
-          tol: float = 1e-6, max_iters: int = 500) -> SolveResult:
+          tol: float = 1e-6, max_iters: int = 500, space: str = "auto",
+          fused_update: str | bool = "auto") -> SolveResult:
     """Solve ``A x = b`` through the unified SpMV entry point.
 
-    The matrix goes through ``build_spmv`` (autotuned format selection by
-    default), and the chosen operator's matvec drives the Krylov loop — the
-    paper's experiment (same solver, swap the SpMV) as a one-liner.  Both the
-    operator and the preconditioner are memoized per matrix, so repeated
-    solves reuse one XLA compilation of the whole Krylov loop.
+    The matrix goes through ``build_spmv`` with ``context="solver"`` (the
+    autotuner ranks on permuted-space, fused-ER traffic), and the chosen
+    operator's matvec drives the Krylov loop.  When the operator supports the
+    permuted space (EHYB family), the whole ``lax.while_loop`` runs there:
+    ``b`` and the preconditioner diagonal are permuted once, the iterate is
+    un-permuted once at the end — see the module DESIGN docstring.
+
+    space: "auto" (permuted whenever the format supports it — the default
+           for EHYB-family operators), "original", or "permuted" (error if
+           the chosen format has no permuted space).
+    fused_update: route CG's vector updates through the fused Pallas step
+           kernel; "auto" enables it off-CPU only (the interpreted kernel on
+           CPU is a validation path, not a fast path).
     """
     from .. import autotune as at
     from .spmv import cached_spmv_operator
 
     if method not in SOLVERS:
         raise ValueError(f"unknown method {method!r}; have {sorted(SOLVERS)}")
-    op = cached_spmv_operator(a, format=format, dtype=b.dtype)
-    pre_key = (at.matrix_key(a), precond)
-    pre = _PRE_CACHE.get(pre_key)
-    if pre is None:
-        pre = _PRE_CACHE[pre_key] = PRECONDITIONERS[precond](a)
-    return SOLVERS[method](op.matvec, b, pre, tol=tol, max_iters=max_iters)
+    if space not in ("auto", "original", "permuted"):
+        raise ValueError(f"unknown space {space!r}")
+    op = cached_spmv_operator(a, format=format, dtype=b.dtype,
+                              context="solver")
+    use_perm = (op.supports_permuted if space == "auto"
+                else space == "permuted")
+    if use_perm and not op.supports_permuted:
+        raise ValueError(
+            f"format {op.format!r} has no permuted execution space")
+    if fused_update is True and method != "cg":
+        raise ValueError(
+            f"fused_update is a CG-step kernel; method {method!r} has no "
+            f"fused vector-update path")
+    if fused_update == "auto":
+        # TPU only: the fused kernel's cross-grid-step dots accumulation
+        # relies on the sequential TPU grid (racy on parallel GPU grids)
+        fused_update = jax.default_backend() == "tpu" and method == "cg"
+    key = at.matrix_key(a)
+    if use_perm:
+        pre, inv = _cached_precond(a, precond, key,
+                                   perm=np.asarray(op.obj.perm),
+                                   n_pad=op.n_pad)
+        b_run = op.to_permuted(b)
+        mv = op.matvec_permuted
+    else:
+        pre, inv = _cached_precond(a, precond, key)
+        b_run, mv = b, op.matvec
+    kw = {}
+    if method == "cg":
+        kw = {"fused_update": bool(fused_update),
+              "precond_inv": None if inv is None
+              else jnp.asarray(inv, jnp.promote_types(b.dtype,
+                                                      jnp.float32))}
+    r = SOLVERS[method](mv, b_run, pre, tol=tol, max_iters=max_iters, **kw)
+    if use_perm:
+        r = SolveResult(x=op.from_permuted(r.x), iters=r.iters,
+                        residual=r.residual, converged=r.converged)
+    return r

@@ -66,14 +66,52 @@ class SparseLinear:
         return cls(d_in=d_in, d_out=d_out, op=op, density=density,
                    csr=csr, ehyb=shared.get("ehyb"))
 
-    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
-        """x: (..., d_in) → (..., d_out) via the unified SpMM path."""
+    # ---- permuted-space threading (EHYB family) ---------------------------
+    # A single layer application must permute activations in and logits out
+    # anyway (they arrive/leave in feature order), so ``__call__`` simply
+    # rides the operator's fused pipeline.  Stacked sparse layers sharing one
+    # partitioning — or callers that keep activations resident between
+    # applies — can hoist the gathers with the explicit space API below,
+    # mirroring ``SpMVOperator``.
+
+    @property
+    def supports_permuted(self) -> bool:
+        return self.op.supports_permuted
+
+    def to_permuted(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(..., d_in) activations -> (..., n_pad) permuted padded space."""
         lead = x.shape[:-1]
-        xt = x.reshape(-1, self.d_in).T                  # (d_in, T)
+        xt = self._embed(x.reshape(-1, self.d_in).T)
+        return self.op.to_permuted(xt).T.reshape(*lead, self.op.n_pad)
+
+    def from_permuted(self, y_new: jnp.ndarray) -> jnp.ndarray:
+        """(..., n_pad) permuted outputs -> (..., d_out)."""
+        lead = y_new.shape[:-1]
+        yt = self.op.from_permuted(y_new.reshape(-1, self.op.n_pad).T)
+        return yt[: self.d_out].T.reshape(*lead, self.d_out)
+
+    def _embed(self, xt: jnp.ndarray) -> jnp.ndarray:
         n = self.op.n
         if n > self.d_in:
             xt = jnp.concatenate(
                 [xt, jnp.zeros((n - self.d_in, xt.shape[1]), xt.dtype)], 0)
+        return xt
+
+    def __call__(self, x: jnp.ndarray, space: str = "original") -> jnp.ndarray:
+        """x: (..., d_in) → (..., d_out) via the unified SpMM path.
+
+        ``space="permuted"`` treats x as (..., n_pad) permuted activations
+        and returns (..., n_pad) permuted outputs (no gathers — for chained
+        applications between ``to_permuted``/``from_permuted``)."""
+        lead = x.shape[:-1]
+        if space == "permuted":
+            if not self.supports_permuted:
+                raise ValueError(
+                    f"format {self.op.format!r} has no permuted space")
+            xt = x.reshape(-1, self.op.n_pad).T
+            yt = self.op.apply_permuted(self.op.obj, xt)
+            return yt.T.reshape(*lead, self.op.n_pad)
+        xt = self._embed(x.reshape(-1, self.d_in).T)     # (n, T)
         yt = self.op(xt)                                 # (n, T)
         return yt[: self.d_out].T.reshape(*lead, self.d_out)
 
@@ -82,7 +120,9 @@ class SparseLinear:
 
         dense = self.d_in * self.d_out * val_bytes
         if self.ehyb is not None:
-            sparse = self.ehyb.bytes_moved(val_bytes)["total"]
+            # per-call accounting: boundary permutes paid, ER fused
+            sparse = self.ehyb.bytes_moved(val_bytes, space="original",
+                                           fused_er=True)["total"]
         else:
             sparse = at.estimate_bytes(self.csr, self.op.format, val_bytes)
         return {"dense": dense, "format": self.op.format,

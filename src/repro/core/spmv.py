@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .ehyb import EHYB, EHYBBuckets
+from .ehyb import EHYB, EHYBBuckets, group_er_by_partition
 from .matrices import SparseCSR
 
 
@@ -121,24 +121,38 @@ class HYBDevice:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class EHYBDevice:
-    """Device-side EHYB (baseline uniform tiles)."""
+    """Device-side EHYB (baseline uniform tiles).
+
+    Besides the global ER tables (kept for the distributed path), the
+    container carries the ER slots regrouped by owning partition
+    (``er_p_*``, built once by :func:`repro.core.ehyb.group_er_by_partition`)
+    so the fused kernel — and the jnp oracle mirroring it — accumulate ER
+    rows inside the grid step that owns them.  ``has_er`` is static aux so
+    jitted paths drop the ER stage entirely on ER-free matrices.
+    """
 
     n: int
     n_pad: int
     n_parts: int
     vec_size: int
+    has_er: bool
     ell_vals: jnp.ndarray    # (P, V, W)
     ell_cols: jnp.ndarray    # (P, V, W) uint16 local
     er_vals: jnp.ndarray     # (R, We)
     er_cols: jnp.ndarray     # (R, We) int32 global-new
     er_row_idx: jnp.ndarray  # (R,)
+    er_p_vals: jnp.ndarray   # (P, E, We) — ER grouped by owning partition
+    er_p_cols: jnp.ndarray   # (P, E, We) int32 global-new
+    er_p_rows: jnp.ndarray   # (P, E) int32 local row within the partition
     perm: jnp.ndarray        # (n_pad,)
     inv_perm: jnp.ndarray    # (n_pad,)
 
     def tree_flatten(self):
         leaves = (self.ell_vals, self.ell_cols, self.er_vals, self.er_cols,
-                  self.er_row_idx, self.perm, self.inv_perm)
-        return leaves, (self.n, self.n_pad, self.n_parts, self.vec_size)
+                  self.er_row_idx, self.er_p_vals, self.er_p_cols,
+                  self.er_p_rows, self.perm, self.inv_perm)
+        return leaves, (self.n, self.n_pad, self.n_parts, self.vec_size,
+                        self.has_er)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
@@ -147,8 +161,14 @@ class EHYBDevice:
     @classmethod
     def from_ehyb(cls, e: EHYB, dtype=jnp.float32):
         t = e.as_jax(dtype=dtype)
-        return cls(e.n, e.n_pad, e.n_parts, e.vec_size, t["ell_vals"],
-                   t["ell_cols"], t["er_vals"], t["er_cols"], t["er_row_idx"],
+        g = group_er_by_partition(e)
+        dt = dtype or jnp.float32
+        return cls(e.n, e.n_pad, e.n_parts, e.vec_size, g["has_er"],
+                   t["ell_vals"], t["ell_cols"], t["er_vals"], t["er_cols"],
+                   t["er_row_idx"],
+                   jnp.asarray(g["er_p_vals"], dtype=dt),
+                   jnp.asarray(g["er_p_cols"]),
+                   jnp.asarray(g["er_p_rows"]),
                    t["perm"], t["inv_perm"])
 
 
@@ -161,6 +181,7 @@ class EHYBPackedDevice:
     n_pad: int
     n_parts: int
     vec_size: int
+    has_er: bool
     packed_vals: jnp.ndarray    # (P, L)
     packed_cols: jnp.ndarray    # (P, L) uint16
     col_starts: jnp.ndarray     # (P, W+1) int32
@@ -168,14 +189,19 @@ class EHYBPackedDevice:
     er_vals: jnp.ndarray
     er_cols: jnp.ndarray
     er_row_idx: jnp.ndarray
+    er_p_vals: jnp.ndarray      # (P, E, We) fused-ER tiles (see EHYBDevice)
+    er_p_cols: jnp.ndarray
+    er_p_rows: jnp.ndarray
     perm: jnp.ndarray
     inv_perm: jnp.ndarray
 
     def tree_flatten(self):
         leaves = (self.packed_vals, self.packed_cols, self.col_starts,
                   self.col_rows, self.er_vals, self.er_cols, self.er_row_idx,
+                  self.er_p_vals, self.er_p_cols, self.er_p_rows,
                   self.perm, self.inv_perm)
-        return leaves, (self.n, self.n_pad, self.n_parts, self.vec_size)
+        return leaves, (self.n, self.n_pad, self.n_parts, self.vec_size,
+                        self.has_er)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
@@ -185,11 +211,15 @@ class EHYBPackedDevice:
     def from_packed(cls, pk, dtype=jnp.float32):
         e = pk.base
         t = e.as_jax(dtype=dtype)
-        return cls(e.n, e.n_pad, e.n_parts, e.vec_size,
+        g = group_er_by_partition(e)
+        return cls(e.n, e.n_pad, e.n_parts, e.vec_size, g["has_er"],
                    jnp.asarray(pk.packed_vals, dtype=dtype),
                    jnp.asarray(pk.packed_cols),
                    jnp.asarray(pk.col_starts), jnp.asarray(pk.col_rows),
                    t["er_vals"], t["er_cols"], t["er_row_idx"],
+                   jnp.asarray(g["er_p_vals"], dtype=dtype),
+                   jnp.asarray(g["er_p_cols"]),
+                   jnp.asarray(g["er_p_rows"]),
                    t["perm"], t["inv_perm"])
 
 
@@ -246,28 +276,68 @@ def _ehyb_ell_part(ell_vals, ell_cols, x_parts):
     return jax.vmap(one_part)(x_parts, ell_cols, ell_vals)   # (P, V, R)
 
 
+def _to_permuted(obj, x: jnp.ndarray) -> tuple[jnp.ndarray, bool]:
+    """Original (n[,R]) vector(s) -> permuted padded (n_pad[,R]) space."""
+    x2, squeeze = _as_2d(x)
+    xpad = jnp.concatenate(
+        [x2, jnp.zeros((obj.n_pad - obj.n, x2.shape[1]), dtype=x2.dtype)],
+        axis=0)
+    return xpad[obj.perm], squeeze
+
+
+def _from_permuted(obj, y_new: jnp.ndarray, squeeze: bool) -> jnp.ndarray:
+    y = y_new[obj.inv_perm[: obj.n]]
+    return y[:, 0] if squeeze else y
+
+
+def _fused_er_parts(x_new, er_p_vals, er_p_cols, er_p_rows, vec_size):
+    """Per-partition ER contribution in (P, V, R) layout — the transparent
+    form of the fused megakernel's ER stage: each partition gathers its own
+    ER rows from the (VMEM-resident) full x and scatters them LOCALLY into
+    its (V, R) output block.  No global scatter-add."""
+    R = x_new.shape[1]
+
+    def one_part(vals, cols, rows):
+        g = x_new[cols]                                  # (E, We, R)
+        ye = jnp.einsum("ew,ewr->er", vals, g)           # (E, R)
+        return jnp.zeros((vec_size, R), dtype=ye.dtype).at[rows].add(ye)
+
+    return jax.vmap(one_part)(er_p_vals, er_p_cols, er_p_rows)
+
+
+@jax.jit
+def ehyb_spmv_permuted(m: EHYBDevice, x_new: jnp.ndarray) -> jnp.ndarray:
+    """EHYB SpMV/SpMM in the permuted space: x_new, y_new are (n_pad[, R]).
+
+    The hot-loop form: no pad, no ``perm``/``inv_perm`` gathers, ER fused
+    into the per-partition accumulation (oracle for the fused Pallas
+    megakernel)."""
+    x2, squeeze = _as_2d(x_new)
+    R = x2.shape[1]
+    x_parts = x2.reshape(m.n_parts, m.vec_size, R)
+    y_parts = _ehyb_ell_part(m.ell_vals, m.ell_cols, x_parts)
+    if m.has_er:
+        y_parts = y_parts + _fused_er_parts(
+            x2, m.er_p_vals, m.er_p_cols, m.er_p_rows, m.vec_size).astype(
+                y_parts.dtype)
+    y_new = y_parts.reshape(m.n_pad, R)
+    return y_new[:, 0] if squeeze else y_new
+
+
 @jax.jit
 def ehyb_spmv(m: EHYBDevice, x: jnp.ndarray) -> jnp.ndarray:
-    """Pure-jnp EHYB SpMV/SpMM (oracle for the Pallas kernel)."""
-    x2, squeeze = _as_2d(x)
-    R = x2.shape[1]
-    xpad = jnp.concatenate(
-        [x2, jnp.zeros((m.n_pad - m.n, R), dtype=x2.dtype)], axis=0)
-    x_new = xpad[m.perm]                                   # reordered space
-    x_parts = x_new.reshape(m.n_parts, m.vec_size, R)
-    y_ell = _ehyb_ell_part(m.ell_vals, m.ell_cols, x_parts)
-    y_new = y_ell.reshape(m.n_pad, R)
-    # ER part: uncached global gather (small by construction)
-    g = x_new[m.er_cols]                                   # (Rr, We, R)
-    y_er = jnp.einsum("ew,ewr->er", m.er_vals, g)
-    y_new = y_new.at[m.er_row_idx].add(y_er)
-    y = y_new[m.inv_perm[: m.n]]
-    return y[:, 0] if squeeze else y
+    """Pure-jnp EHYB SpMV/SpMM in the ORIGINAL space (oracle for the Pallas
+    kernel): one permuted-space apply bracketed by the per-call perm /
+    inv_perm gathers that :func:`ehyb_spmv_permuted` lets solvers hoist."""
+    x_new, squeeze = _to_permuted(m, x)
+    y_new = ehyb_spmv_permuted(m, x_new)
+    return _from_permuted(m, y_new, squeeze)
 
 
 def ehyb_spmv_buckets(b: EHYBBuckets, x: jnp.ndarray,
                       dtype=jnp.float32) -> jnp.ndarray:
-    """Width-bucketed EHYB (beyond-paper): one dense tile op per width class."""
+    """Width-bucketed EHYB from the HOST container (uploads per call; kept as
+    the transparent reference — hot paths use :class:`EHYBBucketsDevice`)."""
     e = b.base
     x2, squeeze = _as_2d(x)
     R = x2.shape[1]
@@ -286,6 +356,91 @@ def ehyb_spmv_buckets(b: EHYBBuckets, x: jnp.ndarray,
     y_new = y_new.at[jnp.asarray(e.er_row_idx)].add(y_er)
     y = y_new[jnp.asarray(e.inv_perm[: e.n])]
     return y[:, 0] if squeeze else y
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EHYBBucketsDevice:
+    """Device-side width-bucketed EHYB: all tables uploaded once, pytree-
+    registered so the bucketed SpMV jits like every other device format
+    (the host :class:`EHYBBuckets` path re-uploaded per call).  Per-bucket
+    widths are static aux; the host container rides along (identity-hashed)
+    for the distributed path to recover the partition structure."""
+
+    n: int
+    n_pad: int
+    n_parts: int
+    vec_size: int
+    has_er: bool
+    widths: tuple            # static per-bucket tile widths
+    part_ids: tuple          # tuple[jnp.ndarray (B_i,)]
+    vals: tuple              # tuple[jnp.ndarray (B_i, V, W_i)]
+    cols: tuple              # tuple[jnp.ndarray (B_i, V, W_i)]
+    er_p_vals: jnp.ndarray   # fused-ER tiles (see EHYBDevice)
+    er_p_cols: jnp.ndarray
+    er_p_rows: jnp.ndarray
+    perm: jnp.ndarray
+    inv_perm: jnp.ndarray
+    host: object = None      # host EHYBBuckets (aux; eq/hash by identity)
+
+    def tree_flatten(self):
+        nb = len(self.part_ids)
+        leaves = (*self.part_ids, *self.vals, *self.cols, self.er_p_vals,
+                  self.er_p_cols, self.er_p_rows, self.perm, self.inv_perm)
+        aux = (self.n, self.n_pad, self.n_parts, self.vec_size, self.has_er,
+               self.widths, nb, self.host)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        *head, nb, host = aux
+        part_ids = tuple(leaves[:nb])
+        vals = tuple(leaves[nb:2 * nb])
+        cols = tuple(leaves[2 * nb:3 * nb])
+        rest = leaves[3 * nb:]
+        return cls(*head, part_ids, vals, cols, *rest, host=host)
+
+    @classmethod
+    def from_buckets(cls, b: EHYBBuckets, dtype=jnp.float32):
+        e = b.base
+        g = group_er_by_partition(e)
+        return cls(e.n, e.n_pad, e.n_parts, e.vec_size, g["has_er"],
+                   tuple(b.widths),
+                   tuple(jnp.asarray(p) for p in b.part_ids),
+                   tuple(jnp.asarray(v, dtype=dtype) for v in b.vals),
+                   tuple(jnp.asarray(c) for c in b.cols),
+                   jnp.asarray(g["er_p_vals"], dtype=dtype),
+                   jnp.asarray(g["er_p_cols"]),
+                   jnp.asarray(g["er_p_rows"]),
+                   jnp.asarray(e.perm), jnp.asarray(e.inv_perm),
+                   host=b)
+
+
+@jax.jit
+def ehyb_buckets_spmv_permuted(m: EHYBBucketsDevice,
+                               x_new: jnp.ndarray) -> jnp.ndarray:
+    """Bucketed EHYB SpMV/SpMM in the permuted space (device container)."""
+    x2, squeeze = _as_2d(x_new)
+    R = x2.shape[1]
+    x_parts = x2.reshape(m.n_parts, m.vec_size, R)
+    y_parts = jnp.zeros((m.n_parts, m.vec_size, R), dtype=x2.dtype)
+    for pid, vals, cols in zip(m.part_ids, m.vals, m.cols):
+        yv = _ehyb_ell_part(vals, cols, x_parts[pid])
+        y_parts = y_parts.at[pid].set(yv.astype(x2.dtype))
+    if m.has_er:
+        y_parts = y_parts + _fused_er_parts(
+            x2, m.er_p_vals, m.er_p_cols, m.er_p_rows, m.vec_size).astype(
+                y_parts.dtype)
+    y_new = y_parts.reshape(m.n_pad, R)
+    return y_new[:, 0] if squeeze else y_new
+
+
+@jax.jit
+def ehyb_buckets_spmv(m: EHYBBucketsDevice, x: jnp.ndarray) -> jnp.ndarray:
+    """Bucketed EHYB SpMV/SpMM, original space (device container)."""
+    x_new, squeeze = _to_permuted(m, x)
+    y_new = ehyb_buckets_spmv_permuted(m, x_new)
+    return _from_permuted(m, y_new, squeeze)
 
 
 def dense_spmv(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
@@ -309,14 +464,24 @@ class SpMVOperator:
     ``op(x)`` runs the SpMV/SpMM; ``op.format`` names the chosen format;
     ``op.tuning`` (when selected by the autotuner) holds the full
     :class:`repro.autotune.TuneResult` with the per-format modeled bytes.
+
+    **Execution spaces.** EHYB-family formats compute in a symmetrically
+    reordered, padded vector space.  ``op(x)`` takes and returns
+    original-space vectors, paying a ``perm`` gather on the way in and an
+    ``inv_perm`` gather on the way out *per call*.  When
+    ``op.supports_permuted``, hot loops should instead hoist the permutation:
+    ``x_new = op.to_permuted(x)`` once, ``op.matvec_permuted`` per iteration
+    (operating on (n_pad[, R]) permuted vectors), ``op.from_permuted(y_new)``
+    once at the end — the contract ``core.solver.solve`` runs on.
     """
 
     format: str
     obj: object                       # device container of ``format``
-    apply: callable                   # (obj, x) -> y
+    apply: callable                   # (obj, x) -> y, original space
     n: int
     nnz: int
     tuning: object = None             # TuneResult | None
+    apply_permuted: callable = None   # (obj, x_new) -> y_new, or None
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
         return self.apply(self.obj, x)
@@ -326,15 +491,56 @@ class SpMVOperator:
         """The bare ``x -> y`` closure (what the Krylov solvers take)."""
         return self.__call__
 
+    # ---- permuted-space execution -----------------------------------------
+
+    @property
+    def supports_permuted(self) -> bool:
+        return self.apply_permuted is not None
+
+    @property
+    def n_pad(self) -> int:
+        """Padded dimension of the permuted space."""
+        return self.obj.n_pad if self.supports_permuted else self.n
+
+    def to_permuted(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Original (n[, R]) -> permuted padded (n_pad[, R]).  Once per solve."""
+        if not self.supports_permuted:
+            raise ValueError(f"format {self.format!r} has no permuted space")
+        xn, squeeze = _to_permuted(self.obj, jnp.asarray(x))
+        return xn[:, 0] if squeeze else xn
+
+    def from_permuted(self, y_new: jnp.ndarray) -> jnp.ndarray:
+        """Permuted padded (n_pad[, R]) -> original (n[, R]).  Once per solve."""
+        if not self.supports_permuted:
+            raise ValueError(f"format {self.format!r} has no permuted space")
+        y2, squeeze = _as_2d(jnp.asarray(y_new))
+        return _from_permuted(self.obj, y2, squeeze)
+
+    def _permuted_call(self, x_new: jnp.ndarray) -> jnp.ndarray:
+        return self.apply_permuted(self.obj, x_new)
+
+    @property
+    def matvec_permuted(self):
+        """``x_new -> y_new`` in the permuted space (bound method, so its
+        hash is stable and jitted solver loops don't recompile per access)."""
+        if not self.supports_permuted:
+            raise ValueError(f"format {self.format!r} has no permuted space")
+        return self._permuted_call
+
 
 def build_spmv(a, format: str = "auto", dtype=None, *, mode: str = "model",
-               candidates=None, shared: dict = None) -> SpMVOperator:
+               candidates=None, shared: dict = None,
+               context: str = "spmv") -> SpMVOperator:
     """Build the unified SpMV operator for CSR matrix ``a``.
 
     format="auto"    — pick via the autotuner (cost model; ``mode="measure"``
                        additionally times the top candidates on-device);
     format=<name>    — force a registered format ("csr", "ell", "hyb",
                        "ehyb", "ehyb_bucketed", "ehyb_packed", "dense").
+    context          — workload the byte model ranks for: "spmv" (one-shot
+                       call, original space, permutation paid per call) or
+                       "solver" (iterative hot loop in the permuted space,
+                       permutation hoisted and amortized).
     """
     from .. import autotune as at
 
@@ -343,11 +549,13 @@ def build_spmv(a, format: str = "auto", dtype=None, *, mode: str = "model",
     tuning = None
     if format == "auto":
         tuning = at.autotune(a, dtype, mode=mode, candidates=candidates,
-                             shared=shared)
+                             shared=shared, context=context)
         format = tuning.format
-    obj, apply = at.get_format(format).build(a, dtype, shared)
+    spec = at.get_format(format)
+    obj, apply = spec.build(a, dtype, shared)
     return SpMVOperator(format=format, obj=obj, apply=apply, n=a.n,
-                        nnz=a.nnz, tuning=tuning)
+                        nnz=a.nnz, tuning=tuning,
+                        apply_permuted=spec.permuted)
 
 
 from .cache import BoundedCache
@@ -355,22 +563,24 @@ from .cache import BoundedCache
 _OP_CACHE = BoundedCache(maxsize=16)
 
 
-def cached_spmv_operator(a, format: str = "auto", dtype=None) -> SpMVOperator:
+def cached_spmv_operator(a, format: str = "auto", dtype=None,
+                         context: str = "spmv") -> SpMVOperator:
     """``build_spmv`` memoized under the value-inclusive matrix hash (LRU,
     bounded — transient workloads that update values per step evict old
     operators instead of leaking device arrays).
 
     Returning the *same* operator object for the same (matrix, format,
-    dtype) keeps its matvec jit-cache-stable: repeated ``spmv()``/``solve()``
-    calls neither rebuild device arrays nor retrigger XLA compilation.
+    dtype, context) keeps its matvec jit-cache-stable: repeated
+    ``spmv()``/``solve()`` calls neither rebuild device arrays nor retrigger
+    XLA compilation.
     """
     from .. import autotune as at
 
     dtype = dtype or jnp.float32
-    key = (at.matrix_key(a), format, jnp.dtype(dtype).name)
+    key = (at.matrix_key(a), format, jnp.dtype(dtype).name, context)
     op = _OP_CACHE.get(key)
     if op is None:
-        op = _OP_CACHE[key] = build_spmv(a, format, dtype)
+        op = _OP_CACHE[key] = build_spmv(a, format, dtype, context=context)
     return op
 
 

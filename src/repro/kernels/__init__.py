@@ -1,17 +1,27 @@
 """Pallas TPU kernels for the paper's compute hot-spot: EHYB SpMV/SpMM.
 
-ehyb_spmv.py — pl.pallas_call kernels with explicit BlockSpec VMEM tiling
-               (partition ↔ grid step; x-slice ↔ VMEM block).
-ops.py       — jit'd public wrappers (interpret=True on CPU).
-ref.py       — pure-jnp oracles used by the allclose test sweeps.
+ehyb_spmv.py   — pl.pallas_call kernels with explicit BlockSpec VMEM tiling
+                 (partition ↔ grid step; x-slice ↔ VMEM block), including the
+                 fused megakernels (sliced-ELL + per-partition ER in one
+                 launch).
+ops.py         — jit'd public wrappers (interpret=True on CPU); the
+                 ``*_permuted`` variants are the solver hot-loop entry points.
+solver_step.py — fused CG vector-update kernel (axpy + preconditioner apply
+                 + both dot reductions in one HBM pass).
+ref.py         — pure-jnp oracles used by the allclose test sweeps.
 """
 
 from .ehyb_spmv import (ehyb_ell_pallas, ehyb_ell_packed_pallas,
+                        ehyb_fused_pallas, ehyb_packed_fused_pallas,
                         er_pallas)
 from .ops import (ehyb_ell_only_pallas, ehyb_spmv_packed_pallas,
-                  ehyb_spmv_pallas)
+                  ehyb_spmv_packed_pallas_permuted, ehyb_spmv_pallas,
+                  ehyb_spmv_pallas_permuted)
+from .solver_step import fused_cg_update
 from . import ref
 
-__all__ = ["ehyb_ell_pallas", "ehyb_ell_packed_pallas", "er_pallas",
+__all__ = ["ehyb_ell_pallas", "ehyb_ell_packed_pallas", "ehyb_fused_pallas",
+           "ehyb_packed_fused_pallas", "er_pallas",
            "ehyb_ell_only_pallas", "ehyb_spmv_packed_pallas",
-           "ehyb_spmv_pallas", "ref"]
+           "ehyb_spmv_packed_pallas_permuted", "ehyb_spmv_pallas",
+           "ehyb_spmv_pallas_permuted", "fused_cg_update", "ref"]

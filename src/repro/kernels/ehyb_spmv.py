@@ -140,6 +140,151 @@ def ehyb_ell_packed_pallas(x_parts: jnp.ndarray, packed_vals: jnp.ndarray,
     )(x_parts, packed_vals, packed_cols, col_starts, col_rows)
 
 
+def _er_stage(acc, xf, erv, erc, rows, v: int, e_chunk: int):
+    """Fused-ER stage shared by the megakernels: partition p's ER rows gather
+    from the VMEM-resident full x and accumulate into p's own (V, R) block.
+
+    The local scatter is a one-hot (V, E) × (E, R) contraction — static
+    shapes, MXU-friendly, no read-modify-write of the output in HBM."""
+    e_, we = erv.shape
+    r = xf.shape[1]
+    er_acc = jnp.zeros((e_, r), dtype=jnp.float32)
+    for k0 in range(0, we, e_chunk):          # static unroll over We chunks
+        k1 = min(k0 + e_chunk, we)
+        g = jnp.take(xf, erc[:, k0:k1], axis=0)         # (E, Wc, R)
+        er_acc = er_acc + jnp.sum(erv[:, k0:k1, None].astype(jnp.float32)
+                                  * g.astype(jnp.float32), axis=1)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (1, v), 1)
+    onehot = (rows[:, None] == row_iota).astype(jnp.float32)   # (E, V)
+    return acc + jnp.dot(onehot.T, er_acc,
+                         preferred_element_type=jnp.float32)
+
+
+def _ehyb_fused_kernel(x_ref, xfull_ref, vals_ref, cols_ref, erv_ref,
+                       erc_ref, err_ref, y_ref, *, w_chunk: int,
+                       e_chunk: int):
+    """Megakernel: one grid step = one partition computes its sliced-ELL tile
+    AND its own ER rows into the same (V, R) output block — one pallas_call
+    per SpMV, no second launch, no caller-side scatter-add."""
+    x = x_ref[0]                              # (V, R)  — the explicit cache
+    vals = vals_ref[0]                        # (V, W)
+    cols = cols_ref[0]                        # (V, W) uint16/int32 local
+    v, w = vals.shape
+    r = x.shape[1]
+    acc = jnp.zeros((v, r), dtype=jnp.float32)
+    for k0 in range(0, w, w_chunk):           # static unroll over W chunks
+        k1 = min(k0 + w_chunk, w)
+        c = cols[:, k0:k1].astype(jnp.int32)  # widen in-register
+        g = jnp.take(x, c, axis=0)            # (V, Wc, R) gather from VMEM
+        acc = acc + jnp.sum(vals[:, k0:k1, None].astype(jnp.float32)
+                            * g.astype(jnp.float32), axis=1)
+    acc = _er_stage(acc, xfull_ref[...], erv_ref[0], erc_ref[0],
+                    err_ref[0], v, e_chunk)
+    y_ref[0] = acc.astype(y_ref.dtype)
+
+
+def ehyb_fused_pallas(x_new: jnp.ndarray, ell_vals: jnp.ndarray,
+                      ell_cols: jnp.ndarray, er_p_vals: jnp.ndarray,
+                      er_p_cols: jnp.ndarray, er_p_rows: jnp.ndarray,
+                      *, interpret: bool = True) -> jnp.ndarray:
+    """Fused EHYB SpMV in the permuted space: y_new (n_pad, R).
+
+    x_new:              (n_pad, R) permuted input (viewed both as per-
+                        partition slices and as the resident full block the
+                        ER gathers hit)
+    ell_vals/ell_cols:  (P, V, W)
+    er_p_vals/er_p_cols: (P, E, We) per-partition ER tiles
+    er_p_rows:          (P, E) local row of each ER slot
+    """
+    n_pad, r = x_new.shape
+    p, v, w = ell_vals.shape
+    _, e, we = er_p_vals.shape
+    x_parts = x_new.reshape(p, v, r)
+    w_chunk = _w_chunk(v, w, r, x_new.dtype.itemsize)
+    e_chunk = _w_chunk(e, we, r, x_new.dtype.itemsize)
+    kernel = functools.partial(_ehyb_fused_kernel, w_chunk=w_chunk,
+                               e_chunk=e_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, v, r), lambda i: (i, 0, 0)),   # x-slice → VMEM
+            pl.BlockSpec((n_pad, r), lambda i: (0, 0)),     # full x (stays)
+            pl.BlockSpec((1, v, w), lambda i: (i, 0, 0)),   # values
+            pl.BlockSpec((1, v, w), lambda i: (i, 0, 0)),   # local cols
+            pl.BlockSpec((1, e, we), lambda i: (i, 0, 0)),  # ER values
+            pl.BlockSpec((1, e, we), lambda i: (i, 0, 0)),  # ER global cols
+            pl.BlockSpec((1, e), lambda i: (i, 0)),         # ER local rows
+        ],
+        out_specs=pl.BlockSpec((1, v, r), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, v, r), x_new.dtype),
+        interpret=interpret,
+    )(x_parts, x_new, ell_vals, ell_cols, er_p_vals, er_p_cols,
+      er_p_rows).reshape(n_pad, r)
+
+
+def _ehyb_packed_fused_kernel(x_ref, xfull_ref, vals_ref, cols_ref,
+                              starts_ref, rows_ref, erv_ref, erc_ref,
+                              err_ref, y_ref, *, w: int, v: int,
+                              e_chunk: int):
+    """Packed-staircase megakernel: kernel v2's column-segment loop plus the
+    fused ER stage, one launch per SpMV."""
+    x = x_ref[0]                                   # (V, R) cached slice
+    r = x.shape[1]
+    acc = jnp.zeros((v, r), dtype=jnp.float32)
+    row_iota = jax.lax.iota(jnp.int32, v)
+    for k in range(w):                             # static unroll over columns
+        off = starts_ref[0, k]
+        rk = rows_ref[0, k]
+        vals = pl.load(vals_ref, (pl.dslice(0, 1), pl.dslice(off, v)))[0]
+        cols = pl.load(cols_ref, (pl.dslice(0, 1), pl.dslice(off, v)))[0]
+        mask = row_iota < rk
+        g = jnp.take(x, cols.astype(jnp.int32), axis=0)        # (V, R)
+        contrib = jnp.where(mask, vals.astype(jnp.float32),
+                            0.0)[:, None] * g.astype(jnp.float32)
+        acc = acc + contrib
+    acc = _er_stage(acc, xfull_ref[...], erv_ref[0], erc_ref[0],
+                    err_ref[0], v, e_chunk)
+    y_ref[0] = acc.astype(y_ref.dtype)
+
+
+def ehyb_packed_fused_pallas(x_new: jnp.ndarray, packed_vals: jnp.ndarray,
+                             packed_cols: jnp.ndarray,
+                             col_starts: jnp.ndarray, col_rows: jnp.ndarray,
+                             er_p_vals: jnp.ndarray, er_p_cols: jnp.ndarray,
+                             er_p_rows: jnp.ndarray, *, vec_size: int,
+                             interpret: bool = True) -> jnp.ndarray:
+    """Fused packed EHYB SpMV in the permuted space: y_new (n_pad, R)."""
+    n_pad, r = x_new.shape
+    p, l = packed_vals.shape
+    w = col_rows.shape[1]
+    v = vec_size
+    _, e, we = er_p_vals.shape
+    x_parts = x_new.reshape(p, v, r)
+    e_chunk = _w_chunk(e, we, r, x_new.dtype.itemsize)
+    kernel = functools.partial(_ehyb_packed_fused_kernel, w=w, v=v,
+                               e_chunk=e_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, v, r), lambda i: (i, 0, 0)),    # x-slice cache
+            pl.BlockSpec((n_pad, r), lambda i: (0, 0)),      # full x (stays)
+            pl.BlockSpec((1, l), lambda i: (i, 0)),          # packed values
+            pl.BlockSpec((1, l), lambda i: (i, 0)),          # packed cols
+            pl.BlockSpec((1, w + 1), lambda i: (i, 0)),      # col offsets
+            pl.BlockSpec((1, w), lambda i: (i, 0)),          # col row counts
+            pl.BlockSpec((1, e, we), lambda i: (i, 0, 0)),   # ER values
+            pl.BlockSpec((1, e, we), lambda i: (i, 0, 0)),   # ER global cols
+            pl.BlockSpec((1, e), lambda i: (i, 0)),          # ER local rows
+        ],
+        out_specs=pl.BlockSpec((1, v, r), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, v, r), x_new.dtype),
+        interpret=interpret,
+    )(x_parts, x_new, packed_vals, packed_cols, col_starts, col_rows,
+      er_p_vals, er_p_cols, er_p_rows).reshape(n_pad, r)
+
+
 def _er_kernel(x_ref, vals_ref, cols_ref, y_ref, *, w_chunk: int):
     """ER part: same dot-row structure but the gather hits the FULL x block
     (uncached in the paper's sense — on TPU, a VMEM-resident copy of x that is

@@ -1,8 +1,14 @@
 """Jit'd public wrappers around the Pallas EHYB kernels.
 
-``interpret=True`` (default on this CPU container) runs the kernel body in
-Python via the Pallas interpreter for correctness validation; on a real TPU
-pass ``interpret=False`` to compile through Mosaic.
+``interpret=None`` (default) resolves per backend: the Pallas interpreter
+on CPU (exact, for validation), compiled through Mosaic on TPU.  Pass an
+explicit bool to override.
+
+The hot path is ONE pallas_call per SpMV: the fused megakernel computes the
+sliced-ELL tile and the partition's own ER rows into the same (V, R) output
+block (ER slots were grouped by owning partition at format build).  The
+``*_permuted`` variants consume/produce permuted-space vectors so solver
+loops skip the per-call pad/``perm``/``inv_perm`` gathers entirely.
 """
 
 from __future__ import annotations
@@ -12,62 +18,101 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..core.spmv import EHYBDevice
+from ..core.spmv import (EHYBDevice, _as_2d, _from_permuted, _fused_er_parts,
+                         _to_permuted)
 from . import ehyb_spmv as _k
 
 
-def _prep_x(m: EHYBDevice, x: jnp.ndarray):
-    x2 = x[:, None] if x.ndim == 1 else x
-    r = x2.shape[1]
-    xpad = jnp.concatenate(
-        [x2, jnp.zeros((m.n_pad - m.n, r), dtype=x2.dtype)], axis=0)
-    x_new = xpad[m.perm]
-    return x_new, x_new.reshape(m.n_parts, m.vec_size, r), x.ndim == 1
+def _resolve_interpret(interpret):
+    """None -> backend default (trace-time): interpreter on CPU, compiled
+    elsewhere.  The autotuner never *selects* interpreter-backed formats on
+    CPU, but forced builds and kernel tests still run there."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_er_kernel"))
+def ehyb_spmv_pallas_permuted(m: EHYBDevice, x_new: jnp.ndarray, *,
+                              interpret: bool | None = None,
+                              use_er_kernel: bool = True) -> jnp.ndarray:
+    """Permuted-space EHYB SpMV/SpMM: x_new (n_pad,) or (n_pad, R).
+
+    ``use_er_kernel=True`` (default) runs the fused megakernel — one
+    pallas_call computing ELL + ER; ``False`` keeps the ELL-only kernel and
+    adds the ER contribution with the jnp per-partition path (validation
+    fallback).  ER-free matrices skip the ER stage statically either way.
+    """
+    interpret = _resolve_interpret(interpret)
+    x2, squeeze = _as_2d(x_new)
+    if m.has_er and use_er_kernel:
+        y_new = _k.ehyb_fused_pallas(x2, m.ell_vals, m.ell_cols,
+                                     m.er_p_vals, m.er_p_cols, m.er_p_rows,
+                                     interpret=interpret)
+    else:
+        x_parts = x2.reshape(m.n_parts, m.vec_size, x2.shape[1])
+        y_parts = _k.ehyb_ell_pallas(x_parts, m.ell_vals, m.ell_cols,
+                                     interpret=interpret)
+        if m.has_er:
+            y_parts = y_parts + _fused_er_parts(
+                x2, m.er_p_vals, m.er_p_cols, m.er_p_rows,
+                m.vec_size).astype(y_parts.dtype)
+        y_new = y_parts.reshape(m.n_pad, x2.shape[1])
+    return y_new[:, 0] if squeeze else y_new
 
 
 @partial(jax.jit, static_argnames=("interpret", "use_er_kernel"))
 def ehyb_spmv_pallas(m: EHYBDevice, x: jnp.ndarray, *,
-                     interpret: bool = True,
+                     interpret: bool | None = None,
                      use_er_kernel: bool = True) -> jnp.ndarray:
-    """Full EHYB SpMV/SpMM: Pallas cached-ELL part + ER part + un-permute.
-
-    x: (n,) or (n, R). Returns matching rank.
-    """
-    x_new, x_parts, squeeze = _prep_x(m, x)
-    y_parts = _k.ehyb_ell_pallas(x_parts, m.ell_vals, m.ell_cols,
-                                 interpret=interpret)
-    y_new = y_parts.reshape(m.n_pad, x_new.shape[1])
-    if use_er_kernel:
-        y_er = _k.er_pallas(x_new, m.er_vals, m.er_cols, interpret=interpret)
-    else:
-        g = x_new[m.er_cols]
-        y_er = jnp.einsum("ew,ewr->er", m.er_vals, g)
-    y_new = y_new.at[m.er_row_idx].add(y_er.astype(y_new.dtype))
-    y = y_new[m.inv_perm[: m.n]]
-    return y[:, 0] if squeeze else y
+    """Full EHYB SpMV/SpMM in the ORIGINAL space: permute in, one fused
+    pallas_call, un-permute out.  x: (n,) or (n, R); returns matching rank."""
+    x_new, squeeze = _to_permuted(m, x)
+    y_new = ehyb_spmv_pallas_permuted(m, x_new, interpret=interpret,
+                                      use_er_kernel=use_er_kernel)
+    return _from_permuted(m, y_new, squeeze)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
 def ehyb_ell_only_pallas(m: EHYBDevice, x: jnp.ndarray, *,
-                         interpret: bool = True) -> jnp.ndarray:
+                         interpret: bool | None = None) -> jnp.ndarray:
     """Cached part only (for kernel-level benchmarking/validation)."""
-    _, x_parts, _ = _prep_x(m, x)
+    interpret = _resolve_interpret(interpret)
+    x_new, _ = _to_permuted(m, x)
+    x_parts = x_new.reshape(m.n_parts, m.vec_size, x_new.shape[1])
     return _k.ehyb_ell_pallas(x_parts, m.ell_vals, m.ell_cols,
                               interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
+def ehyb_spmv_packed_pallas_permuted(m, x_new: jnp.ndarray, *,
+                                     interpret: bool | None = None
+                                     ) -> jnp.ndarray:
+    """Kernel v2 (packed staircase), permuted space, ER fused.
+
+    m: core.spmv.EHYBPackedDevice. x_new: (n_pad,) or (n_pad, R)."""
+    interpret = _resolve_interpret(interpret)
+    x2, squeeze = _as_2d(x_new)
+    if m.has_er:
+        y_new = _k.ehyb_packed_fused_pallas(
+            x2, m.packed_vals, m.packed_cols, m.col_starts, m.col_rows,
+            m.er_p_vals, m.er_p_cols, m.er_p_rows, vec_size=m.vec_size,
+            interpret=interpret)
+    else:
+        x_parts = x2.reshape(m.n_parts, m.vec_size, x2.shape[1])
+        y_parts = _k.ehyb_ell_packed_pallas(
+            x_parts, m.packed_vals, m.packed_cols, m.col_starts, m.col_rows,
+            interpret=interpret)
+        y_new = y_parts.reshape(m.n_pad, x2.shape[1])
+    return y_new[:, 0] if squeeze else y_new
+
+
+@partial(jax.jit, static_argnames=("interpret",))
 def ehyb_spmv_packed_pallas(m, x: jnp.ndarray, *,
-                            interpret: bool = True) -> jnp.ndarray:
-    """Kernel v2 (packed staircase): full EHYB SpMV/SpMM.
+                            interpret: bool | None = None) -> jnp.ndarray:
+    """Kernel v2 (packed staircase), original space: full EHYB SpMV/SpMM.
 
     m: core.spmv.EHYBPackedDevice. x: (n,) or (n, R)."""
-    x_new, x_parts, squeeze = _prep_x(m, x)
-    y_parts = _k.ehyb_ell_packed_pallas(
-        x_parts, m.packed_vals, m.packed_cols, m.col_starts, m.col_rows,
-        interpret=interpret)
-    y_new = y_parts.reshape(m.n_pad, x_new.shape[1])
-    y_er = _k.er_pallas(x_new, m.er_vals, m.er_cols, interpret=interpret)
-    y_new = y_new.at[m.er_row_idx].add(y_er.astype(y_new.dtype))
-    y = y_new[m.inv_perm[: m.n]]
-    return y[:, 0] if squeeze else y
+    x_new, squeeze = _to_permuted(m, x)
+    y_new = ehyb_spmv_packed_pallas_permuted(m, x_new, interpret=interpret)
+    return _from_permuted(m, y_new, squeeze)

@@ -1,0 +1,103 @@
+"""Fused Pallas CG-step kernel: the Krylov loop's vector updates in one pass.
+
+A plain jnp CG body pays 4–6 separate HBM passes over the solution-sized
+vectors per iteration (x-axpy, r-axpy, the preconditioner apply, and two dot
+reductions).  This kernel performs
+
+    x' = x + alpha·p
+    r' = r - alpha·ap
+    z' = minv ⊙ r'            (diagonal preconditioner)
+    rz = <r', z'>,  rr = <r', r'>
+
+in a single grid sweep: each step streams one tile of (x, r, p, ap, minv)
+from HBM, writes the updated tile, and accumulates both dot products into a
+revisited (1, 2) output block (TPU grid steps are sequential, so read-
+modify-write accumulation across steps is well-defined — the standard Pallas
+reduction pattern).  ``rr`` carried in solver loop state is what lets the
+``while_loop`` condition avoid an extra full-vector norm pass.
+
+Like the SpMV kernels, ``interpret=True`` (CPU default) validates the body;
+on TPU pass ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TILE = 2048
+
+
+def _cg_update_kernel(alpha_ref, x_ref, r_ref, p_ref, ap_ref, minv_ref,
+                      xo_ref, ro_ref, zo_ref, dots_ref):
+    i = pl.program_id(0)
+    alpha = alpha_ref[0, 0]
+    p = p_ref[0].astype(jnp.float32)
+    ap = ap_ref[0].astype(jnp.float32)
+    xn = x_ref[0].astype(jnp.float32) + alpha * p
+    rn = r_ref[0].astype(jnp.float32) - alpha * ap
+    zn = minv_ref[0].astype(jnp.float32) * rn
+    xo_ref[0] = xn.astype(xo_ref.dtype)
+    ro_ref[0] = rn.astype(ro_ref.dtype)
+    zo_ref[0] = zn.astype(zo_ref.dtype)
+
+    @pl.when(i == 0)
+    def _init():
+        dots_ref[0, 0] = jnp.zeros((), jnp.float32)
+        dots_ref[0, 1] = jnp.zeros((), jnp.float32)
+
+    dots_ref[0, 0] += jnp.sum(rn * zn)
+    dots_ref[0, 1] += jnp.sum(rn * rn)
+
+
+def _pad_tiles(v: jnp.ndarray, tiles: int, tile: int) -> jnp.ndarray:
+    pad = tiles * tile - v.shape[0]
+    return jnp.concatenate([v, jnp.zeros((pad,), v.dtype)]).reshape(
+        tiles, tile)
+
+
+def fused_cg_update(x: jnp.ndarray, r: jnp.ndarray, p: jnp.ndarray,
+                    ap: jnp.ndarray, minv: jnp.ndarray, alpha: jnp.ndarray,
+                    *, interpret: bool | None = None):
+    """One fused pass: returns (x', r', z', rz, rr).
+
+    All of x, r, p, ap, minv are (n,); alpha is a scalar.  Zero padding to a
+    tile multiple is benign: padded lanes of r' are 0 - alpha·0 = 0 and
+    contribute nothing to either dot.
+
+    ``interpret=None`` (default) resolves per backend: compiled through
+    Mosaic on TPU, interpreter (validation) elsewhere — the revisited-block
+    dots accumulation assumes the sequential TPU grid and would race on a
+    parallel GPU grid, so only TPU gets the compiled path.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _fused_cg_update(x, r, p, ap, minv, alpha, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fused_cg_update(x, r, p, ap, minv, alpha, *, interpret: bool):
+    n = x.shape[0]
+    tile = min(_TILE, max(8, n))
+    tiles = -(-n // tile)
+    xt, rt, pt, apt, mt = (_pad_tiles(v, tiles, tile)
+                           for v in (x, r, p, ap, minv))
+    alpha2 = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+    vec_spec = pl.BlockSpec((1, tile), lambda i: (i, 0))
+    xn, rn, zn, dots = pl.pallas_call(
+        _cg_update_kernel,
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0))] + [vec_spec] * 5,
+        out_specs=[vec_spec, vec_spec, vec_spec,
+                   pl.BlockSpec((1, 2), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((tiles, tile), x.dtype),
+                   jax.ShapeDtypeStruct((tiles, tile), r.dtype),
+                   jax.ShapeDtypeStruct((tiles, tile), r.dtype),
+                   jax.ShapeDtypeStruct((1, 2), jnp.float32)],
+        interpret=interpret,
+    )(alpha2, xt, rt, pt, apt, mt)
+    return (xn.reshape(-1)[:n], rn.reshape(-1)[:n], zn.reshape(-1)[:n],
+            dots[0, 0], dots[0, 1])

@@ -15,7 +15,15 @@ single decode-step matmul (d_model × vocab every token).  When set, the head
 weights are magnitude-pruned and served through the unified SpMV entry point
 (``repro.core.spmv`` → format autotuner), so decode inherits whichever
 format wins for the pruned head's sparsity pattern — the serving-side
-integration of the paper's explicit-caching SpMM.
+integration of the paper's explicit-caching SpMM.  EHYB-family winners
+execute the fused megakernel pipeline inside ``SparseLinear.__call__``
+(permute in, ONE kernel launch with the ER rows folded into their owning
+partitions, un-permute out): activations arrive in feature order and logits
+must leave in vocab order every token, so the boundary gathers are inherent
+to serving — but everything between them is the same permuted-space fast
+path the solver loop runs on, and chained sparse layers can hoist the
+boundary too via ``SparseLinear``'s ``to_permuted``/``from_permuted`` space
+API.
 """
 
 from __future__ import annotations
@@ -66,7 +74,10 @@ class ServeEngine:
                                             head=self.sparse_head))
 
     def _build_sparse_head(self, density, fmt):
-        """Prune the LM head into the unified-SpMV sparse layer (or None)."""
+        """Prune the LM head into the unified-SpMV sparse layer (or None).
+
+        EHYB-family formats serve decode through the fused permuted-space
+        pipeline (one kernel launch per token for the head matmul)."""
         if density is None:
             return None
         from ..core.sparse_linear import SparseLinear
@@ -78,6 +89,14 @@ class ServeEngine:
             w_head = np.asarray(self.params["head"]["w_head"],
                                 dtype=np.float32).T          # (d,V) -> (V, d)
         return SparseLinear.from_dense(w_head, density=density, format=fmt)
+
+    def sparse_head_bytes(self, val_bytes: int = 4):
+        """Modeled HBM bytes of one decode-step head matmul (None if the
+        dense head is in use) — the serving-side view of the §3.4 traffic
+        accounting, fused-ER included via the per-call ("spmv") context."""
+        if self.sparse_head is None:
+            return None
+        return self.sparse_head.bytes_vs_dense(val_bytes)
 
     # ---- compiled pieces ---------------------------------------------------
     @staticmethod

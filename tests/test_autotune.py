@@ -13,16 +13,30 @@ from repro.core.ehyb import build_buckets
 
 def test_cost_model_matches_bytes_moved_accounting():
     """The registry's EHYB-family byte models ARE the format's own
-    ``bytes_moved()`` accounting (EHYB §3.4) — not a reimplementation."""
+    ``bytes_moved()`` accounting (EHYB §3.4) — not a reimplementation.
+    context="spmv" models a one-shot original-space call (perm round trip
+    paid, ER fused); context="solver" models a permuted-space hot-loop
+    iteration (round trip hoisted)."""
     m = poisson3d(8)
     e = build_ehyb(m)
     shared = {"ehyb": e}
     assert at.estimate_bytes(m, "ehyb", 4, shared) == \
-        e.bytes_moved(4, layout="tile")["total"]
+        e.bytes_moved(4, layout="tile", space="original",
+                      fused_er=True)["total"]
     assert at.estimate_bytes(m, "ehyb_packed", 4, shared) == \
-        e.bytes_moved(4, layout="packed")["total"]
+        e.bytes_moved(4, layout="packed", space="original",
+                      fused_er=True)["total"]
     assert at.estimate_bytes(m, "ehyb_bucketed", 4, shared) == \
-        build_buckets(e).bytes_moved(4)["total"]
+        build_buckets(e).bytes_moved(4, space="original",
+                                     fused_er=True)["total"]
+    for fmt, layout in (("ehyb", "tile"), ("ehyb_packed", "packed")):
+        assert at.estimate_bytes(m, fmt, 4, shared, context="solver") == \
+            e.bytes_moved(4, layout=layout, space="permuted",
+                          fused_er=True)["total"]
+    # the solver context drops exactly the per-iteration perm round trip
+    assert (at.estimate_bytes(m, "ehyb", 4, shared)
+            - at.estimate_bytes(m, "ehyb", 4, shared, context="solver")
+            == 2 * e.n_pad * 4)
 
 
 def test_rank_formats_sorted_by_modeled_bytes():
