@@ -13,7 +13,10 @@ Prints ``name,us_per_call,derived`` CSV lines, and writes the
 machine-readable perf trajectory:
 
   BENCH_spmv.json    — per (matrix × format): measured ns/iter, GFLOP/s,
-                       rel-err, modeled HBM bytes (+ per-nnz);
+                       rel-err, modeled HBM bytes (+ per-nnz); plus one
+                       ``kind: "preprocess"`` record per matrix with
+                       rebuild-vs-refill preprocessing seconds (the
+                       value-refresh fast path's amortization multiplier);
   BENCH_solver.json  — per (matrix × format × execution space): CG seconds,
                        iters-to-converge, residual, modeled bytes/iteration
                        (the permuted-space records show the
@@ -41,7 +44,22 @@ import sys
 
 DEFAULT_MODS = ["bytes_model", "preprocessing_time", "speedup_table",
                 "solver_bench", "autotune_table", "lm_step_bench"]
-QUICK_MODS = ["solver_bench"]
+QUICK_MODS = ["solver_bench", "preprocessing_time"]
+
+
+def collect_preprocess_records(results: dict, quick: bool = False) -> list:
+    """Rebuild-vs-refill preprocessing records for the BENCH trajectory."""
+    rows = results.get("preprocessing_time")
+    if rows is None:
+        from . import preprocessing_time
+
+        rows = preprocessing_time.main(quick=quick)
+    return [{"kind": "preprocess", "matrix": name, "n": r["n"],
+             "nnz": r["nnz"], "rebuild_s": r["rebuild_s"],
+             "refill_s": r["refill_s"],
+             "refill_speedup_x": r["refill_speedup_x"],
+             "preprocess_vs_spmv_x": r["total_x"]}
+            for name, r in rows.items()]
 
 
 def collect_spmv_records(quick: bool = False, rows=None) -> list:
@@ -111,6 +129,7 @@ def main(argv=None) -> None:
     rows = (results.get("speedup_table") or {}).get("rows_f32") \
         or results.get("spmv_throughput", {}).get("f32")
     spmv_records = collect_spmv_records(args.quick, rows=rows)
+    spmv_records += collect_preprocess_records(results, args.quick)
     solver_records = results.get("solver_bench")
     if solver_records is None:
         from . import solver_bench

@@ -81,11 +81,18 @@ def pattern_hash(m: SparseCSR) -> str:
     return h.hexdigest()[:16]
 
 
-def matrix_key(m: SparseCSR) -> str:
+def matrix_key(m: SparseCSR, pattern: Optional[str] = None) -> str:
     """Pattern *and* values hash — the key for caches that hold built device
-    arrays (unlike tuning decisions, those depend on the entry values)."""
+    arrays (unlike tuning decisions, those depend on the entry values).
+    ``pattern`` (a precomputed :func:`pattern_hash` of ``m``) skips
+    re-hashing the index arrays for callers that already hold it.
+
+    The value dtype is mixed in alongside the raw bytes: two value buffers
+    with identical bytes but different dtypes (e.g. all-zero float32 vs
+    int32) describe different matrices and must not collide."""
     h = hashlib.sha256()
-    h.update(pattern_hash(m).encode())
+    h.update((pattern or pattern_hash(m)).encode())
+    h.update(np.asarray(m.data).dtype.str.encode())
     h.update(np.ascontiguousarray(m.data).tobytes())
     return h.hexdigest()[:16]
 

@@ -74,7 +74,10 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
     ``context`` selects the workload the byte model ranks for: "spmv"
     (one-shot original-space call) or "solver" (permuted-space hot-loop
     iteration; EHYB-family candidates drop the per-call permutation round
-    trip) — see ``cost.py``.  Decisions are cached per context.
+    trip) — see ``cost.py``.  The measured pass matches: with
+    ``context="solver"`` it times the permuted-space apply on a
+    permuted-space vector for formats that support it, the operation the
+    solver loop actually runs.  Decisions are cached per context.
     """
     import jax
     import jax.numpy as jnp
@@ -108,12 +111,22 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
     if mode == "measure":
         timed = eligible[:top_k]
         if timed:
-            x = jnp.asarray(
-                np.random.default_rng(0).standard_normal(m.n), dtype=dtype)
+            rng0 = np.random.default_rng(0)
+            x = jnp.asarray(rng0.standard_normal(m.n), dtype=dtype)
             measured = {}
             for f in timed:
-                obj, apply = get_format(f).build(m, dtype, shared)
-                measured[f] = _time_spmv(apply, obj, x)
+                spec = get_format(f)
+                obj, apply = spec.build(m, dtype, shared)
+                if context == "solver" and spec.permuted is not None:
+                    # time what the solver loop actually runs: the
+                    # permuted-space apply on a permuted-space vector — the
+                    # original-space apply's per-call perm round trip would
+                    # pollute exactly the timings this context ranks on
+                    xp = jnp.asarray(rng0.standard_normal(obj.n_pad),
+                                     dtype=dtype)
+                    measured[f] = _time_spmv(spec.permuted, obj, xp)
+                else:
+                    measured[f] = _time_spmv(apply, obj, x)
             winner = min(sorted(measured), key=measured.get)
 
     result = TuneResult(format=winner, key=key, mode=mode,

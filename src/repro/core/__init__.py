@@ -7,6 +7,7 @@ CPU/METIS preprocessing; all compute paths are JAX):
         --EHYBDevice.from_ehyb--> device tables --ehyb_spmv / kernels-->  y
 """
 
+from . import counters
 from .matrices import (SUITE, SparseCSR, elasticity3d, from_coo, poisson3d,
                        poisson3d27, powerlaw, unstructured)
 from .partition import (Partition, bfs_partition, choose_vec_size,

@@ -30,6 +30,7 @@ from typing import Optional
 
 import numpy as np
 
+from .counters import bump
 from .matrices import SparseCSR
 from .partition import Partition, make_partition
 
@@ -63,6 +64,14 @@ class EHYB:
     nnz: int
     nnz_in: int                       # in-partition entries
     preprocess_seconds: dict = dataclasses.field(default_factory=dict)
+    # --- value-refresh scatter plan (see ``refill``) ----------------------
+    # ``ell_dst``/``er_dst``: flat destination indices into the (padded) ELL
+    # and ER value tables; ``ell_src``/``er_src``: matching indices into the
+    # CSR ``data`` stream; ``ell_widths``: (n_pad,) pattern row widths;
+    # ``n_er_live``: live (pattern-bearing) ER slots.  Pattern-only — a new
+    # value buffer on the same pattern replays the scatter with no
+    # partitioning, reordering or sorting.
+    fill_plan: Optional[dict] = None
 
     # .....................................................................
     @property
@@ -158,6 +167,60 @@ class EHYB:
             "inv_perm": jnp.asarray(self.inv_perm),
         }
 
+    def refill(self, new_data: np.ndarray) -> "EHYB":
+        """Same sparsity pattern, new values: replay the build-time scatter.
+
+        Returns a new :class:`EHYB` sharing every structural array (columns,
+        permutations, widths, the plan itself) with ``self``; only the value
+        tables are rewritten — one vectorized numpy scatter, no partitioning,
+        no reordering, no sorting.  Memoized derived views that ``self``
+        already carries (``group_er_by_partition`` tiles, width buckets, the
+        packed staircase) are refilled through their own recorded plans, so
+        downstream device builders touch no structure either.
+
+        ``new_data`` must be the CSR ``data`` stream of a matrix with the
+        *identical* pattern (same ``indptr``/``indices``) — callers above
+        this layer key on ``pattern_hash`` to guarantee that.
+        """
+        if self.fill_plan is None:
+            raise ValueError("this EHYB carries no fill plan (built before "
+                             "value-refresh support); rebuild instead")
+        new_data = np.asarray(new_data)
+        if new_data.shape != (self.nnz,):
+            raise ValueError(f"value buffer has {new_data.shape} entries; "
+                             f"pattern holds {self.nnz}")
+        bump("ehyb_refill")
+        t0 = time.perf_counter()
+        plan = self.fill_plan
+        ell = np.zeros(self.n_pad * self.ell_width, dtype=np.float64)
+        ell[plan["ell_dst"]] = new_data[plan["ell_src"]]
+        ell = ell.reshape(self.n_parts, self.vec_size, self.ell_width)
+        er = np.zeros(self.er_rows * self.er_width, dtype=np.float64)
+        er[plan["er_dst"]] = new_data[plan["er_src"]]
+        er = er.reshape(self.er_rows, self.er_width)
+        new = dataclasses.replace(self, ell_vals=ell, er_vals=er,
+                                  preprocess_seconds={})
+        g = getattr(self, "_er_grouped", None)
+        if g is not None:
+            gp = np.zeros_like(g["er_p_vals"])
+            gp[g["own"], g["slot"]] = er[g["src"]]
+            new._er_grouped = {**g, "er_p_vals": gp}
+        b = getattr(self, "_buckets", None)
+        if b is not None:
+            new._buckets = EHYBBuckets(
+                base=new, part_ids=b.part_ids,
+                vals=[np.ascontiguousarray(ell[ch, :, : v.shape[2]])
+                      for ch, v in zip(b.part_ids, b.vals)],
+                cols=b.cols, widths=b.widths)
+        pk = getattr(self, "_packed", None)
+        if pk is not None:
+            new._packed = pk.refill(new)
+        dt = time.perf_counter() - t0
+        # structure passes cost exactly zero on a refill — that IS the point
+        new.preprocess_seconds = {"partition": 0.0, "metadata": 0.0,
+                                  "reorder": 0.0, "refill": dt, "total": dt}
+        return new
+
 
 def build_ehyb(m: SparseCSR, part: Optional[Partition] = None,
                method: str = "bfs", dtype_bytes: int = 4,
@@ -169,6 +232,7 @@ def build_ehyb(m: SparseCSR, part: Optional[Partition] = None,
     and spills over-long in-partition rows to the ER part — a robustness valve
     for power-law matrices.
     """
+    bump("build_ehyb")
     t0 = time.perf_counter()
     if part is None:
         part = make_partition(m, method=method, dtype_bytes=dtype_bytes,
@@ -262,6 +326,8 @@ def build_ehyb(m: SparseCSR, part: Optional[Partition] = None,
     er_vals = np.zeros((n_er_pad, er_width), dtype=np.float64)
     er_cols = np.zeros((n_er_pad, er_width), dtype=np.int32)
     er_row_idx = np.zeros(n_er_pad, dtype=np.int32)
+    er_dst = np.empty(0, dtype=np.int64)
+    er_src = np.empty(0, dtype=np.int64)
     if n_er:
         er_row_idx[:n_er] = er_rows_idx
         er_slot = np.full(n_pad, -1, dtype=np.int64)
@@ -272,8 +338,17 @@ def build_ehyb(m: SparseCSR, part: Optional[Partition] = None,
         kk = np.arange(len(r_er)) - rs[r_er]
         er_vals[er_slot[r_er], kk] = vals[order_er]
         er_cols[er_slot[r_er], kk] = new_c[order_er].astype(np.int32)
+        er_dst = er_slot[r_er] * er_width + kk
+        er_src = order_er
     t_reorder = time.perf_counter() - t_reorder0
     t_meta = t_reorder0 - t0
+
+    # value-refresh plan: the two scatters above, recorded as flat indices
+    # (``refill`` replays them on a new value buffer with zero structure work)
+    fill_plan = {"ell_dst": r_in * W + k, "ell_src": order_in,
+                 "er_dst": er_dst, "er_src": er_src,
+                 "ell_widths": widths.astype(np.int32),
+                 "n_er_live": n_er}
 
     return EHYB(n=n, n_pad=n_pad, n_parts=n_parts, vec_size=V,
                 ell_width=W, ell_vals=ell_vals, ell_cols=ell_cols,
@@ -284,7 +359,8 @@ def build_ehyb(m: SparseCSR, part: Optional[Partition] = None,
                 nnz=m.nnz, nnz_in=int(in_mask.sum()),
                 preprocess_seconds={"partition": t_part, "metadata": t_meta,
                                     "reorder": t_reorder,
-                                    "total": t_part + t_meta + t_reorder})
+                                    "total": t_part + t_meta + t_reorder},
+                fill_plan=fill_plan)
 
 
 # ---------------------------------------------------------------------------
@@ -311,8 +387,15 @@ def group_er_by_partition(e: EHYB, sublane: int = 8) -> dict:
     cached = getattr(e, "_er_grouped", None)
     if cached is not None and cached["sublane"] == sublane:
         return cached
+    bump("group_er")
     p_, v_, we = e.n_parts, e.vec_size, e.er_width
-    live = np.flatnonzero((e.er_vals != 0).any(axis=1))
+    if e.fill_plan is not None:
+        # pattern-derived live set: ER slots [0, n_er) hold the live rows by
+        # construction (value-independent — explicit zeros stay live, so a
+        # later ``refill`` can never change the grouping)
+        live = np.arange(e.fill_plan["n_er_live"])
+    else:
+        live = np.flatnonzero((e.er_vals != 0).any(axis=1))
     owner = e.er_row_idx[live] // v_
     counts = np.bincount(owner, minlength=p_) if len(live) else \
         np.zeros(p_, dtype=np.int64)
@@ -321,6 +404,9 @@ def group_er_by_partition(e: EHYB, sublane: int = 8) -> dict:
     er_p_vals = np.zeros((p_, ep, we), dtype=e.er_vals.dtype)
     er_p_cols = np.zeros((p_, ep, we), dtype=np.int32)
     er_p_rows = np.zeros((p_, ep), dtype=np.int32)
+    own = np.empty(0, dtype=np.int64)
+    slot = np.empty(0, dtype=np.int64)
+    src = np.empty(0, dtype=np.int64)
     if len(live):
         order = np.argsort(owner, kind="stable")
         src = live[order]
@@ -332,7 +418,9 @@ def group_er_by_partition(e: EHYB, sublane: int = 8) -> dict:
         er_p_rows[own, slot] = (e.er_row_idx[src] % v_).astype(np.int32)
     out = {"er_p_vals": er_p_vals, "er_p_cols": er_p_cols,
            "er_p_rows": er_p_rows, "has_er": bool(len(live)),
-           "n_er_live": int(len(live)), "sublane": sublane}
+           "n_er_live": int(len(live)), "sublane": sublane,
+           # refill plan: er_p_vals[own, slot] = er_vals_new[src]
+           "own": own, "slot": slot, "src": src}
     e._er_grouped = out
     return out
 
@@ -359,6 +447,18 @@ class PackedEHYB:
     packed_cols: np.ndarray           # (P, L) uint16
     col_starts: np.ndarray            # (P, W+1) int32 — column k offset
     col_rows: np.ndarray              # (P, W) int32 — active rows R_k
+    pack_plan: Optional[dict] = None  # (pi, vi, ki) -> (pi, dest) scatter
+
+    def refill(self, base: "EHYB") -> "PackedEHYB":
+        """Re-pack from ``base`` (a value-refilled EHYB on the same pattern)
+        by replaying the recorded scatter — no width recomputation."""
+        if self.pack_plan is None:
+            raise ValueError("this PackedEHYB carries no pack plan")
+        p = self.pack_plan
+        packed_vals = np.zeros_like(self.packed_vals)
+        packed_vals[p["pi"], p["dest"]] = base.ell_vals[p["pi"], p["vi"],
+                                                        p["ki"]]
+        return dataclasses.replace(self, base=base, packed_vals=packed_vals)
 
     def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2,
                     space: str = "permuted", fused_er: bool = True) -> dict:
@@ -379,9 +479,15 @@ def pack_staircase(e: EHYB) -> PackedEHYB:
     dominated preprocessing on large matrices; the scatter is recorded in
     ``preprocess_seconds["pack"]``.
     """
+    bump("pack_staircase")
     t0 = time.perf_counter()
     p_, v_, w_ = e.n_parts, e.vec_size, e.ell_width
-    widths = (e.ell_vals != 0).sum(axis=2)               # (P, V) row widths
+    if e.fill_plan is not None:
+        # pattern widths (value-independent: explicit zeros stay packed, so
+        # the recorded scatter stays valid across ``refill``)
+        widths = e.fill_plan["ell_widths"].reshape(p_, v_)
+    else:
+        widths = (e.ell_vals != 0).sum(axis=2)           # (P, V) row widths
     # R_k per partition: number of rows with width > k (rows are sorted)
     ks = np.arange(w_)[None, None, :]
     col_rows = (widths[:, :, None] > ks).sum(axis=1).astype(np.int32)  # (P,W)
@@ -399,7 +505,8 @@ def pack_staircase(e: EHYB) -> PackedEHYB:
     e.preprocess_seconds["pack"] = time.perf_counter() - t0
     return PackedEHYB(base=e, packed_len=pack_l, packed_vals=packed_vals,
                       packed_cols=packed_cols, col_starts=col_starts,
-                      col_rows=col_rows)
+                      col_rows=col_rows,
+                      pack_plan={"pi": pi, "dest": dest, "vi": vi, "ki": ki})
 
 
 # ---------------------------------------------------------------------------
@@ -438,6 +545,7 @@ class EHYBBuckets:                   # jit-static aux data of the device form
 def build_buckets(e: EHYB, n_buckets: int = 4, lane: int = 8) -> EHYBBuckets:
     """Group partitions by width into ≤ n_buckets classes (equal-count split,
     widths lane-aligned so value tiles stay (8,128)-friendly)."""
+    bump("build_buckets")
     order = np.argsort(e.part_widths, kind="stable")
     chunks = np.array_split(order, n_buckets)
     part_ids, vals, cols, widths = [], [], [], []

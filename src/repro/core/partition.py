@@ -210,6 +210,9 @@ def _refine(m: SparseCSR, part_vec: np.ndarray, n_parts: int, vec_size: int,
 def make_partition(m: SparseCSR, method: str = "bfs",
                    dtype_bytes: int = 4, n_parts: int | None = None,
                    vec_size: int | None = None, **kw) -> Partition:
+    from .counters import bump
+
+    bump("partition")
     if n_parts is None or vec_size is None:
         n_parts, vec_size = choose_vec_size(m.n, dtype_bytes)
     if method == "natural":

@@ -51,6 +51,13 @@ The traffic model behind format selection mirrors this contract:
 ``autotune`` ranks with ``context="solver"`` (permuted space, fused ER —
 see ``repro.autotune.cost``), which is how ``solve(format="auto")`` picks
 formats for iterative workloads.
+
+Value updates on a fixed pattern (transient/nonlinear re-assembly) ride the
+operator cache's refill path: ``solve(A_new, b)`` with the same sparsity
+pattern refreshes the cached operator's value tables (zero partitioning,
+zero recompilation — see ``core.spmv.cached_spmv_operator``) and recomputes
+the value-dependent preconditioner diagonal, while the permutation it is
+carried through comes from the reused operator — never re-derived.
 """
 
 from __future__ import annotations
@@ -110,8 +117,13 @@ def precond_inv_diag(m: SparseCSR, kind: str) -> Optional[np.ndarray]:
 def _diag_closure(inv: Optional[np.ndarray]) -> Callable:
     if inv is None:
         return lambda r: r
-    invj = jnp.asarray(inv, dtype=jnp.float32)
-    return lambda r: invj * r
+
+    def apply(r):
+        # carry M⁻¹ at promote_types(r.dtype, f32), matching the fused-update
+        # path: a hardwired f32 diagonal would silently downcast fp64 solves
+        return jnp.asarray(inv, jnp.promote_types(r.dtype, jnp.float32)) * r
+
+    return apply
 
 
 def identity_precond(_: SparseCSR) -> Callable:

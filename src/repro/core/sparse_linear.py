@@ -29,6 +29,17 @@ from .matrices import SparseCSR, from_coo
 from .spmv import SpMVOperator, build_spmv
 
 
+def _host_ehyb_of(obj) -> Optional[EHYB]:
+    """Recover the host EHYB behind a device container, if it carries one."""
+    e = getattr(obj, "host_ehyb", None)
+    if e is None:
+        for handle in (getattr(obj, "host_packed", None),
+                       getattr(obj, "host", None)):
+            if handle is not None:
+                return handle.base
+    return e
+
+
 def prune_to_csr(w: np.ndarray, density: float) -> SparseCSR:
     """Magnitude-prune a dense (d_out, d_in) matrix into a square-padded CSR."""
     d_out, d_in = w.shape
@@ -65,6 +76,25 @@ class SparseLinear:
                         **build_kw)
         return cls(d_in=d_in, d_out=d_out, op=op, density=density,
                    csr=csr, ehyb=shared.get("ehyb"))
+
+    def update_values(self, w: np.ndarray) -> "SparseLinear":
+        """Same pruning mask, new weights: refill the operator's value
+        tables without re-partitioning or recompiling.
+
+        The sparsity pattern chosen at ``from_dense`` time stays fixed (the
+        standard fixed-mask training regime); ``w`` is the updated dense
+        (d_out, d_in) weight matrix, re-sampled at the stored positions.
+        An optimizer step over a pruned layer therefore costs one value
+        scatter + upload, not a partition+reorder+pack pipeline."""
+        if w.shape != (self.d_out, self.d_in):
+            raise ValueError(f"weights {w.shape} != "
+                             f"({self.d_out}, {self.d_in})")
+        rows = np.repeat(np.arange(self.csr.n), self.csr.row_lengths())
+        csr_new = SparseCSR(self.csr.n, self.csr.indptr, self.csr.indices,
+                            np.asarray(w, np.float64)[rows, self.csr.indices])
+        op = self.op.update_values(csr_new)
+        return dataclasses.replace(self, op=op, csr=csr_new,
+                                   ehyb=_host_ehyb_of(op.obj) or self.ehyb)
 
     # ---- permuted-space threading (EHYB family) ---------------------------
     # A single layer application must permute activations in and logits out
@@ -103,16 +133,27 @@ class SparseLinear:
         ``space="permuted"`` treats x as (..., n_pad) permuted activations
         and returns (..., n_pad) permuted outputs (no gathers — for chained
         applications between ``to_permuted``/``from_permuted``)."""
+        return self.apply_with(self.op.obj, x, space)
+
+    def apply_with(self, obj, x: jnp.ndarray,
+                   space: str = "original") -> jnp.ndarray:
+        """``__call__`` with an explicit device container ``obj``.
+
+        Lets callers route the (same-structure) container through traced
+        function arguments instead of closure capture — a jitted consumer
+        that takes ``obj`` as an argument keeps serving refreshed values
+        after ``update_values`` with no re-trace (closure-captured arrays
+        are baked into the compiled program as constants)."""
         lead = x.shape[:-1]
         if space == "permuted":
             if not self.supports_permuted:
                 raise ValueError(
                     f"format {self.op.format!r} has no permuted space")
             xt = x.reshape(-1, self.op.n_pad).T
-            yt = self.op.apply_permuted(self.op.obj, xt)
+            yt = self.op.apply_permuted(obj, xt)
             return yt.T.reshape(*lead, self.op.n_pad)
         xt = self._embed(x.reshape(-1, self.d_in).T)     # (n, T)
-        yt = self.op(xt)                                 # (n, T)
+        yt = self.op.apply(obj, xt)                      # (n, T)
         return yt[: self.d_out].T.reshape(*lead, self.d_out)
 
     def bytes_vs_dense(self, val_bytes: int = 4) -> dict:

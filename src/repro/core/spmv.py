@@ -364,7 +364,7 @@ class EHYBBucketsDevice:
     """Device-side width-bucketed EHYB: all tables uploaded once, pytree-
     registered so the bucketed SpMV jits like every other device format
     (the host :class:`EHYBBuckets` path re-uploaded per call).  Per-bucket
-    widths are static aux; the host container rides along (identity-hashed)
+    widths are static aux; the host container rides along outside the pytree
     for the distributed path to recover the partition structure."""
 
     n: int
@@ -381,24 +381,29 @@ class EHYBBucketsDevice:
     er_p_rows: jnp.ndarray
     perm: jnp.ndarray
     inv_perm: jnp.ndarray
-    host: object = None      # host EHYBBuckets (aux; eq/hash by identity)
+    # Host EHYBBuckets handle (dist path recovers partition structure from
+    # it).  Deliberately NOT part of the pytree aux: value refills swap in a
+    # refreshed host object, and keying jit caches on its identity would
+    # recompile every permuted/bucketed apply per refill.  Unflattened copies
+    # (inside traced code) carry None.
+    host: object = None
 
     def tree_flatten(self):
         nb = len(self.part_ids)
         leaves = (*self.part_ids, *self.vals, *self.cols, self.er_p_vals,
                   self.er_p_cols, self.er_p_rows, self.perm, self.inv_perm)
         aux = (self.n, self.n_pad, self.n_parts, self.vec_size, self.has_er,
-               self.widths, nb, self.host)
+               self.widths, nb)
         return leaves, aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        *head, nb, host = aux
+        *head, nb = aux
         part_ids = tuple(leaves[:nb])
         vals = tuple(leaves[nb:2 * nb])
         cols = tuple(leaves[2 * nb:3 * nb])
         rest = leaves[3 * nb:]
-        return cls(*head, part_ids, vals, cols, *rest, host=host)
+        return cls(*head, part_ids, vals, cols, *rest, host=None)
 
     @classmethod
     def from_buckets(cls, b: EHYBBuckets, dtype=jnp.float32):
@@ -465,6 +470,18 @@ class SpMVOperator:
     ``op.tuning`` (when selected by the autotuner) holds the full
     :class:`repro.autotune.TuneResult` with the per-format modeled bytes.
 
+    **Operator lifecycle.**  The expensive part of an operator is its
+    *structure* (partitioning, reordering, packing, the jitted applies'
+    XLA compilations) — all functions of the sparsity pattern alone.  When
+    only the entry values change (transient/nonlinear FEM re-assembly,
+    pruned-layer optimizer steps), ``op.update_values(a_new)`` returns an
+    operator with freshly filled value tables and *everything else shared*:
+    same structural device arrays, same pytree structure, same ``apply``
+    closures — so it triggers zero partitioning work and zero XLA
+    recompilation.  ``spmv()``/``solve()`` apply this transparently through
+    the two-level operator cache (pattern hash → structure, matrix key →
+    values).
+
     **Execution spaces.** EHYB-family formats compute in a symmetrically
     reordered, padded vector space.  ``op(x)`` takes and returns
     original-space vectors, paying a ``perm`` gather on the way in and an
@@ -482,9 +499,39 @@ class SpMVOperator:
     nnz: int
     tuning: object = None             # TuneResult | None
     apply_permuted: callable = None   # (obj, x_new) -> y_new, or None
+    dtype: object = None              # value dtype of the device tables
+    pattern_key: str = None           # sparsity-pattern hash (refill guard)
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
         return self.apply(self.obj, x)
+
+    def update_values(self, a_new, *, pattern: str = None) -> "SpMVOperator":
+        """Same sparsity pattern, new values: refresh the value tables only.
+
+        Returns a new operator whose device container shares every
+        structural array with this one (columns, permutations, packing
+        metadata) and keeps the same jitted ``apply`` closures, so repeated
+        value updates neither re-partition nor recompile.  Formats without a
+        registry ``refill`` hook fall back to a full build.
+
+        ``pattern`` (a precomputed ``pattern_hash(a_new)``) skips re-hashing
+        the index arrays for the pattern-identity guard — the operator cache
+        already holds it.
+        """
+        from .. import autotune as at
+
+        if a_new.n != self.n or a_new.nnz != self.nnz or (
+                self.pattern_key is not None
+                and (pattern or at.pattern_hash(a_new)) != self.pattern_key):
+            raise ValueError(
+                "update_values needs a matrix with the identical sparsity "
+                "pattern; build a fresh operator for a new pattern")
+        dtype = self.dtype or jnp.float32
+        spec = at.get_format(self.format)
+        if spec.refill is None:
+            return build_spmv(a_new, self.format, dtype)
+        obj = spec.refill(self.obj, a_new, dtype, {})
+        return dataclasses.replace(self, obj=obj)
 
     @property
     def matvec(self):
@@ -555,32 +602,50 @@ def build_spmv(a, format: str = "auto", dtype=None, *, mode: str = "model",
     obj, apply = spec.build(a, dtype, shared)
     return SpMVOperator(format=format, obj=obj, apply=apply, n=a.n,
                         nnz=a.nnz, tuning=tuning,
-                        apply_permuted=spec.permuted)
+                        apply_permuted=spec.permuted, dtype=dtype,
+                        pattern_key=tuning.key if tuning
+                        else at.pattern_hash(a))
 
 
 from .cache import BoundedCache
 
-_OP_CACHE = BoundedCache(maxsize=16)
+_OP_CACHE = BoundedCache(maxsize=16)          # exact (values-inclusive) hits
+_OP_PATTERN_CACHE = BoundedCache(maxsize=16)  # pattern -> latest operator
 
 
 def cached_spmv_operator(a, format: str = "auto", dtype=None,
                          context: str = "spmv") -> SpMVOperator:
-    """``build_spmv`` memoized under the value-inclusive matrix hash (LRU,
-    bounded — transient workloads that update values per step evict old
-    operators instead of leaking device arrays).
+    """``build_spmv`` memoized at two levels (LRU, bounded — transient
+    workloads that update values per step evict old operators instead of
+    leaking device arrays):
 
-    Returning the *same* operator object for the same (matrix, format,
-    dtype, context) keeps its matvec jit-cache-stable: repeated
-    ``spmv()``/``solve()`` calls neither rebuild device arrays nor retrigger
-    XLA compilation.
+    1. value-inclusive matrix hash — an exact hit returns the *same*
+       operator object, keeping its matvec jit-cache-stable (repeated
+       ``spmv()``/``solve()`` calls neither rebuild device arrays nor
+       retrigger XLA compilation);
+    2. sparsity-pattern hash — same pattern, new values refreshes the cached
+       operator through ``update_values``: one value scatter + upload, zero
+       partitioning/reordering/packing and zero recompilation.  This is what
+       makes per-step value updates (transient FEM, ``SparseLinear``
+       training, served pruned heads) amortize preprocessing across the
+       pattern's lifetime instead of paying it per update.
     """
     from .. import autotune as at
 
     dtype = dtype or jnp.float32
-    key = (at.matrix_key(a), format, jnp.dtype(dtype).name, context)
+    dt_name = jnp.dtype(dtype).name
+    ph = at.pattern_hash(a)           # hashed once, reused by every key
+    key = (at.matrix_key(a, ph), format, dt_name, context)
     op = _OP_CACHE.get(key)
     if op is None:
-        op = _OP_CACHE[key] = build_spmv(a, format, dtype, context=context)
+        pkey = (ph, format, dt_name, context)
+        prev = _OP_PATTERN_CACHE.get(pkey)
+        if prev is not None:
+            op = prev.update_values(a, pattern=ph)
+        else:
+            op = build_spmv(a, format, dtype, context=context)
+        _OP_CACHE[key] = op
+        _OP_PATTERN_CACHE[pkey] = op
     return op
 
 
@@ -588,11 +653,19 @@ def spmv(a, x: jnp.ndarray, format: str = "auto", dtype=None) -> jnp.ndarray:
     """Unified SpMV: ``y = A @ x`` for a SparseCSR ``A`` in the best format.
 
     The built operator is cached under the sparsity-pattern hash, so repeated
-    calls on the same pattern pay one build.  Hot loops should hold the
-    operator from :func:`build_spmv` directly (no per-call hashing).
-    ``x`` may be (n,) or (n, R); dtype defaults to ``x.dtype``.
+    calls on the same pattern pay one build — and calls with the same pattern
+    but *new values* pay one value refill (see ``cached_spmv_operator``).
+    Hot loops should hold the operator from :func:`build_spmv` directly (no
+    per-call hashing).  ``x`` may be (n,) or (n, R); dtype defaults to
+    ``x.dtype`` for floating/complex ``x`` and float32 otherwise (an integer
+    rhs must not build integer value tables).
     """
     if isinstance(a, SpMVOperator):
         return a(x)
     x = jnp.asarray(x)
-    return cached_spmv_operator(a, format, dtype or x.dtype)(x)
+    if dtype is None:
+        dtype = (x.dtype if jnp.issubdtype(x.dtype, jnp.inexact)
+                 else jnp.float32)
+    if not jnp.issubdtype(x.dtype, jnp.inexact):
+        x = x.astype(dtype)
+    return cached_spmv_operator(a, format, dtype)(x)

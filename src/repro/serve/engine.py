@@ -24,6 +24,12 @@ to serving — but everything between them is the same permuted-space fast
 path the solver loop runs on, and chained sparse layers can hoist the
 boundary too via ``SparseLinear``'s ``to_permuted``/``from_permuted`` space
 API.
+
+Weight refreshes (``refresh_sparse_head``): the pruned head's value tables
+are passed to the compiled decode/prefill steps as traced arguments, so
+pushing updated weights refills the operator through its scatter plan —
+same mask, same partitioning, same compiled programs — instead of
+re-pruning, re-partitioning, or re-tracing.
 """
 
 from __future__ import annotations
@@ -73,6 +79,14 @@ class ServeEngine:
         self._prefill_one = jax.jit(partial(self._prefill_impl, cfg=cfg,
                                             head=self.sparse_head))
 
+    def _head_weights(self) -> np.ndarray:
+        """The dense (V, d) LM-head weights under the current params."""
+        if self.cfg.tie_embeddings:
+            return np.asarray(self.params["embed"]["embedding"],
+                              dtype=np.float32)             # (V, d)
+        return np.asarray(self.params["head"]["w_head"],
+                          dtype=np.float32).T               # (d,V) -> (V, d)
+
     def _build_sparse_head(self, density, fmt):
         """Prune the LM head into the unified-SpMV sparse layer (or None).
 
@@ -82,13 +96,31 @@ class ServeEngine:
             return None
         from ..core.sparse_linear import SparseLinear
 
-        if self.cfg.tie_embeddings:
-            w_head = np.asarray(self.params["embed"]["embedding"],
-                                dtype=np.float32)           # (V, d)
-        else:
-            w_head = np.asarray(self.params["head"]["w_head"],
-                                dtype=np.float32).T          # (d,V) -> (V, d)
-        return SparseLinear.from_dense(w_head, density=density, format=fmt)
+        return SparseLinear.from_dense(self._head_weights(), density=density,
+                                       format=fmt)
+
+    def _head_obj(self):
+        """The sparse head's device container, passed to the compiled steps
+        as a *traced* argument (not closure state): value refreshes flow
+        into already-compiled decode/prefill programs with no re-trace."""
+        return None if self.sparse_head is None else self.sparse_head.op.obj
+
+    def refresh_sparse_head(self, params=None):
+        """Value-refresh the served pruned head after a weight update.
+
+        The pruning mask, the chosen format's partitioning, and the compiled
+        decode/prefill programs all survive: ``SparseLinear.update_values``
+        refills the device value tables through the operator's scatter plan,
+        and the refreshed container reaches the compiled steps as a traced
+        argument on the next ``step()``.  Zero re-partitioning, zero XLA
+        recompilation per weight push — the serving-side §6 amortization.
+        """
+        if params is not None:
+            self.params = params
+        if self.sparse_head is None:
+            return None
+        self.sparse_head = self.sparse_head.update_values(self._head_weights())
+        return self.sparse_head
 
     def sparse_head_bytes(self, val_bytes: int = 4):
         """Modeled HBM bytes of one decode-step head matmul (None if the
@@ -99,31 +131,37 @@ class ServeEngine:
         return self.sparse_head.bytes_vs_dense(val_bytes)
 
     # ---- compiled pieces ---------------------------------------------------
+    # ``head`` (the SparseLinear, shape/closure metadata) is bound statically
+    # via partial; ``head_obj`` (its device value tables) is a TRACED
+    # argument, so refresh_sparse_head's refilled containers flow into the
+    # compiled programs without re-tracing (closure-captured arrays would be
+    # baked in as constants and go stale on refresh).
     @staticmethod
-    def _head_logits(params, h, cfg, head):
+    def _head_logits(params, h, cfg, head, head_obj=None):
         if head is None:
             return logits_fn(params["head"], params["embed"], h, cfg)
-        logits = head(h)
+        logits = head.apply_with(head_obj, h)
         if cfg.final_softcap:
             c = cfg.final_softcap
             logits = jnp.tanh(logits / c) * c
         return logits
 
     @staticmethod
-    def _decode_impl(params, tokens, state, pos_vec, cfg, head=None):
+    def _decode_impl(params, tokens, state, pos_vec, head_obj, cfg,
+                     head=None):
         # per-slot positions: run with the max and rely on per-slot causal
         # masks via per-slot pos (we pass a vector but decode uses a scalar
         # write index per step; slots advance in lock-step so we use the
         # per-slot position to mask logits host-side)
         pos = pos_vec.max()
         h, new_state = decode_step(params, tokens, cfg, state, pos)
-        logits = ServeEngine._head_logits(params, h, cfg, head)
+        logits = ServeEngine._head_logits(params, h, cfg, head, head_obj)
         return logits[:, 0], new_state
 
     @staticmethod
-    def _prefill_impl(params, batchd, state_slice, cfg, head=None):
+    def _prefill_impl(params, batchd, state_slice, head_obj, cfg, head=None):
         h_last, st = prefill(params, batchd, cfg, state_slice)
-        logits = ServeEngine._head_logits(params, h_last, cfg, head)
+        logits = ServeEngine._head_logits(params, h_last, cfg, head, head_obj)
         return logits[:, 0], st
 
     # ---- request management -------------------------------------------------
@@ -149,7 +187,8 @@ class ServeEngine:
                     (1, self.max_prompt, self.cfg.d_model),
                     jnp.dtype(self.cfg.dtype))
             slot_state = jax.tree.map(lambda a: a[:, i:i + 1], self.state)
-            logits, st = self._prefill_one(self.params, batchd, slot_state)
+            logits, st = self._prefill_one(self.params, batchd, slot_state,
+                                           self._head_obj())
             self.state = jax.tree.map(
                 lambda full, s: jax.lax.dynamic_update_slice_in_dim(
                     full, s.astype(full.dtype), i, axis=1), self.state, st)
@@ -177,7 +216,7 @@ class ServeEngine:
             tokens[i, 0] = self.slots[i].generated[-1]
         logits, self.state = self._decode(
             self.params, jnp.asarray(tokens), self.state,
-            jnp.asarray(self.positions))
+            jnp.asarray(self.positions), self._head_obj())
         logits = np.asarray(logits)
         finished = []
         for i in active:

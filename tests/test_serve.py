@@ -95,3 +95,39 @@ def test_sparse_head_decode_matches_dense_head_at_high_density():
     assert engine.sparse_head.op.format in (
         __import__("repro.autotune", fromlist=["available_formats"])
         .available_formats())
+
+
+def test_refresh_sparse_head_refills_without_rebuild():
+    """A weight push refreshes the served pruned head through the value
+    scatter plan: same mask, same partitioning, no new partition/pack pass —
+    and the refreshed tables flow into the already-compiled decode step
+    (they are traced arguments, not closure constants)."""
+    from repro.core import counters
+
+    cfg = get_config("llama3_2_1b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, batch=1, max_len=48, max_prompt=8,
+                         sparse_head_density=0.5, sparse_head_format="ehyb")
+    engine.submit(Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                          max_new_tokens=3))
+    engine.run_until_done()
+
+    obj_before = engine.sparse_head.op.obj
+    params2 = jax.tree.map(lambda a: a, params)
+    if cfg.tie_embeddings:
+        params2["embed"]["embedding"] = params["embed"]["embedding"] * 2.0
+    else:
+        params2["head"]["w_head"] = params["head"]["w_head"] * 2.0
+    before = counters.snapshot()
+    head = engine.refresh_sparse_head(params2)
+    after = counters.snapshot()
+    for c in ("partition", "build_ehyb", "pack_staircase", "build_buckets"):
+        assert after.get(c, 0) == before.get(c, 0)
+    assert head.op.obj.ell_cols is obj_before.ell_cols    # structure shared
+    np.testing.assert_allclose(np.asarray(head.op.obj.ell_vals),
+                               2.0 * np.asarray(obj_before.ell_vals),
+                               rtol=1e-6)
+    engine.submit(Request(uid=1, prompt=np.arange(1, 6, dtype=np.int32),
+                          max_new_tokens=3))
+    done = engine.run_until_done()
+    assert len(done) == 1 and len(done[0].generated) == 3
