@@ -1,0 +1,158 @@
+"""Distributed halo exchange vs the all-gather baseline (kind:"dist").
+
+For every suite matrix × mesh size this module records, per SpMV iteration:
+
+* ``halo_words``        — the sharded operator's scheduled exchange payload
+                          (the compact halo: Σ over device pairs of
+                          min(unique fetched columns, unique pushed rows));
+* ``allgather_words``   — the words the replaced ``dist_spmv``
+                          implementation moved (full x all-gather + full
+                          psum-scatter, ``2·n_dev·n_pad``);
+* ``coll_bytes_*``      — both implementations compiled on the mesh and
+                          measured with the roofline HLO cost parser
+                          (these include the ``all_to_all``'s padding and
+                          self-segment, so the halo side is an upper bound
+                          on physical interconnect bytes);
+* distributed vs local ``solve()`` wall time and residuals (the
+  correctness contract: same tolerance, same trajectory).
+
+Multi-device execution needs host platform devices, so the measurement runs
+in a child process with ``XLA_FLAGS=--xla_force_host_platform_device_count``
+set (the same pattern as tests/test_sharding.py); ``main()`` orchestrates
+and returns the records that ``benchmarks/run.py`` commits to
+``BENCH_spmv.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+DEFAULT_MATRICES = ("poisson3d_16", "poisson3d_24", "poisson27_12",
+                    "elasticity_8", "unstruct_4k", "powerlaw_4k",
+                    "powerlaw_8k")
+QUICK_MATRICES = ("poisson3d_16", "powerlaw_4k")
+DEFAULT_NDEV = (4, 8)
+QUICK_NDEV = (4,)
+
+
+def _child(matrices, n_devs, max_iters: int) -> list:
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import SUITE, build_spmv, solve
+    from repro.dist import build_allgather_spmv, build_sharded_spmv
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    records = []
+    for name in matrices:
+        m = SUITE[name]()
+        rng = np.random.default_rng(0)
+        b = jnp.asarray(rng.standard_normal(m.n), dtype=jnp.float32)
+        op = build_spmv(m, format="ehyb")
+        r_loc = solve(m, b, precond="jacobi", format="ehyb",
+                      max_iters=max_iters)
+        jax.block_until_ready(r_loc.x)          # warm the compile cache
+        t0 = time.perf_counter()
+        r_loc = solve(m, b, precond="jacobi", format="ehyb",
+                      max_iters=max_iters)
+        jax.block_until_ready(r_loc.x)
+        t_loc = time.perf_counter() - t0
+        for n_dev in n_devs:
+            mesh_shape = (n_dev,)
+            from repro.compat import make_mesh
+
+            mesh = make_mesh(mesh_shape, ("data",))
+            sop = build_sharded_spmv(m, mesh, "data", format="ehyb")
+            plan = sop.plan
+            xp = sop.to_permuted(b)
+            halo_hlo = (jax.jit(sop.matvec_permuted).lower(xp).compile()
+                        .as_text())
+            coll_halo = int(analyze_hlo(halo_hlo)["coll_bytes"])
+            if op.obj.n_parts % n_dev == 0:
+                # the baseline has no partition padding; on a non-divisible
+                # combination only the halo path runs (record nulls rather
+                # than aborting the whole sweep)
+                legacy = build_allgather_spmv(op.obj, mesh, "data",
+                                              space="permuted")
+                xl = xp[: op.obj.n_pad]
+                leg_hlo = jax.jit(legacy).lower(xl).compile().as_text()
+                coll_leg = int(analyze_hlo(leg_hlo)["coll_bytes"])
+            else:
+                coll_leg = None
+            # distributed solve: compile, then time one solve
+            r_dist = solve(sop, b, precond="jacobi", max_iters=max_iters)
+            jax.block_until_ready(r_dist.x)
+            t0 = time.perf_counter()
+            r_dist = solve(sop, b, precond="jacobi", max_iters=max_iters)
+            jax.block_until_ready(r_dist.x)
+            t_dist = time.perf_counter() - t0
+            iters = max(int(r_dist.iters), 1)
+            records.append({
+                "kind": "dist", "matrix": name, "n": m.n, "nnz": m.nnz,
+                "n_dev": n_dev, "format": sop.format,
+                "halo_words": int(plan.halo_words),
+                "buffer_words": int(plan.buffer_words),
+                "allgather_words": int(plan.allgather_words),
+                "halo_vs_allgather": plan.halo_words
+                / max(plan.allgather_words, 1),
+                "has_push": bool(plan.has_push),
+                "coll_bytes_halo": coll_halo,
+                "coll_bytes_allgather": coll_leg,
+                "coll_ratio": (coll_halo / max(coll_leg, 1)
+                               if coll_leg is not None else None),
+                "iters": int(r_dist.iters),
+                "residual_dist": float(r_dist.residual),
+                "residual_local": float(r_loc.residual),
+                "solve_seconds_dist": t_dist,
+                "solve_seconds_local": t_loc,
+                "seconds_per_iter_dist": t_dist / iters,
+                "seconds_per_iter_local": t_loc / max(int(r_loc.iters), 1),
+            })
+    return records
+
+
+def main(quick: bool = False) -> list:
+    matrices = QUICK_MATRICES if quick else DEFAULT_MATRICES
+    n_devs = QUICK_NDEV if quick else DEFAULT_NDEV
+    max_iters = 40 if quick else 120
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{max(n_devs)}")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")])
+    cmd = [sys.executable, "-m", "benchmarks.dist_halo", "--child",
+           ",".join(matrices), ",".join(map(str, n_devs)), str(max_iters)]
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=root, timeout=3600)
+    if out.returncode != 0:
+        raise RuntimeError(f"dist_halo child failed:\n{out.stderr[-3000:]}")
+    records = json.loads(out.stdout.strip().splitlines()[-1])
+    from .emit_util import emit_kv
+
+    for r in records:
+        cr = (f"{r['coll_ratio']:.3f}" if r["coll_ratio"] is not None
+              else "n/a")
+        emit_kv(f"dist/{r['matrix']}/ndev{r['n_dev']}",
+                f"halo_words={r['halo_words']};"
+                f"allgather_words={r['allgather_words']};"
+                f"ratio={r['halo_vs_allgather']:.3f};"
+                f"coll_ratio={cr};"
+                f"res={r['residual_dist']:.2e}",
+                us=r["seconds_per_iter_dist"] * 1e6)
+    return records
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--child":
+        mats = sys.argv[2].split(",")
+        ndevs = tuple(int(x) for x in sys.argv[3].split(","))
+        print(json.dumps(_child(mats, ndevs, int(sys.argv[4]))))
+    else:
+        main()

@@ -6,6 +6,8 @@
   §3.4           -> bytes_model       (modeled HBM bytes; int16 ablation)
   §6             -> solver_bench      (SPAI-CG amortization, original vs
                                        permuted execution space)
+  framework      -> dist_halo         (sharded halo exchange vs all-gather
+                                       words + distributed solve timings)
   framework      -> autotune_table    (per-matrix chosen format + bytes/nnz)
   framework      -> lm_step_bench     (smoke train/decode step times)
 
@@ -17,6 +19,11 @@ machine-readable perf trajectory:
                        ``kind: "preprocess"`` record per matrix with
                        rebuild-vs-refill preprocessing seconds (the
                        value-refresh fast path's amortization multiplier);
+                       plus ``kind: "dist"`` records per (matrix × mesh
+                       size): scheduled halo words vs the all-gather words
+                       the replaced dist path moved, HLO-measured
+                       collective bytes for both, and distributed-vs-local
+                       solve time/residual;
   BENCH_solver.json  — per (matrix × format × execution space): CG seconds,
                        iters-to-converge, residual, modeled bytes/iteration
                        (the permuted-space records show the
@@ -43,8 +50,19 @@ import pathlib
 import sys
 
 DEFAULT_MODS = ["bytes_model", "preprocessing_time", "speedup_table",
-                "solver_bench", "autotune_table", "lm_step_bench"]
-QUICK_MODS = ["solver_bench", "preprocessing_time"]
+                "solver_bench", "dist_halo", "autotune_table",
+                "lm_step_bench"]
+QUICK_MODS = ["solver_bench", "preprocessing_time", "dist_halo"]
+
+
+def collect_dist_records(results: dict, quick: bool = False) -> list:
+    """kind:"dist" halo-vs-all-gather records for the BENCH trajectory."""
+    rows = results.get("dist_halo")
+    if rows is None:
+        from . import dist_halo
+
+        rows = dist_halo.main(quick=quick)
+    return rows
 
 
 def collect_preprocess_records(results: dict, quick: bool = False) -> list:
@@ -130,6 +148,7 @@ def main(argv=None) -> None:
         or results.get("spmv_throughput", {}).get("f32")
     spmv_records = collect_spmv_records(args.quick, rows=rows)
     spmv_records += collect_preprocess_records(results, args.quick)
+    spmv_records += collect_dist_records(results, args.quick)
     solver_records = results.get("solver_bench")
     if solver_records is None:
         from . import solver_bench

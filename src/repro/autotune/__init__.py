@@ -18,14 +18,16 @@ The user-facing entry point is ``repro.core.spmv.spmv(A, x)`` /
 
 from .registry import (FORMATS, FormatSpec, available_formats, build_format,
                        get_format, register_format)
-from .cost import (MatrixStats, estimate_bytes, matrix_key, matrix_stats,
-                   model_table, pattern_hash, rank_formats)
+from .cost import (CONTEXTS, MatrixStats, allgather_penalty_bytes,
+                   estimate_bytes, matrix_key, matrix_stats, model_table,
+                   pattern_hash, rank_formats)
 from .tuner import TuneResult, autotune, clear_cache, tune_cache_info
 
 __all__ = [
     "FORMATS", "FormatSpec", "available_formats", "build_format",
     "get_format", "register_format",
-    "MatrixStats", "estimate_bytes", "matrix_key", "matrix_stats",
-    "model_table", "pattern_hash", "rank_formats",
+    "CONTEXTS", "MatrixStats", "allgather_penalty_bytes", "estimate_bytes",
+    "matrix_key", "matrix_stats", "model_table", "pattern_hash",
+    "rank_formats",
     "TuneResult", "autotune", "clear_cache", "tune_cache_info",
 ]

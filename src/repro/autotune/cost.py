@@ -21,9 +21,24 @@ an EHYB-family SpMV depends on where its vectors live:
   of the loop and amortized to zero, so the per-iteration bytes drop by
   exactly the round-trip term.  This is what ``solve(format="auto")`` ranks
   on, and why a format can lose for one-shot calls yet win inside a solver.
+* ``context="dist"`` — one hot-loop iteration sharded over ``n_dev``
+  devices (``shared["n_dev"]``; set by ``autotune(..., n_dev=)``).  HBM
+  bytes are the solver-context accounting divided across devices in wall
+  time but identical in total, so the model adds the **interconnect
+  term**: EHYB-family formats pay their :class:`repro.dist.HaloPlan`'s
+  scheduled ``halo_words``, while formats without partition structure
+  (no ``FormatSpec.shard`` hook) would have to gather the whole x and
+  reduce the whole y every iteration — the mesh-total all-gather penalty
+  ``n_dev·2·(n − n/n_dev)`` words, the same unit as ``halo_words``.
+  This is what ``build_sharded_spmv(..., format="auto")`` ranks on
+  (restricted to shardable candidates); the interconnect term widens
+  EHYB's margin wherever HBM traffic alone is close, though a format
+  whose HBM story is hopeless on a matrix (EHYB padding on power-law)
+  stays hopeless — interconnect words are thousands, HBM bytes are
+  millions.
 
-Non-EHYB formats have no reordered space; their accounting is
-context-independent.
+Non-EHYB formats have no reordered space; their HBM accounting is
+context-independent (only the dist interconnect term varies).
 """
 
 from __future__ import annotations
@@ -97,20 +112,48 @@ def matrix_key(m: SparseCSR, pattern: Optional[str] = None) -> str:
     return h.hexdigest()[:16]
 
 
+CONTEXTS = ("spmv", "solver", "dist")
+
+
+def allgather_penalty_bytes(n: int, n_dev: int, val_bytes: int) -> int:
+    """Mesh-total interconnect bytes/iteration for a format with no
+    partition structure: every device gathers the remote x
+    (n − n/n_dev words) and reduces its remote y contribution back —
+    the strategy the replaced ``dist_spmv`` implementation used for
+    everything.  Mesh-total (× n_dev) so the unit matches the EHYB
+    family's ``halo_words``, which sums the scheduled payload over all
+    ordered device pairs."""
+    return n_dev * 2 * (n - n // max(n_dev, 1)) * val_bytes
+
+
 def estimate_bytes(m: SparseCSR, fmt: str, val_bytes: int = 4,
                    shared: Optional[dict] = None,
                    stats: Optional[MatrixStats] = None,
                    context: str = "spmv") -> int:
-    """Modeled HBM bytes of one SpMV of ``m`` in format ``fmt``.
+    """Modeled bytes of one SpMV of ``m`` in format ``fmt``.
 
     ``context="solver"`` models one hot-loop iteration in the operator's
     native (permuted) space; ``"spmv"`` models a one-shot original-space
-    call — see the module docstring."""
+    call; ``context="dist"`` adds the interconnect term for execution
+    sharded over ``shared["n_dev"]`` devices — see the module docstring."""
     from .registry import get_format
 
-    return int(get_format(fmt).model(m, stats or matrix_stats(m), val_bytes,
-                                     {} if shared is None else shared,
-                                     context=context))
+    if context not in CONTEXTS:
+        raise ValueError(f"unknown context {context!r}; have {CONTEXTS}")
+    shared = {} if shared is None else shared
+    stats = stats or matrix_stats(m)
+    spec = get_format(fmt)
+    if context == "dist" and "n_dev" not in shared:
+        raise ValueError("context='dist' needs the mesh size: pass "
+                         "shared={'n_dev': ...} (autotune(..., n_dev=) "
+                         "sets it)")
+    if context == "dist" and spec.shard is None:
+        # no partition structure to shard: the HBM story is the solver
+        # iteration's, the interconnect story is the full gather+reduce
+        n_dev = int(shared["n_dev"])
+        return int(spec.model(m, stats, val_bytes, shared, context="solver")
+                   + allgather_penalty_bytes(stats.n, n_dev, val_bytes))
+    return int(spec.model(m, stats, val_bytes, shared, context=context))
 
 
 def model_table(m: SparseCSR, val_bytes: int = 4,

@@ -23,7 +23,14 @@ format as a candidate:
   applies hit the existing XLA cache).  Trivial for the unpartitioned
   formats; plan-driven (zero partitioning/packing passes) for the EHYB
   family.  The hook behind ``SpMVOperator.update_values`` — any future
-  format that provides it inherits the whole value-refresh fast path.
+  format that provides it inherits the whole value-refresh fast path;
+* ``shard`` — ``shard(op, mesh, axis, csr=None)``: lift a built operator
+  onto a device mesh as a :class:`repro.dist.ShardedOperator` (halo-plan
+  exchange, distributed solve, sharded refills).  EHYB-family only — the
+  hook is what makes a format *distributable*, and its presence is what
+  the ``context="dist"`` cost model keys the interconnect term on
+  (formats without it pay the all-gather penalty in the dist ranking and
+  are excluded from ``build_sharded_spmv``'s candidate set).
 
 The EHYB-family formats share one host-side EHYB build per matrix via the
 ``shared`` dict (allocated per autotune/build call), so ranking all six
@@ -57,6 +64,7 @@ class FormatSpec:
     description: str = ""
     permuted: Optional[Callable] = None   # (obj, x_new) -> y_new, or None
     refill: Optional[Callable] = None     # (obj, m_new, dtype, shared) -> obj
+    shard: Optional[Callable] = None      # (op, mesh, axis, csr) -> Sharded
 
 
 FORMATS: Dict[str, FormatSpec] = {}
@@ -343,21 +351,42 @@ def _model_hyb(m, stats: MatrixStats, vb: int, shared,
 
 
 def _ehyb_space(context: str) -> str:
-    return "permuted" if context == "solver" else "original"
+    # solver AND dist iterations run natively permuted (hoisted round trip)
+    return "permuted" if context in ("solver", "dist") else "original"
+
+
+def _ehyb_dist_kw(m, shared, context: str) -> dict:
+    """halo_words/n_dev kwargs for ``bytes_moved`` in the dist context —
+    the scheduled exchange payload of the matrix's halo plan."""
+    if context != "dist":
+        return {}
+    from ..dist.halo import ehyb_halo_words
+
+    n_dev = int(shared["n_dev"])      # required; estimate_bytes validates
+    e = shared_ehyb(m, shared)
+    return {"halo_words": ehyb_halo_words(e, n_dev), "n_dev": n_dev}
 
 
 def _model_ehyb(m, stats, vb, shared, context: str = "spmv") -> int:
     return shared_ehyb(m, shared).bytes_moved(
         vb, layout="tile", space=_ehyb_space(context),
-        fused_er=True)["total"]
+        fused_er=True, **_ehyb_dist_kw(m, shared, context))["total"]
 
 
 def _model_ehyb_bucketed(m, stats, vb, shared, context: str = "spmv") -> int:
+    if context == "dist":
+        # the shared shard hook executes the BASE uniform-tile apply for
+        # the whole family — ranking dist candidates by single-device
+        # layout savings the sharded program never realizes would make
+        # the "winner" noise (ties then break to plain "ehyb" by name)
+        return _model_ehyb(m, stats, vb, shared, context)
     return shared_buckets(m, shared).bytes_moved(
         vb, space=_ehyb_space(context), fused_er=True)["total"]
 
 
 def _model_ehyb_packed(m, stats, vb, shared, context: str = "spmv") -> int:
+    if context == "dist":
+        return _model_ehyb(m, stats, vb, shared, context)  # see bucketed
     return shared_ehyb(m, shared).bytes_moved(
         vb, layout="packed", space=_ehyb_space(context),
         fused_er=True)["total"]
@@ -379,19 +408,33 @@ register_format(FormatSpec(
     "hyb", _build_hyb, _model_hyb,
     description="classic HYB (Bell & Garland): ELL to 90th pct + COO spill",
     refill=_refill_hyb))
+def _shard_ehyb(op, mesh, axis, csr=None):
+    """The EHYB family's ``shard`` hook: lift onto a mesh via the halo-plan
+    subsystem (lazy import — the registry stays importable without jax
+    device state).  The sharded program always executes the base
+    uniform-tile apply recovered from the host EHYB build — bucketed/packed
+    single-device layouts have no sharded kernels (yet), which is also why
+    the dist-context models above collapse the family to one ranking."""
+    from ..dist.operator import shard_operator
+
+    return shard_operator(op, mesh, axis, csr=csr)
+
+
 register_format(FormatSpec(
     "ehyb", _build_ehyb, _model_ehyb,
     description="EHYB uniform tiles, uint16 local cols, explicit x cache",
-    permuted=ehyb_spmv_permuted, refill=_refill_ehyb))
+    permuted=ehyb_spmv_permuted, refill=_refill_ehyb, shard=_shard_ehyb))
 register_format(FormatSpec(
     "ehyb_bucketed", _build_ehyb_bucketed, _model_ehyb_bucketed,
     description="EHYB with width-bucketed partition tiles",
-    permuted=ehyb_buckets_spmv_permuted, refill=_refill_ehyb_bucketed))
+    permuted=ehyb_buckets_spmv_permuted, refill=_refill_ehyb_bucketed,
+    shard=_shard_ehyb))
 register_format(FormatSpec(
     "ehyb_packed", _build_ehyb_packed, _model_ehyb_packed,
     kernel="pallas-interpret",
     description="EHYB packed staircase (fused Pallas megakernel v2)",
-    permuted=_packed_permuted, refill=_refill_ehyb_packed))
+    permuted=_packed_permuted, refill=_refill_ehyb_packed,
+    shard=_shard_ehyb))
 register_format(FormatSpec(
     "dense", _build_dense, _model_dense,
     description="dense matmul (wins only on tiny/near-dense matrices)",

@@ -64,7 +64,7 @@ def _time_spmv(apply, obj, x, repeats: int = 3, warmup: int = 1) -> float:
 def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
              candidates=None, top_k: int = 3, use_cache: bool = True,
              shared: Optional[dict] = None,
-             context: str = "spmv") -> TuneResult:
+             context: str = "spmv", n_dev: int = 1) -> TuneResult:
     """Select the SpMV format for ``m``; see module docstring for the passes.
 
     ``shared`` (optional dict) carries the host EHYB build across the cost
@@ -72,30 +72,45 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
     one partitioning pass end to end.
 
     ``context`` selects the workload the byte model ranks for: "spmv"
-    (one-shot original-space call) or "solver" (permuted-space hot-loop
+    (one-shot original-space call), "solver" (permuted-space hot-loop
     iteration; EHYB-family candidates drop the per-call permutation round
-    trip) — see ``cost.py``.  The measured pass matches: with
-    ``context="solver"`` it times the permuted-space apply on a
-    permuted-space vector for formats that support it, the operation the
-    solver loop actually runs.  Decisions are cached per context.
+    trip), or "dist" (one iteration sharded over ``n_dev`` devices:
+    compute bytes plus the interconnect term — halo words for shardable
+    formats, the all-gather penalty otherwise) — see ``cost.py``.  The
+    measured pass matches: with ``context="solver"`` it times the
+    permuted-space apply on a permuted-space vector for formats that
+    support it, the operation the hot loop actually runs; with
+    ``context="dist"`` the measured pass is skipped and the ranking stays
+    model-driven — a single-device timing contains zero interconnect
+    traffic, the very term this context prices.  Decisions are cached
+    per context (and per ``n_dev`` for "dist").
     """
     import jax
     import jax.numpy as jnp
 
+    from .cost import CONTEXTS
     from .registry import available_formats, get_format
 
     if mode not in ("model", "measure"):
         raise ValueError(f"mode must be 'model' or 'measure', got {mode!r}")
-    if context not in ("spmv", "solver"):
-        raise ValueError(f"context must be 'spmv' or 'solver', got {context!r}")
+    if context not in CONTEXTS:
+        raise ValueError(f"context must be one of {CONTEXTS}, "
+                         f"got {context!r}")
+    if context == "dist" and n_dev < 2:
+        raise ValueError("context='dist' prices a multi-device mesh; "
+                         "pass n_dev >= 2 (a 1-device build is "
+                         "context='solver')")
     dtype = dtype or jnp.float32
     cand = tuple(candidates or available_formats())
     key = pattern_hash(m)
-    cache_key = (key, jnp.dtype(dtype).name, mode, cand, context)
+    cache_key = (key, jnp.dtype(dtype).name, mode, cand, context,
+                 n_dev if context == "dist" else None)
     if use_cache and cache_key in _CACHE:
         return _CACHE[cache_key]
 
     shared = {} if shared is None else shared
+    if context == "dist":
+        shared["n_dev"] = n_dev
     val_bytes = jnp.dtype(dtype).itemsize
     ranked = rank_formats(m, val_bytes, cand, shared, context)
     modeled = dict(ranked)
@@ -108,7 +123,11 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
     winner = (eligible or [ranked[0][0]])[0]
     measured = None
 
-    if mode == "measure":
+    # dist rankings stay model-driven even under mode="measure": a
+    # single-device timing contains zero interconnect traffic, so letting
+    # it override the winner would erase exactly the term this context
+    # exists to price
+    if mode == "measure" and context != "dist":
         timed = eligible[:top_k]
         if timed:
             rng0 = np.random.default_rng(0)

@@ -1,136 +1,56 @@
-"""Distributed EHYB SpMV — integration point #3 of DESIGN.md §3.
+"""Deprecated shim over ``repro.dist`` — the sharded-operator subsystem.
+
+DESIGN (what replaced this module)
+==================================
 
 The paper's partition-locality idea lifted to the mesh level: devices ↔
 partition groups, the explicitly cached x-slice ↔ the device-local shard of
-x, ER traffic ↔ the only cross-device communication.
+x.  Early versions of this module implemented the ER remainder by
+all-gathering the **entire** input vector per SpMV (the admitted upper
+bound).  That is no longer the implementation: distribution is now a
+first-class subsystem in :mod:`repro.dist` —
 
-Under ``shard_map`` over one mesh axis:
-  * the sliced-ELL part is **communication-free** — each device holds the
-    ELL tiles of its partitions and the matching x slices (this is the
-    paper's in-partition fraction, measured as saved collective bytes);
-  * the ER part all-gathers x once (the "halo"; a production variant would
-    exchange only boundary columns — the all-gather is the upper bound) and
-    psums the scattered remainder.
+* a :class:`~repro.dist.HaloPlan` computed once per sparsity pattern: for
+  every device, the sorted unique remote columns its ER slots touch, an
+  ``all_to_all`` send/recv schedule choosing per device pair between
+  fetching x words and pushing partial-y words (whichever is fewer), and ER
+  columns renumbered into the compact local space
+  ``[0, local_size + halo)`` — the §3.4 compact index at mesh scale;
+* a :class:`~repro.dist.ShardedOperator` with the full operator API
+  (original/permuted spaces, ``update_values`` refills, distributed
+  ``solve()`` support) whose per-iteration communication is ``halo_words``
+  instead of the ``2·n_pad·r`` words the all-gather + psum-scatter pair
+  moved (that baseline survives as :func:`repro.dist.build_allgather_spmv`
+  for the benchmark's measured comparison).
 
-``build_dist_spmv(dev, mesh, axis)`` returns a jitted global-semantics
-function ``x -> y`` whose per-device work is exactly the single-device
-kernels' (the same `ehyb_ell_ref` math), so correctness is pinned by the
-same oracles.
+``build_dist_spmv`` below is retained for source compatibility: it builds a
+:class:`~repro.dist.ShardedOperator` and returns the bare ``x -> y``
+closure the old API exposed.  New code should use
+:func:`repro.dist.build_sharded_spmv` directly.
 """
 
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from ..compat import shard_map
-from .ehyb import EHYBBuckets
-from .spmv import EHYBBucketsDevice, EHYBDevice, SpMVOperator
+import warnings
 
 
 def build_dist_spmv(dev, mesh, axis: str = "data", space: str = "original"):
-    """Distributed SpMV over ``mesh[axis]``.
+    """Deprecated: returns the matvec of a :class:`repro.dist.ShardedOperator`.
 
-    ``dev`` may be an :class:`EHYBDevice`; a host ``SparseCSR`` (routed
-    through ``build_spmv(format="ehyb")`` — distribution requires the
-    partition-local format); or a unified :class:`SpMVOperator` whose
-    container the EHYB tiling can be recovered from (``ehyb`` directly,
-    ``ehyb_bucketed`` via its host build).  Operators in other formats
-    (e.g. an autotuned ``csr`` winner) carry no partition structure — pass
-    the SparseCSR, or ``build_spmv(A, format="ehyb")``, instead.
-
-    ``space="permuted"`` returns a function over permuted-space (n_pad[, R])
-    vectors: the pad/``perm``/``inv_perm`` host-level gathers disappear, so
-    a distributed solver loop pays only the shard-local compute plus the ER
-    halo exchange per iteration (the same once-per-solve permutation
-    contract as ``core.solver.solve``).
+    ``dev`` may be an ``EHYBDevice``, a host ``SparseCSR`` or ``EHYB``
+    build, or an EHYB-family ``SpMVOperator``.  Unlike the historical
+    implementation, any ``n_parts``/``n_dev`` combination works (partitions
+    are padded), and non-float inputs are promoted exactly as ``spmv()``
+    promotes them.
     """
+    from ..dist import build_sharded_spmv
+
+    warnings.warn(
+        "core.dist_spmv.build_dist_spmv is deprecated; use "
+        "repro.dist.build_sharded_spmv (full operator API: permuted space, "
+        "value refills, distributed solve)", DeprecationWarning,
+        stacklevel=2)
     if space not in ("original", "permuted"):
         raise ValueError(f"unknown space {space!r}")
-    if isinstance(dev, SpMVOperator):
-        obj = dev.obj
-        if isinstance(obj, EHYBDevice):
-            dev = obj
-        elif isinstance(obj, EHYBBucketsDevice):
-            dev = EHYBDevice.from_ehyb(obj.host.base)
-        elif isinstance(obj, EHYBBuckets):
-            dev = EHYBDevice.from_ehyb(obj.base)
-        else:
-            raise TypeError(
-                f"build_dist_spmv cannot recover EHYB partition structure "
-                f"from a {dev.format!r} operator; pass the SparseCSR or "
-                f"build_spmv(A, format='ehyb')")
-    if not isinstance(dev, EHYBDevice):
-        from .matrices import SparseCSR
-        from .spmv import build_spmv
-
-        if isinstance(dev, SparseCSR):
-            dev = build_spmv(dev, format="ehyb").obj
-        else:
-            raise TypeError(
-                f"build_dist_spmv needs an EHYB-backed matrix, got "
-                f"{type(dev).__name__}")
-    n_dev = mesh.shape[axis]
-    if dev.n_parts % n_dev:
-        raise ValueError(f"n_parts {dev.n_parts} must divide devices {n_dev}")
-    er_rows = dev.er_vals.shape[0]
-    er_pad = -(-er_rows // n_dev) * n_dev
-    pad = er_pad - er_rows
-
-    er_vals = jnp.pad(dev.er_vals, ((0, pad), (0, 0)))
-    er_cols = jnp.pad(dev.er_cols, ((0, pad), (0, 0)))
-    er_row_idx = jnp.pad(dev.er_row_idx, (0, pad))
-
-    def local(x_parts, ell_vals, ell_cols, er_v, er_c, er_r):
-        # cached part: zero communication (partition-local by construction)
-        def one(xv, cols, vals):
-            g = xv[cols.astype(jnp.int32)]
-            return jnp.einsum("vw,vwr->vr", vals, g)
-
-        y_parts = jax.vmap(one)(x_parts, ell_cols, ell_vals)
-        # ER part: halo = one x all-gather; remainder scattered + psummed
-        x_full = jax.lax.all_gather(x_parts, axis, tiled=True)
-        x_flat = x_full.reshape(-1, x_parts.shape[-1])
-        g = x_flat[er_c]                                   # (R_loc, W, r)
-        y_er = jnp.einsum("ew,ewr->er", er_v, g)
-        y_sc = jnp.zeros_like(x_flat).at[er_r].add(y_er)
-        y_sc = jax.lax.psum_scatter(
-            y_sc.reshape(n_dev, -1, x_parts.shape[-1]), axis,
-            scatter_dimension=0, tiled=True)
-        return y_parts + y_sc.reshape(y_parts.shape)
-
-    mapped = shard_map(
-        local, mesh=mesh,
-        in_specs=(P(axis, None, None), P(axis, None, None),
-                  P(axis, None, None), P(axis, None), P(axis, None),
-                  P(axis)),
-        out_specs=P(axis, None, None))
-
-    @jax.jit
-    def spmv_permuted(x_new):
-        x2 = x_new[:, None] if x_new.ndim == 1 else x_new
-        r = x2.shape[1]
-        x_parts = x2.reshape(dev.n_parts, dev.vec_size, r)
-        y_parts = mapped(x_parts, dev.ell_vals, dev.ell_cols,
-                         er_vals, er_cols, er_row_idx)
-        y_new = y_parts.reshape(dev.n_pad, r)
-        return y_new[:, 0] if x_new.ndim == 1 else y_new
-
-    if space == "permuted":
-        return spmv_permuted
-
-    @jax.jit
-    def spmv(x):
-        x2 = x[:, None] if x.ndim == 1 else x
-        r = x2.shape[1]
-        xpad = jnp.concatenate(
-            [x2, jnp.zeros((dev.n_pad - dev.n, r), x2.dtype)], axis=0)
-        x_new = xpad[dev.perm]
-        y_new = spmv_permuted(x_new)
-        y = y_new.reshape(dev.n_pad, r)[dev.inv_perm[: dev.n]]
-        return y[:, 0] if x.ndim == 1 else y
-
-    return spmv
+    op = build_sharded_spmv(dev, mesh, axis)
+    return op.matvec_permuted if space == "permuted" else op.matvec

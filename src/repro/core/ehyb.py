@@ -85,7 +85,8 @@ class EHYB:
 
     def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2,
                     layout: str = "sliced", space: str = "permuted",
-                    fused_er: bool = True) -> dict:
+                    fused_er: bool = True, halo_words: Optional[int] = None,
+                    n_dev: int = 1) -> dict:
         """Modeled HBM traffic of one SpMV (the paper's §3.4 accounting).
 
         ELL streams vals + uint16 local cols once; every partition streams its
@@ -114,6 +115,17 @@ class EHYB:
                vs a second launch with one random x-read per ER entry plus a
                caller-side scatter-add (2·er_rows·val_bytes of y
                read-modify-write), kept for the ablation.
+
+        halo_words / n_dev: the interconnect term for mesh-sharded
+               execution (``context="dist"``): ``halo_words`` is the
+               scheduled per-iteration exchange payload of the
+               :class:`repro.dist.HaloPlan` (per rhs column), added as
+               ``interconnect = halo_words · val_bytes`` when ``n_dev > 1``.
+               Interconnect bytes are far more expensive per byte than HBM
+               bytes, but SpMV moves so few of them after the halo
+               compaction that a single combined total still ranks formats
+               correctly — the per-channel breakdown stays in the dict for
+               callers that weight them separately.
         """
         if layout == "tile" or self.slice_widths is None:
             ell_n = self.n_parts * self.vec_size * self.ell_width
@@ -147,9 +159,10 @@ class EHYB:
                   + (2 * self.er_rows * val_bytes if has_er else 0))
         y = self.n_pad * val_bytes
         perm = 2 * self.n_pad * val_bytes if space == "original" else 0
+        ic = (halo_words or 0) * val_bytes if n_dev > 1 else 0
         return {"ell": ell, "x_cache": x_cache, "er": er, "y": y,
-                "perm": perm,
-                "total": ell + x_cache + er + y + perm}
+                "perm": perm, "interconnect": ic,
+                "total": ell + x_cache + er + y + perm + ic}
 
     def as_jax(self, dtype=None):
         """Return a dict of jnp arrays (lazy import keeps preprocessing
@@ -461,12 +474,16 @@ class PackedEHYB:
         return dataclasses.replace(self, base=base, packed_vals=packed_vals)
 
     def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2,
-                    space: str = "permuted", fused_er: bool = True) -> dict:
+                    space: str = "permuted", fused_er: bool = True,
+                    halo_words: Optional[int] = None,
+                    n_dev: int = 1) -> dict:
         b = self.base.bytes_moved(val_bytes, col_bytes, layout="sliced",
-                                  space=space, fused_er=fused_er)
+                                  space=space, fused_er=fused_er,
+                                  halo_words=halo_words, n_dev=n_dev)
         ell = self.base.n_parts * self.packed_len * (val_bytes + col_bytes)
         return {**b, "ell": ell,
-                "total": ell + b["x_cache"] + b["er"] + b["y"] + b["perm"]}
+                "total": ell + b["x_cache"] + b["er"] + b["y"] + b["perm"]
+                + b["interconnect"]}
 
 
 def pack_staircase(e: EHYB) -> PackedEHYB:
@@ -533,13 +550,16 @@ class EHYBBuckets:                   # jit-static aux data of the device form
     widths: list          # list[int]
 
     def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2,
-                    space: str = "permuted", fused_er: bool = True) -> dict:
+                    space: str = "permuted", fused_er: bool = True,
+                    halo_words: Optional[int] = None,
+                    n_dev: int = 1) -> dict:
         ell = sum(v.size * (val_bytes + col_bytes) for v in self.vals)
         base = self.base.bytes_moved(val_bytes, col_bytes, space=space,
-                                     fused_er=fused_er)
+                                     fused_er=fused_er,
+                                     halo_words=halo_words, n_dev=n_dev)
         return {**base, "ell": ell,
                 "total": ell + base["x_cache"] + base["er"] + base["y"]
-                + base["perm"]}
+                + base["perm"] + base["interconnect"]}
 
 
 def build_buckets(e: EHYB, n_buckets: int = 4, lane: int = 8) -> EHYBBuckets:

@@ -58,6 +58,14 @@ pattern refreshes the cached operator's value tables (zero partitioning,
 zero recompilation — see ``core.spmv.cached_spmv_operator``) and recomputes
 the value-dependent preconditioner diagonal, while the permutation it is
 carried through comes from the reused operator — never re-derived.
+
+Distributed execution: ``solve()`` also accepts a
+:class:`repro.dist.ShardedOperator`, in which case the same permuted-space
+contract runs natively on mesh shards — the whole ``while_loop`` inside one
+shard_map, matvec communication limited to the operator's halo exchange,
+and every inner product ``psum``-ed over the mesh axis (``cg``/``bicgstab``
+grew ``axis_name=`` for exactly this).  See ``_solve_sharded`` and the
+``repro.dist`` package docstrings.
 """
 
 from __future__ import annotations
@@ -151,11 +159,12 @@ PRECONDITIONERS = {
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("matvec", "precond", "max_iters",
-                                   "fused_update"))
+                                   "fused_update", "axis_name"))
 def cg(matvec: Callable, b: jnp.ndarray, precond: Callable = lambda r: r,
        tol: float = 1e-6, max_iters: int = 500, *,
        fused_update: bool = False,
-       precond_inv: Optional[jnp.ndarray] = None) -> SolveResult:
+       precond_inv: Optional[jnp.ndarray] = None,
+       axis_name: Optional[str] = None) -> SolveResult:
     """Preconditioned conjugate gradients (device-resident loop).
 
     ‖r‖² rides in the loop state (no extra residual pass in ``cond``).
@@ -163,7 +172,19 @@ def cg(matvec: Callable, b: jnp.ndarray, precond: Callable = lambda r: r,
     CG-step kernel (requires the diagonal-preconditioner array
     ``precond_inv``; ones = identity).  Intended for TPU — on CPU the
     interpreted kernel is for validation only.
+
+    ``axis_name`` runs the same recurrence distributed: ``b`` (and every
+    vector the loop carries) is the device-local shard of a mesh-sharded
+    system and every inner product is ``lax.psum``-ed over the named axis —
+    the scalars (and hence the iteration trajectory and stopping decision)
+    are bitwise identical on all devices.  This is how ``solve()`` executes
+    a :class:`repro.dist.ShardedOperator`: the whole ``while_loop`` lives
+    inside one shard_map, with the halo exchange as the matvec's only
+    communication and one psum per dot.
     """
+    if fused_update and axis_name is not None:
+        raise ValueError("fused_update is a single-device CG-step kernel; "
+                         "distributed solves use the plain update path")
     if fused_update:
         from ..kernels.solver_step import fused_cg_update
 
@@ -178,7 +199,8 @@ def cg(matvec: Callable, b: jnp.ndarray, precond: Callable = lambda r: r,
     acc = jnp.promote_types(dt, jnp.float32)   # dots/norms in ≥fp32
 
     def _dot(u, v):
-        return jnp.vdot(u.astype(acc), v.astype(acc))
+        d = jnp.vdot(u.astype(acc), v.astype(acc))
+        return jax.lax.psum(d, axis_name) if axis_name else d
 
     x0 = jnp.zeros_like(b)
     r0 = b - matvec(x0)
@@ -220,20 +242,24 @@ def cg(matvec: Callable, b: jnp.ndarray, precond: Callable = lambda r: r,
     return SolveResult(x=x, iters=k, residual=res, converged=res <= tol)
 
 
-@partial(jax.jit, static_argnames=("matvec", "precond", "max_iters"))
+@partial(jax.jit, static_argnames=("matvec", "precond", "max_iters",
+                                   "axis_name"))
 def bicgstab(matvec: Callable, b: jnp.ndarray,
              precond: Callable = lambda r: r, tol: float = 1e-6,
-             max_iters: int = 500) -> SolveResult:
+             max_iters: int = 500, *,
+             axis_name: Optional[str] = None) -> SolveResult:
     """Preconditioned BiCGStab for non-symmetric systems.
 
     As in :func:`cg`, ‖r‖² is carried in the loop state — computed where the
     residual update already has ``r`` in registers — so the loop condition
-    costs no extra vector pass."""
+    costs no extra vector pass.  ``axis_name`` distributes the recurrence
+    over shards with psum-ed dots, exactly as documented on :func:`cg`."""
     dt = b.dtype
     acc = jnp.promote_types(dt, jnp.float32)   # dots/norms in ≥fp32
 
     def _dot(u, v):
-        return jnp.vdot(u.astype(acc), v.astype(acc))
+        d = jnp.vdot(u.astype(acc), v.astype(acc))
+        return jax.lax.psum(d, axis_name) if axis_name else d
 
     x0 = jnp.zeros_like(b)
     r0 = b - matvec(x0)
@@ -333,7 +359,42 @@ def _cached_precond(a: SparseCSR, kind: str, key: str,
     return out
 
 
-def solve(a: SparseCSR, b: jnp.ndarray, *, method: str = "cg",
+def _solve_sharded(op, b: jnp.ndarray, *, method: str, precond: str,
+                   tol: float, max_iters: int) -> SolveResult:
+    """Distributed solve on a :class:`repro.dist.ShardedOperator`.
+
+    The whole Krylov ``while_loop`` executes inside one shard_map over the
+    operator's mesh axis: ``b`` and the preconditioner diagonal are permuted
+    once and sharded, per-iteration communication is the operator's halo
+    exchange plus one psum per inner product, and the iterate is
+    un-permuted once at the end — the permuted-space contract of the module
+    DESIGN docstring, executed natively on shards."""
+    from .. import autotune as at
+
+    inv = None
+    if precond != "none":
+        if op.csr is None:
+            raise ValueError(
+                "a preconditioned distributed solve needs the operator's "
+                "host matrix; build it via build_sharded_spmv(SparseCSR, "
+                "mesh) or pass precond='none'")
+        key = at.matrix_key(op.csr)
+        _, inv = _cached_precond(op.csr, precond, key, perm=op.perm_host,
+                                 n_pad=op.n_pad)
+    b = jnp.asarray(b)
+    acc = jnp.promote_types(b.dtype, jnp.float32)
+    inv_arr = (jnp.ones((op.n_pad,), acc) if inv is None
+               else jnp.asarray(inv, acc))
+    if b.ndim > 1:
+        inv_arr = inv_arr[:, None]
+    b_new = op.to_permuted(b)
+    run = op.solver_runner(method)
+    r = run(op.obj, b_new, inv_arr, tol, max_iters=max_iters)
+    return SolveResult(x=op.from_permuted(r.x), iters=r.iters,
+                       residual=r.residual, converged=r.converged)
+
+
+def solve(a, b: jnp.ndarray, *, method: str = "cg",
           precond: str = "jacobi", format: str = "auto",
           tol: float = 1e-6, max_iters: int = 500, space: str = "auto",
           fused_update: str | bool = "auto") -> SolveResult:
@@ -345,6 +406,12 @@ def solve(a: SparseCSR, b: jnp.ndarray, *, method: str = "cg",
     permuted space (EHYB family), the whole ``lax.while_loop`` runs there:
     ``b`` and the preconditioner diagonal are permuted once, the iterate is
     un-permuted once at the end — see the module DESIGN docstring.
+
+    ``a`` may also be a :class:`repro.dist.ShardedOperator`, in which case
+    the solve runs distributed over the operator's mesh axis (``format``/
+    ``space``/``fused_update`` don't apply: the sharded permuted space is
+    the only execution space, and the fused CG-step kernel is
+    single-device).
 
     space: "auto" (permuted whenever the format supports it — the default
            for EHYB-family operators), "original", or "permuted" (error if
@@ -360,6 +427,14 @@ def solve(a: SparseCSR, b: jnp.ndarray, *, method: str = "cg",
         raise ValueError(f"unknown method {method!r}; have {sorted(SOLVERS)}")
     if space not in ("auto", "original", "permuted"):
         raise ValueError(f"unknown space {space!r}")
+    if not isinstance(a, SparseCSR):
+        from ..dist.operator import ShardedOperator
+
+        if isinstance(a, ShardedOperator):
+            return _solve_sharded(a, b, method=method, precond=precond,
+                                  tol=tol, max_iters=max_iters)
+        raise TypeError(f"solve takes a SparseCSR or a ShardedOperator, "
+                        f"got {type(a).__name__}")
     op = cached_spmv_operator(a, format=format, dtype=b.dtype,
                               context="solver")
     use_perm = (op.supports_permuted if space == "auto"

@@ -64,7 +64,16 @@ class SparseLinear:
     def from_dense(cls, w: np.ndarray, density: float = 0.1,
                    format: str = "auto", dtype=jnp.float32,
                    partition_method: Optional[str] = None,
+                   mesh=None, mesh_axis: str = "data",
                    **build_kw) -> "SparseLinear":
+        """Prune ``w`` and bind it to the chosen SpMV format.
+
+        ``mesh`` shards the layer over ``mesh[mesh_axis]`` (large pruned
+        heads): the operator becomes a :class:`repro.dist.ShardedOperator`
+        — autotuned with the interconnect-aware ``context="dist"`` ranking
+        when ``format="auto"`` — and every apply pays only the halo
+        exchange for cross-shard traffic.  ``update_values`` keeps working
+        unchanged (the halo plan is pattern-only)."""
         d_out, d_in = w.shape
         csr = prune_to_csr(w, density)
         shared: dict = {}
@@ -72,10 +81,17 @@ class SparseLinear:
             from .ehyb import build_ehyb      # the EHYB-family formats
 
             shared["ehyb"] = build_ehyb(csr, method=partition_method)
-        op = build_spmv(csr, format=format, dtype=dtype, shared=shared,
-                        **build_kw)
+        if mesh is not None:
+            from ..dist.operator import build_sharded_spmv
+
+            op = build_sharded_spmv(csr, mesh, mesh_axis, format=format,
+                                    dtype=dtype, shared=shared, **build_kw)
+        else:
+            op = build_spmv(csr, format=format, dtype=dtype, shared=shared,
+                            **build_kw)
         return cls(d_in=d_in, d_out=d_out, op=op, density=density,
-                   csr=csr, ehyb=shared.get("ehyb"))
+                   csr=csr, ehyb=shared.get("ehyb")
+                   or getattr(op, "host_ehyb", None))
 
     def update_values(self, w: np.ndarray) -> "SparseLinear":
         """Same pruning mask, new weights: refill the operator's value
@@ -93,8 +109,10 @@ class SparseLinear:
         csr_new = SparseCSR(self.csr.n, self.csr.indptr, self.csr.indices,
                             np.asarray(w, np.float64)[rows, self.csr.indices])
         op = self.op.update_values(csr_new)
-        return dataclasses.replace(self, op=op, csr=csr_new,
-                                   ehyb=_host_ehyb_of(op.obj) or self.ehyb)
+        return dataclasses.replace(
+            self, op=op, csr=csr_new,
+            ehyb=getattr(op, "host_ehyb", None) or _host_ehyb_of(op.obj)
+            or self.ehyb)
 
     # ---- permuted-space threading (EHYB family) ---------------------------
     # A single layer application must permute activations in and logits out

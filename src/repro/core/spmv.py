@@ -577,7 +577,7 @@ class SpMVOperator:
 
 def build_spmv(a, format: str = "auto", dtype=None, *, mode: str = "model",
                candidates=None, shared: dict = None,
-               context: str = "spmv") -> SpMVOperator:
+               context: str = "spmv", n_dev: int = 1) -> SpMVOperator:
     """Build the unified SpMV operator for CSR matrix ``a``.
 
     format="auto"    — pick via the autotuner (cost model; ``mode="measure"``
@@ -585,9 +585,12 @@ def build_spmv(a, format: str = "auto", dtype=None, *, mode: str = "model",
     format=<name>    — force a registered format ("csr", "ell", "hyb",
                        "ehyb", "ehyb_bucketed", "ehyb_packed", "dense").
     context          — workload the byte model ranks for: "spmv" (one-shot
-                       call, original space, permutation paid per call) or
+                       call, original space, permutation paid per call),
                        "solver" (iterative hot loop in the permuted space,
-                       permutation hoisted and amortized).
+                       permutation hoisted and amortized), or "dist" (a
+                       hot-loop iteration sharded over ``n_dev`` devices,
+                       interconnect term included — what
+                       ``repro.dist.build_sharded_spmv`` ranks on).
     """
     from .. import autotune as at
 
@@ -596,7 +599,7 @@ def build_spmv(a, format: str = "auto", dtype=None, *, mode: str = "model",
     tuning = None
     if format == "auto":
         tuning = at.autotune(a, dtype, mode=mode, candidates=candidates,
-                             shared=shared, context=context)
+                             shared=shared, context=context, n_dev=n_dev)
         format = tuning.format
     spec = at.get_format(format)
     obj, apply = spec.build(a, dtype, shared)
@@ -662,6 +665,11 @@ def spmv(a, x: jnp.ndarray, format: str = "auto", dtype=None) -> jnp.ndarray:
     """
     if isinstance(a, SpMVOperator):
         return a(x)
+    if not isinstance(a, SparseCSR):
+        from ..dist.operator import ShardedOperator
+
+        if isinstance(a, ShardedOperator):
+            return a(x)         # promotes non-float x itself
     x = jnp.asarray(x)
     if dtype is None:
         dtype = (x.dtype if jnp.issubdtype(x.dtype, jnp.inexact)

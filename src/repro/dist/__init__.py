@@ -1,0 +1,29 @@
+"""Sharded EHYB execution — the paper's explicit caching lifted to the mesh.
+
+The single-device EHYB story is: cache the partition-local slice of x,
+compress the column index into that slice, and make only the small
+"exceptional" remainder (ER) pay long-range traffic.  This package applies
+the same decomposition one level up, across devices:
+
+  partition-local x-slice  ->  the device-local shard of x (never moves)
+  compact uint16 column    ->  ER columns renumbered into the compact local
+                               space [0, local_size + halo_size)
+  ER remainder traffic     ->  a precomputed halo exchange moving only the
+                               words the ER entries actually reference
+
+``halo.py`` computes the :class:`HaloPlan` at partition time (pattern-only,
+so value refills reuse it), ``operator.py`` wraps it into a
+:class:`ShardedOperator` with the same lifecycle/space API as the
+single-device :class:`~repro.core.spmv.SpMVOperator`, and ``allgather.py``
+keeps the old gather-everything implementation as the accounting baseline.
+"""
+
+from .halo import HaloPlan, build_halo_plan, ehyb_halo_words
+from .operator import EHYBShards, ShardedOperator, build_sharded_spmv
+from .allgather import build_allgather_spmv
+
+__all__ = [
+    "HaloPlan", "build_halo_plan", "ehyb_halo_words",
+    "EHYBShards", "ShardedOperator", "build_sharded_spmv",
+    "build_allgather_spmv",
+]

@@ -1,0 +1,93 @@
+"""The gather-everything distributed SpMV — kept as the accounting baseline.
+
+This is the implementation ``core.dist_spmv`` shipped before the halo-plan
+subsystem existed: the ER part all-gathers the **entire** permuted x per
+SpMV and psum-scatters a full-length partial y, so every iteration moves
+``2 · n_pad · r`` words per device regardless of how few columns the ER
+entries actually reference.  :class:`repro.dist.ShardedOperator` replaces it
+with the compact halo exchange; this module survives solely so
+``benchmarks/dist_halo.py`` (and the multi-device tests) can measure the
+words the old strategy moved on the same matrices — the denominator of the
+halo-vs-all-gather ratios recorded in ``BENCH_spmv.json``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
+from ..core.spmv import EHYBDevice
+
+
+def build_allgather_spmv(dev: EHYBDevice, mesh, axis: str = "data",
+                         space: str = "original"):
+    """Distributed SpMV over ``mesh[axis]`` via full-x all-gather (baseline).
+
+    Requires ``n_parts % n_dev == 0`` (the halo-plan operator pads instead;
+    this baseline is only ever built for the ablation measurement).
+    """
+    if space not in ("original", "permuted"):
+        raise ValueError(f"unknown space {space!r}")
+    n_dev = mesh.shape[axis]
+    if dev.n_parts % n_dev:
+        raise ValueError(f"n_parts {dev.n_parts} must divide devices {n_dev}")
+    er_rows = dev.er_vals.shape[0]
+    er_pad = -(-er_rows // n_dev) * n_dev
+    pad = er_pad - er_rows
+
+    er_vals = jnp.pad(dev.er_vals, ((0, pad), (0, 0)))
+    er_cols = jnp.pad(dev.er_cols, ((0, pad), (0, 0)))
+    er_row_idx = jnp.pad(dev.er_row_idx, (0, pad))
+
+    def local(x_parts, ell_vals, ell_cols, er_v, er_c, er_r):
+        def one(xv, cols, vals):
+            g = xv[cols.astype(jnp.int32)]
+            return jnp.einsum("vw,vwr->vr", vals, g)
+
+        y_parts = jax.vmap(one)(x_parts, ell_cols, ell_vals)
+        # the upper bound this module exists to measure: full x gather +
+        # full-length scattered remainder
+        x_full = jax.lax.all_gather(x_parts, axis, tiled=True)
+        x_flat = x_full.reshape(-1, x_parts.shape[-1])
+        g = x_flat[er_c]
+        y_er = jnp.einsum("ew,ewr->er", er_v, g)
+        y_sc = jnp.zeros_like(x_flat).at[er_r].add(y_er)
+        y_sc = jax.lax.psum_scatter(
+            y_sc.reshape(n_dev, -1, x_parts.shape[-1]), axis,
+            scatter_dimension=0, tiled=True)
+        return y_parts + y_sc.reshape(y_parts.shape)
+
+    mapped = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None, None),
+                  P(axis, None, None), P(axis, None), P(axis, None),
+                  P(axis)),
+        out_specs=P(axis, None, None))
+
+    @jax.jit
+    def spmv_permuted(x_new):
+        x2 = x_new[:, None] if x_new.ndim == 1 else x_new
+        r = x2.shape[1]
+        x_parts = x2.reshape(dev.n_parts, dev.vec_size, r)
+        y_parts = mapped(x_parts, dev.ell_vals, dev.ell_cols,
+                         er_vals, er_cols, er_row_idx)
+        y_new = y_parts.reshape(dev.n_pad, r)
+        return y_new[:, 0] if x_new.ndim == 1 else y_new
+
+    if space == "permuted":
+        return spmv_permuted
+
+    @jax.jit
+    def spmv(x):
+        x2 = x[:, None] if x.ndim == 1 else x
+        r = x2.shape[1]
+        xpad = jnp.concatenate(
+            [x2, jnp.zeros((dev.n_pad - dev.n, r), x2.dtype)], axis=0)
+        x_new = xpad[dev.perm]
+        y_new = spmv_permuted(x_new)
+        y = y_new.reshape(dev.n_pad, r)[dev.inv_perm[: dev.n]]
+        return y[:, 0] if x.ndim == 1 else y
+
+    return spmv

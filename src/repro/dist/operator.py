@@ -1,0 +1,500 @@
+"""ShardedOperator — the unified SpMV operator, distributed over a mesh axis.
+
+Mirrors :class:`repro.core.spmv.SpMVOperator`'s whole contract — original +
+permuted execution spaces, ``update_values`` refills, a stable
+``matvec_permuted`` for solver loops — on top of a ``shard_map``-ed apply
+whose only communication is the :class:`~repro.dist.halo.HaloPlan` exchange:
+
+* the sliced-ELL part is **communication-free** — each device holds the ELL
+  tiles of its partitions and the matching x shard (the paper's explicitly
+  cached slice, now physically resident per device);
+* the ER part exchanges exactly the planned halo through one ``all_to_all``
+  per SpMV (fetch segments carry remote x words, push segments carry
+  partial-y sums), then computes with columns renumbered into the compact
+  local space ``[0, local_size + halo)``.
+
+Per-iteration communication is ``halo_words`` instead of the
+``2·n_pad`` words (full x all-gather + full psum-scatter) the previous
+implementation moved — see ``repro.dist.allgather`` for that baseline and
+``benchmarks/dist_halo.py`` for the measured comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..compat import shard_map
+from ..core.counters import bump
+from ..core.ehyb import EHYB, EHYBBuckets
+from ..core.matrices import SparseCSR
+from ..core.sparse_linear import _host_ehyb_of
+from ..core.spmv import (EHYBBucketsDevice, EHYBDevice, EHYBPackedDevice,
+                         SpMVOperator, _as_2d, _ehyb_ell_part, _from_permuted,
+                         _to_permuted)
+from .halo import HaloPlan, build_halo_plan
+
+
+# ---------------------------------------------------------------------------
+# device container
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EHYBShards:
+    """Device tables of a sharded EHYB operator (global-shape jnp arrays,
+    placed with a ``NamedSharding`` per leaf so repeated applies move no
+    bytes).  Static aux rides the pytree so jitted paths specialize on the
+    mesh geometry and drop the exchange/ER/push stages statically when a
+    matrix doesn't need them."""
+
+    n: int
+    n_pad: int                # n_pad_dist = n_dev * local_size
+    n_parts: int              # padded partition count (n_dev * parts_per_dev)
+    vec_size: int
+    n_dev: int
+    local_size: int
+    has_er: bool
+    needs_comm: bool
+    has_push: bool
+    ell_vals: jnp.ndarray     # (P_pad, V, W)
+    ell_cols: jnp.ndarray     # (P_pad, V, W) uint16 local
+    fer_vals: jnp.ndarray     # (n_dev, Rf, Wf)
+    fer_cols: jnp.ndarray     # (n_dev, Rf, Wf) int32 compact [0, L + H)
+    fer_rows: jnp.ndarray     # (n_dev, Rf) int32 local row
+    pe_vals: jnp.ndarray      # (n_dev, PE)
+    pe_cols: jnp.ndarray      # (n_dev, PE) int32 local to the source shard
+    pe_dst: jnp.ndarray       # (n_dev, PE) int32 flat slot into (n_dev*S)
+    pe_mask: jnp.ndarray      # (n_dev, PE) bool
+    send_idx: jnp.ndarray     # (n_dev, n_dev, S) int32
+    send_mask: jnp.ndarray    # (n_dev, n_dev, S) bool
+    recv_sel: jnp.ndarray     # (n_dev, H) int32
+    rp_sel: jnp.ndarray       # (n_dev, PR) int32
+    rp_rows: jnp.ndarray      # (n_dev, PR) int32
+    rp_mask: jnp.ndarray      # (n_dev, PR) bool
+    perm: jnp.ndarray         # (n_pad_dist,) — replicated
+    inv_perm: jnp.ndarray     # (n_pad_dist,) — replicated
+
+    _LEAVES = ("ell_vals", "ell_cols", "fer_vals", "fer_cols", "fer_rows",
+               "pe_vals", "pe_cols", "pe_dst", "pe_mask", "send_idx",
+               "send_mask", "recv_sel", "rp_sel", "rp_rows", "rp_mask",
+               "perm", "inv_perm")
+
+    def tree_flatten(self):
+        leaves = tuple(getattr(self, f) for f in self._LEAVES)
+        aux = (self.n, self.n_pad, self.n_parts, self.vec_size, self.n_dev,
+               self.local_size, self.has_er, self.needs_comm, self.has_push)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*aux, *leaves)
+
+    def specs(self, axis: str) -> "EHYBShards":
+        """An EHYBShards-shaped pytree of PartitionSpecs: every table is
+        sharded over its leading device axis; the permutations replicate."""
+        d3, d2 = P(axis, None, None), P(axis, None)
+        return dataclasses.replace(
+            self, ell_vals=d3, ell_cols=d3, fer_vals=d3, fer_cols=d3,
+            fer_rows=d2, pe_vals=d2, pe_cols=d2, pe_dst=d2, pe_mask=d2,
+            send_idx=d3, send_mask=d3, recv_sel=d2, rp_sel=d2, rp_rows=d2,
+            rp_mask=d2, perm=P(None), inv_perm=P(None))
+
+    def place(self, mesh, axis: str) -> "EHYBShards":
+        """device_put every leaf with its NamedSharding (no-op when already
+        placed — keeps repeated applies and value refills transfer-free)."""
+        specs = self.specs(axis)
+        kw = {f: jax.device_put(getattr(self, f),
+                                NamedSharding(mesh, getattr(specs, f)))
+              for f in self._LEAVES}
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the per-device apply (runs inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _local_apply(axis: str, obj: EHYBShards, x_loc: jnp.ndarray):
+    """One device's y shard: local ELL tiles + planned halo exchange + ER.
+
+    ``obj`` is the shard_map-local view (per-device leaves, global aux);
+    ``x_loc`` is the (local_size, R) x shard.  The only collective is the
+    single ``all_to_all`` carrying fetch x-words and push partial-y words.
+    """
+    R = x_loc.shape[1]
+    ppd = obj.ell_vals.shape[0]
+    x_parts = x_loc.reshape(ppd, obj.vec_size, R)
+    y = _ehyb_ell_part(obj.ell_vals, obj.ell_cols, x_parts)
+    y = y.reshape(obj.local_size, R)
+    if not obj.has_er:
+        return y
+    acc = jnp.promote_types(x_loc.dtype, obj.fer_vals.dtype)
+    recv = None
+    if obj.needs_comm:
+        buf = x_loc.astype(acc)[obj.send_idx[0]]          # (n_dev, S, R)
+        buf = jnp.where(obj.send_mask[0][..., None], buf, 0)
+        if obj.has_push:
+            contrib = obj.pe_vals[0][:, None] * x_loc[obj.pe_cols[0]]
+            buf = (buf.reshape(-1, R).at[obj.pe_dst[0]]
+                   .add(contrib.astype(acc)).reshape(buf.shape))
+        recv = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+        recv = recv.reshape(-1, R)                        # (n_dev*S, R)
+        x_ext = jnp.concatenate([x_loc.astype(acc),
+                                 recv[obj.recv_sel[0]]], axis=0)
+    else:
+        x_ext = x_loc
+    g = x_ext[obj.fer_cols[0]]                            # (Rf, Wf, R)
+    y_er = jnp.einsum("ew,ewr->er", obj.fer_vals[0], g)
+    y = y.at[obj.fer_rows[0]].add(y_er.astype(y.dtype))
+    if obj.has_push and obj.needs_comm:
+        part = recv[obj.rp_sel[0]] * obj.rp_mask[0][:, None].astype(acc)
+        y = y.at[obj.rp_rows[0]].add(part.astype(y.dtype))
+    return y
+
+
+# ---------------------------------------------------------------------------
+# the operator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardedOperator:
+    """A sparse operator sharded over ``mesh[axis]``.
+
+    Same lifecycle and space API as :class:`~repro.core.spmv.SpMVOperator`:
+    ``op(x)`` runs in the original space (permutation paid per call),
+    ``to_permuted``/``matvec_permuted``/``from_permuted`` hoist it for hot
+    loops, and ``update_values(a_new)`` refreshes the value tables on a
+    fixed pattern with zero re-planning and zero recompilation (the halo
+    plan is pattern-only).  ``core.solver.solve`` accepts it directly and
+    runs the Krylov loop distributed (see the solver DESIGN docstring).
+    """
+
+    format: str               # base format the operator was sharded from
+    obj: EHYBShards
+    mesh: object
+    axis: str
+    n: int
+    nnz: int
+    plan: HaloPlan
+    host_ehyb: Optional[EHYB] = None
+    csr: Optional[SparseCSR] = None       # host matrix (solve preconditioner)
+    dtype: object = None
+    pattern_key: Optional[str] = None
+    tuning: object = None
+    apply: callable = None                # (obj, x) -> y, original space
+    apply_permuted: callable = None       # (obj, x_new) -> y_new
+    _solver_cache: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.apply_permuted is None:
+            self._build_applies()
+
+    def _build_applies(self):
+        mesh, axis = self.mesh, self.axis
+        specs = self.obj.specs(axis)
+        mapped = shard_map(partial(_local_apply, axis), mesh,
+                           in_specs=(specs, P(axis, None)),
+                           out_specs=P(axis, None))
+
+        @jax.jit
+        def apply_permuted(obj, x_new):
+            x2, squeeze = _as_2d(x_new)
+            y2 = mapped(obj, x2)
+            return y2[:, 0] if squeeze else y2
+
+        @jax.jit
+        def apply(obj, x):
+            x_new, squeeze = _to_permuted(obj, x)
+            y2 = mapped(obj, x_new)
+            return _from_permuted(obj, y2, squeeze)
+
+        self.apply_permuted = apply_permuted
+        self.apply = apply
+
+    # ---- calls ------------------------------------------------------------
+
+    def _promote(self, x: jnp.ndarray) -> jnp.ndarray:
+        # same non-float -> f32 promotion as spmv(): an integer rhs must not
+        # drive integer einsums against the float value tables
+        x = jnp.asarray(x)
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            x = x.astype(self.dtype or jnp.float32)
+        return x
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.apply(self.obj, self._promote(x))
+
+    @property
+    def matvec(self):
+        return self.__call__
+
+    # ---- permuted space ----------------------------------------------------
+
+    @property
+    def supports_permuted(self) -> bool:
+        return True
+
+    @property
+    def n_pad(self) -> int:
+        return self.obj.n_pad
+
+    def to_permuted(self, x: jnp.ndarray) -> jnp.ndarray:
+        xn, squeeze = _to_permuted(self.obj, self._promote(x))
+        return xn[:, 0] if squeeze else xn
+
+    def from_permuted(self, y_new: jnp.ndarray) -> jnp.ndarray:
+        y2, squeeze = _as_2d(jnp.asarray(y_new))
+        return _from_permuted(self.obj, y2, squeeze)
+
+    def _permuted_call(self, x_new: jnp.ndarray) -> jnp.ndarray:
+        return self.apply_permuted(self.obj, self._promote(x_new))
+
+    @property
+    def matvec_permuted(self):
+        return self._permuted_call
+
+    @property
+    def perm_host(self) -> np.ndarray:
+        return np.asarray(self.obj.perm)
+
+    # ---- value refresh -----------------------------------------------------
+
+    def update_values(self, a_new: SparseCSR, *,
+                      pattern: Optional[str] = None) -> "ShardedOperator":
+        """Same sparsity pattern, new values: refill the sharded value
+        tables through the host scatter plan + the halo plan's fill maps.
+        Zero partitioning, zero halo re-planning, zero recompilation (the
+        refreshed container has the identical pytree structure, so the
+        jitted applies and any memoized distributed-solver runners hit
+        their existing XLA caches)."""
+        from .. import autotune as at
+
+        if self.host_ehyb is None or self.host_ehyb.fill_plan is None:
+            raise ValueError("this sharded operator carries no host fill "
+                             "plan; rebuild with build_sharded_spmv")
+        if a_new.n != self.n or a_new.nnz != self.nnz or (
+                self.pattern_key is not None
+                and (pattern or at.pattern_hash(a_new)) != self.pattern_key):
+            raise ValueError(
+                "update_values needs a matrix with the identical sparsity "
+                "pattern; build a fresh sharded operator for a new pattern")
+        e_new = self.host_ehyb.refill(a_new.data)
+        obj = _refill_shards(self.obj, e_new, self.plan, self.dtype,
+                             self.mesh, self.axis)
+        return dataclasses.replace(self, obj=obj, host_ehyb=e_new, csr=a_new)
+
+    # ---- distributed solver runner (memoized per method) -------------------
+
+    def solver_runner(self, method: str):
+        """Jitted distributed Krylov runner: the whole solver ``while_loop``
+        executes inside one shard_map — per-iteration work is the local
+        apply (+ halo exchange) and the dots are ``psum``-ed over the mesh
+        axis.  Memoized per method so repeated ``solve()`` calls (including
+        after ``update_values``) reuse one compiled program."""
+        fn = self._solver_cache.get(method)
+        if fn is not None:
+            return fn
+        from ..core.solver import SOLVERS, SolveResult
+
+        mesh, axis = self.mesh, self.axis
+        specs = self.obj.specs(axis)
+        solver = SOLVERS[method]
+
+        @partial(jax.jit, static_argnames=("max_iters",))
+        def run(obj, b_new, inv, tol, max_iters):
+            def local(obj_loc, b_loc, inv_loc, tol_loc):
+                def mv(v):
+                    v2 = v[:, None] if v.ndim == 1 else v
+                    y = _local_apply(axis, obj_loc, v2)
+                    return y[:, 0] if v.ndim == 1 else y
+
+                def pre(r):
+                    return (inv_loc.astype(
+                        jnp.promote_types(r.dtype, jnp.float32)) * r
+                    ).astype(r.dtype)
+
+                return solver(mv, b_loc, pre, tol=tol_loc,
+                              max_iters=max_iters, axis_name=axis)
+
+            mapped = shard_map(
+                local, mesh,
+                in_specs=(specs, P(axis), P(axis), P()),
+                out_specs=SolveResult(x=P(axis), iters=P(),
+                                      residual=P(), converged=P()))
+            return mapped(obj, b_new, inv, tol)
+
+        self._solver_cache[method] = run
+        return run
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+def _shards_from_ehyb(e: EHYB, plan: HaloPlan, dtype, mesh,
+                      axis: str) -> EHYBShards:
+    dt = dtype or jnp.float32
+    pad = plan.n_parts_pad - e.n_parts
+    ell_vals, ell_cols = e.ell_vals, e.ell_cols
+    if pad:
+        V, W = e.vec_size, e.ell_width
+        ell_vals = np.concatenate(
+            [ell_vals, np.zeros((pad, V, W), ell_vals.dtype)], axis=0)
+        ell_cols = np.concatenate(
+            [ell_cols, np.zeros((pad, V, W), ell_cols.dtype)], axis=0)
+    N = plan.n_pad_dist
+    perm = np.concatenate([e.perm, np.arange(e.n_pad, N)])
+    inv_perm = np.concatenate([e.inv_perm, np.arange(e.n_pad, N)])
+    shards = EHYBShards(
+        n=e.n, n_pad=N, n_parts=plan.n_parts_pad, vec_size=e.vec_size,
+        n_dev=plan.n_dev, local_size=plan.local_size,
+        has_er=plan.has_er, needs_comm=plan.needs_comm,
+        has_push=plan.has_push,
+        ell_vals=jnp.asarray(ell_vals, dtype=dt),
+        ell_cols=jnp.asarray(ell_cols),
+        fer_vals=jnp.asarray(plan.fill_fetch(e.er_vals), dtype=dt),
+        fer_cols=jnp.asarray(plan.fer_cols),
+        fer_rows=jnp.asarray(plan.fer_rows),
+        pe_vals=jnp.asarray(plan.fill_push(e.er_vals), dtype=dt),
+        pe_cols=jnp.asarray(plan.pe_cols),
+        pe_dst=jnp.asarray(plan.pe_dst),
+        pe_mask=jnp.asarray(plan.pe_mask),
+        send_idx=jnp.asarray(plan.send_idx),
+        send_mask=jnp.asarray(plan.send_mask),
+        recv_sel=jnp.asarray(plan.recv_sel),
+        rp_sel=jnp.asarray(plan.rp_sel),
+        rp_rows=jnp.asarray(plan.rp_rows),
+        rp_mask=jnp.asarray(plan.rp_mask),
+        perm=jnp.asarray(perm), inv_perm=jnp.asarray(inv_perm))
+    return shards.place(mesh, axis)
+
+
+def _refill_shards(obj: EHYBShards, e_new: EHYB, plan: HaloPlan, dtype,
+                   mesh, axis: str) -> EHYBShards:
+    """Value leaves only; every structural array shared by reference."""
+    dt = dtype or jnp.float32
+    pad = plan.n_parts_pad - e_new.n_parts
+    ell_vals = e_new.ell_vals
+    if pad:
+        ell_vals = np.concatenate(
+            [ell_vals, np.zeros((pad,) + ell_vals.shape[1:],
+                                ell_vals.dtype)], axis=0)
+    specs = obj.specs(axis)
+    def put(arr, spec):
+        return jax.device_put(jnp.asarray(arr, dtype=dt),
+                              NamedSharding(mesh, spec))
+    return dataclasses.replace(
+        obj,
+        ell_vals=put(ell_vals, specs.ell_vals),
+        fer_vals=put(plan.fill_fetch(e_new.er_vals), specs.fer_vals),
+        pe_vals=put(plan.fill_push(e_new.er_vals), specs.pe_vals))
+
+
+def ehyb_from_device(dev: EHYBDevice) -> EHYB:
+    """Pseudo host EHYB reconstructed from a bare device container (legacy
+    ``build_dist_spmv`` path — no fill plan, so the live ER set falls back
+    to the nonzero mask and value refills are unavailable)."""
+    ell_vals = np.asarray(dev.ell_vals, dtype=np.float64)
+    er_vals = np.asarray(dev.er_vals, dtype=np.float64)
+    return EHYB(
+        n=dev.n, n_pad=dev.n_pad, n_parts=dev.n_parts,
+        vec_size=dev.vec_size, ell_width=ell_vals.shape[2],
+        ell_vals=ell_vals, ell_cols=np.asarray(dev.ell_cols),
+        part_widths=None, slice_widths=None,
+        er_rows=er_vals.shape[0], er_width=er_vals.shape[1],
+        er_vals=er_vals, er_cols=np.asarray(dev.er_cols),
+        er_row_idx=np.asarray(dev.er_row_idx),
+        perm=np.asarray(dev.perm), inv_perm=np.asarray(dev.inv_perm),
+        nnz=int((ell_vals != 0).sum() + (er_vals != 0).sum()),
+        nnz_in=int((ell_vals != 0).sum()))
+
+
+def shard_operator(op: SpMVOperator, mesh, axis: str = "data",
+                   csr: Optional[SparseCSR] = None) -> ShardedOperator:
+    """Shard an existing EHYB-family :class:`SpMVOperator` over ``mesh[axis]``
+    (the implementation behind the registry's ``FormatSpec.shard`` hook)."""
+    e = _host_ehyb_of(op.obj)
+    if e is None:
+        raise TypeError(
+            f"cannot recover the host EHYB build from a {op.format!r} "
+            f"operator; pass the SparseCSR to build_sharded_spmv")
+    bump("shard_operator")
+    n_dev = mesh.shape[axis]
+    plan = build_halo_plan(e, n_dev)
+    obj = _shards_from_ehyb(e, plan, op.dtype, mesh, axis)
+    return ShardedOperator(
+        format=op.format, obj=obj, mesh=mesh, axis=axis, n=op.n, nnz=op.nnz,
+        plan=plan, host_ehyb=e, csr=csr, dtype=op.dtype,
+        pattern_key=op.pattern_key, tuning=op.tuning)
+
+
+def build_sharded_spmv(a, mesh, axis: str = "data", format: str = "auto",
+                       dtype=None, *, mode: str = "model",
+                       shared: Optional[dict] = None) -> ShardedOperator:
+    """Build a :class:`ShardedOperator` over ``mesh[axis]``.
+
+    ``a`` may be a host :class:`SparseCSR` (full lifecycle: autotuned
+    format with the ``context="dist"`` interconnect-aware ranking,
+    preconditioned distributed ``solve``, value refills), an existing
+    EHYB-family :class:`SpMVOperator`, a host :class:`EHYB` build, or a
+    bare :class:`EHYBDevice` (legacy shim path — applies only).
+
+    Any ``n_parts``/``n_dev`` combination works: partitions that don't
+    divide the mesh axis are padded with empty (zero-width) tiles.
+    ``shared`` carries a caller-supplied host EHYB build (non-default
+    partitioner), as in :func:`repro.core.spmv.build_spmv`.
+    """
+    from .. import autotune as at
+
+    n_dev = mesh.shape[axis]
+    if isinstance(a, ShardedOperator):
+        return a
+    if isinstance(a, SparseCSR):
+        from ..core.spmv import build_spmv
+
+        # a degenerate 1-device mesh has no interconnect to price
+        ctx = {"context": "dist", "n_dev": n_dev} if n_dev > 1 \
+            else {"context": "solver"}
+        shardable = [f for f in at.available_formats()
+                     if at.get_format(f).shard is not None]
+        if format == "auto":
+            op = build_spmv(a, format="auto", dtype=dtype, mode=mode,
+                            candidates=shardable, shared=shared, **ctx)
+        else:
+            if at.get_format(format).shard is None:
+                raise ValueError(
+                    f"format {format!r} carries no partition structure to "
+                    f"shard; pick one of {sorted(shardable)}")
+            op = build_spmv(a, format=format, dtype=dtype, shared=shared,
+                            **ctx)
+        return at.get_format(op.format).shard(op, mesh, axis, csr=a)
+    if isinstance(a, SpMVOperator):
+        return shard_operator(a, mesh, axis)
+    if isinstance(a, EHYB):
+        plan = build_halo_plan(a, n_dev)
+        obj = _shards_from_ehyb(a, plan, dtype, mesh, axis)
+        return ShardedOperator(format="ehyb", obj=obj, mesh=mesh, axis=axis,
+                               n=a.n, nnz=a.nnz, plan=plan, host_ehyb=a,
+                               dtype=dtype)
+    if isinstance(a, (EHYBDevice, EHYBPackedDevice, EHYBBucketsDevice)):
+        e = _host_ehyb_of(a)
+        if e is None and isinstance(a, EHYBDevice):
+            e = ehyb_from_device(a)
+        if e is None:
+            raise TypeError(f"cannot shard a bare {type(a).__name__} "
+                            f"without its host EHYB build")
+        plan = build_halo_plan(e, n_dev)
+        obj = _shards_from_ehyb(e, plan, dtype, mesh, axis)
+        return ShardedOperator(format="ehyb", obj=obj, mesh=mesh, axis=axis,
+                               n=e.n, nnz=e.nnz, plan=plan, host_ehyb=e,
+                               dtype=dtype)
+    if isinstance(a, EHYBBuckets):
+        return build_sharded_spmv(a.base, mesh, axis, format, dtype)
+    raise TypeError(f"build_sharded_spmv cannot shard a "
+                    f"{type(a).__name__}")

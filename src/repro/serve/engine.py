@@ -63,7 +63,8 @@ class ServeEngine:
     def __init__(self, params, cfg, *, batch: int = 4, max_len: int = 256,
                  max_prompt: int = 64, state_dtype=jnp.float32, seed: int = 0,
                  sparse_head_density: Optional[float] = None,
-                 sparse_head_format: str = "auto"):
+                 sparse_head_format: str = "auto",
+                 sparse_head_mesh=None, sparse_head_axis: str = "data"):
         self.params, self.cfg = params, cfg
         self.batch, self.max_len, self.max_prompt = batch, max_len, max_prompt
         self.queue: deque[Request] = deque()
@@ -73,7 +74,8 @@ class ServeEngine:
                                        enc_len=max_prompt)
         self.rng = np.random.default_rng(seed)
         self.sparse_head = self._build_sparse_head(
-            sparse_head_density, sparse_head_format)
+            sparse_head_density, sparse_head_format,
+            sparse_head_mesh, sparse_head_axis)
         self._decode = jax.jit(partial(self._decode_impl, cfg=cfg,
                                        head=self.sparse_head))
         self._prefill_one = jax.jit(partial(self._prefill_impl, cfg=cfg,
@@ -87,17 +89,23 @@ class ServeEngine:
         return np.asarray(self.params["head"]["w_head"],
                           dtype=np.float32).T               # (d,V) -> (V, d)
 
-    def _build_sparse_head(self, density, fmt):
+    def _build_sparse_head(self, density, fmt, mesh=None, axis="data"):
         """Prune the LM head into the unified-SpMV sparse layer (or None).
 
         EHYB-family formats serve decode through the fused permuted-space
-        pipeline (one kernel launch per token for the head matmul)."""
+        pipeline (one kernel launch per token for the head matmul).  A
+        ``mesh`` shards the pruned head over ``mesh[axis]`` — vocab-sized
+        heads outgrow one device's memory long before the trunk does — and
+        the decode-step head matmul pays only the halo exchange; weight
+        pushes (``refresh_sparse_head``) still refill in place because the
+        sharded tables reach the compiled steps as traced arguments too."""
         if density is None:
             return None
         from ..core.sparse_linear import SparseLinear
 
         return SparseLinear.from_dense(self._head_weights(), density=density,
-                                       format=fmt)
+                                       format=fmt, mesh=mesh,
+                                       mesh_axis=axis)
 
     def _head_obj(self):
         """The sparse head's device container, passed to the compiled steps
