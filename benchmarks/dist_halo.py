@@ -45,22 +45,24 @@ def _child(matrices, n_devs, max_iters: int) -> list:
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core import SUITE, build_spmv, solve
-    from repro.dist import build_allgather_spmv, build_sharded_spmv
+    from repro import api
+    from repro.core import SUITE
+    from repro.dist import build_allgather_spmv
     from repro.roofline.hlo_cost import analyze_hlo
 
+    ehyb = api.ExecutionConfig(format="ehyb")
     records = []
     for name in matrices:
         m = SUITE[name]()
         rng = np.random.default_rng(0)
         b = jnp.asarray(rng.standard_normal(m.n), dtype=jnp.float32)
-        op = build_spmv(m, format="ehyb")
-        r_loc = solve(m, b, precond="jacobi", format="ehyb",
-                      max_iters=max_iters)
+        op = api.plan(m, execution=ehyb).bind(m)
+        sol = api.plan(m, execution=api.ExecutionConfig(
+            format="ehyb", workload="solver")).bind(m)
+        r_loc = sol.solve(b, precond="jacobi", max_iters=max_iters)
         jax.block_until_ready(r_loc.x)          # warm the compile cache
         t0 = time.perf_counter()
-        r_loc = solve(m, b, precond="jacobi", format="ehyb",
-                      max_iters=max_iters)
+        r_loc = sol.solve(b, precond="jacobi", max_iters=max_iters)
         jax.block_until_ready(r_loc.x)
         t_loc = time.perf_counter() - t0
         for n_dev in n_devs:
@@ -68,8 +70,8 @@ def _child(matrices, n_devs, max_iters: int) -> list:
             from repro.compat import make_mesh
 
             mesh = make_mesh(mesh_shape, ("data",))
-            sop = build_sharded_spmv(m, mesh, "data", format="ehyb")
-            plan = sop.plan
+            sop = api.plan(m, mesh=mesh, execution=ehyb).bind(m)
+            plan = sop.halo_plan
             xp = sop.to_permuted(b)
             halo_hlo = (jax.jit(sop.matvec_permuted).lower(xp).compile()
                         .as_text())
@@ -86,10 +88,10 @@ def _child(matrices, n_devs, max_iters: int) -> list:
             else:
                 coll_leg = None
             # distributed solve: compile, then time one solve
-            r_dist = solve(sop, b, precond="jacobi", max_iters=max_iters)
+            r_dist = sop.solve(b, precond="jacobi", max_iters=max_iters)
             jax.block_until_ready(r_dist.x)
             t0 = time.perf_counter()
-            r_dist = solve(sop, b, precond="jacobi", max_iters=max_iters)
+            r_dist = sop.solve(b, precond="jacobi", max_iters=max_iters)
             jax.block_until_ready(r_dist.x)
             t_dist = time.perf_counter() - t0
             iters = max(int(r_dist.iters), 1)

@@ -9,6 +9,8 @@
   framework      -> dist_halo         (sharded halo exchange vs all-gather
                                        words + distributed solve timings)
   framework      -> autotune_table    (per-matrix chosen format + bytes/nnz)
+  framework      -> api_overhead      (Operator API v2 dispatch vs direct
+                                       engine apply; asserts < 5% overhead)
   framework      -> lm_step_bench     (smoke train/decode step times)
 
 Prints ``name,us_per_call,derived`` CSV lines, and writes the
@@ -51,8 +53,9 @@ import sys
 
 DEFAULT_MODS = ["bytes_model", "preprocessing_time", "speedup_table",
                 "solver_bench", "dist_halo", "autotune_table",
-                "lm_step_bench"]
-QUICK_MODS = ["solver_bench", "preprocessing_time", "dist_halo"]
+                "api_overhead", "lm_step_bench"]
+QUICK_MODS = ["solver_bench", "preprocessing_time", "dist_halo",
+              "api_overhead"]
 
 
 def collect_dist_records(results: dict, quick: bool = False) -> list:
@@ -149,6 +152,7 @@ def main(argv=None) -> None:
     spmv_records = collect_spmv_records(args.quick, rows=rows)
     spmv_records += collect_preprocess_records(results, args.quick)
     spmv_records += collect_dist_records(results, args.quick)
+    spmv_records += results.get("api_overhead") or []
     solver_records = results.get("solver_bench")
     if solver_records is None:
         from . import solver_bench

@@ -14,8 +14,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro import autotune as at
-from repro.core import PRECONDITIONERS, build_spmv, cg
+from repro.core import PRECONDITIONERS, cg
 
 from .common import emit, get_ehyb, get_matrix, time_fn
 
@@ -42,12 +43,13 @@ def main(quick: bool = False):
         pre = PRECONDITIONERS["spai"](m)
         e = get_ehyb(name)
         shared = {"ehyb": e}
-        # the paper's experiment through the unified entry point: same
+        # the paper's experiment through the Operator API v2 surface: same
         # Krylov loop, swap the SpMV operator (+ the autotuned pick)
-        ops = {fmt: build_spmv(m, format=fmt, shared=shared)
+        ops = {fmt: api.plan(m, execution=api.ExecutionConfig(
+                   format=fmt)).bind(m)
                for fmt in ("ehyb", "csr")}
-        ops["auto"] = build_spmv(m, format="auto", shared=shared,
-                                 context="solver")
+        ops["auto"] = api.plan(m, execution=api.ExecutionConfig(
+            workload="solver")).bind(m)
         res = {}
         for fmt, op in ops.items():
             spaces = (("original", op.matvec, b, None),)

@@ -1,10 +1,12 @@
-"""FEM iterative-solver example — the paper's target workload (§1, §6).
+"""FEM iterative-solver example — the paper's target workload (§1, §6),
+through the Operator API v2 surface.
 
-Solves A·x = b with preconditioned CG through the unified entry point
-(``solve(A, b)`` autotunes the SpMV format; forcing ``format=`` reproduces
-the paper's EHYB-vs-CSR comparison), and reports how many solver iterations
-amortize EHYB's preprocessing (the paper's §6 argument: SPAI-preconditioned
-transient simulation ⇒ preprocessing is amortized over thousands of SpMVs).
+``plan`` with ``workload="solver"`` ranks formats on permuted-space
+hot-loop traffic, ``bind`` fills the values, and ``op.solve`` drives the
+preconditioned Krylov loop (natively in the format's execution space).
+Forcing ``format=`` reproduces the paper's EHYB-vs-CSR comparison, and the
+transient-FEM shape — re-solve with updated values, warm-started from the
+previous solution — rides ``update_values`` + ``x0=``.
 
   PYTHONPATH=src python examples/cg_solver.py
 """
@@ -15,8 +17,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro import autotune as at
-from repro.core import elasticity3d, solve
+from repro import api
+from repro.core import elasticity3d
+from repro.core.matrices import SparseCSR
 
 
 def main():
@@ -25,24 +28,36 @@ def main():
     b = jnp.asarray(np.random.default_rng(1).standard_normal(m.n),
                     dtype=jnp.float32)
 
-    shared = {}
-    preprocess = None
     results = {}
     for fmt in ("auto", "ehyb", "csr"):
-        r = solve(m, b, format=fmt, precond="spai", tol=1e-6,
-                  max_iters=800)                                   # compile
+        p = api.plan(m, execution=api.ExecutionConfig(
+            format=fmt, workload="solver"))
+        op = p.bind(m)
+        r = op.solve(b, precond="spai", tol=1e-6, max_iters=800)  # compile
         jax.block_until_ready(r.x)
         t0 = time.perf_counter()
-        r = solve(m, b, format=fmt, precond="spai", tol=1e-6, max_iters=800)
+        r = op.solve(b, precond="spai", tol=1e-6, max_iters=800)
         jax.block_until_ready(r.x)
         dt = time.perf_counter() - t0
         results[fmt] = dt
-        print(f"{fmt:5s}: {int(r.iters)} iters, residual "
+        chosen = f" (chose {op.format})" if fmt == "auto" else ""
+        print(f"{fmt:5s}{chosen}: {int(r.iters)} iters, residual "
               f"{float(r.residual):.2e}, converged={bool(r.converged)}, "
               f"{dt*1e3:.1f} ms")
 
-    at.estimate_bytes(m, "ehyb", shared=shared)   # host EHYB for the stats
-    e = shared["ehyb"]
+    # transient-FEM shape: same pattern, updated values, warm start
+    p = api.plan(m, execution=api.ExecutionConfig(format="ehyb",
+                                                  workload="solver"))
+    op = p.bind(m)
+    r_cold = op.solve(b, precond="spai", tol=1e-6, max_iters=800)
+    m2 = SparseCSR(m.n, m.indptr, m.indices, m.data * 1.02)
+    op2 = op.update_values(m2)          # one refill, zero re-planning
+    r_warm = op2.solve(b, precond="spai", tol=1e-6, max_iters=800,
+                       x0=r_cold.x)
+    print(f"value update + warm start: {int(r_warm.iters)} iters "
+          f"(cold: {int(r_cold.iters)})")
+
+    e = p.host_build
     print(f"EHYB: {e.n_parts} partitions, in-partition "
           f"{e.in_part_fraction:.1%}, preprocess "
           f"{e.preprocess_seconds['total']*1e3:.1f} ms")

@@ -1,20 +1,23 @@
-"""Quickstart: the unified SpMV entry point.
+"""Quickstart: the Operator API v2 lifecycle — plan → bind → apply.
 
-One call — ``spmv(A, x)`` — picks the best device format for the matrix via
-the autotuner's bytes-moved cost model, builds it, and runs the product.
-Below that, the EHYB machinery the paper contributes (partition → reorder →
-sliced-ELL + ER, Pallas kernel, width buckets) is still reachable by forcing
-a format or calling the builders directly.
+One pattern-only ``plan(A)`` picks the best device format for the matrix
+via the autotuner's bytes-moved cost model and records everything
+value-independent (partitioning, reordering, halo schedule).  ``bind``
+fills in the values, and the resulting ``LinearOperator`` is a jit/vmap/
+grad-safe pytree: ``op @ x`` runs the SpMV, ``op.update_values`` refreshes
+values on a fixed pattern without re-planning, and ``jax.grad`` flows
+through both ``x`` and the bound values.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro import autotune as at
-from repro.core import build_spmv, poisson3d, spmv
-from repro.kernels import ehyb_spmv_pallas
+from repro import api
+from repro.core import poisson3d
+from repro.core.matrices import SparseCSR
 
 
 def main():
@@ -23,45 +26,60 @@ def main():
     m = poisson3d(16)
     print(f"matrix: n={m.n} nnz={m.nnz}")
 
-    # 2. the unified entry point: autotuned format selection + SpMV
+    # 2. the lifecycle: plan once per pattern, bind per value set
+    p = api.plan(m)
+    print(f"plan: {p}")
+    for fmt, b in sorted(p.tuning.modeled_bytes.items(),
+                         key=lambda kv: kv[1]):
+        print(f"  {fmt:14s} modeled {b/m.nnz:7.2f} bytes/nnz")
+
+    op = p.bind(m)
     x = jnp.asarray(np.random.default_rng(0).standard_normal(m.n),
                     dtype=jnp.float32)
     y_ref = m.spmv(np.asarray(x, dtype=np.float64))
     scale = np.abs(y_ref).max()
+    y = np.asarray(op @ x)
+    print(f"op @ x      max rel err = {np.abs(y - y_ref).max()/scale:.2e}")
 
-    y = np.asarray(spmv(m, x))
-    print(f"spmv(A, x)  max rel err = {np.abs(y - y_ref).max()/scale:.2e}")
+    # 3. value refresh on a fixed pattern: one scatter, zero re-planning,
+    #    zero recompilation (the §6 amortization, as an API contract)
+    m2 = SparseCSR(m.n, m.indptr, m.indices, m.data * 2.0)
+    op2 = op.update_values(m2)
+    y2 = np.asarray(op2 @ x)
+    print(f"update_values: max rel err vs 2A@x = "
+          f"{np.abs(y2 - 2*y_ref).max()/scale:.2e} "
+          f"(same plan: {op2.plan is p})")
 
-    op = build_spmv(m)           # the reusable operator behind spmv()
-    print(f"autotuner chose: {op.format}")
-    for fmt, b in sorted(op.tuning.modeled_bytes.items(), key=lambda kv: kv[1]):
-        print(f"  {fmt:14s} modeled {b/m.nnz:7.2f} bytes/nnz")
-
-    # 3. the paper's format, forced: EHYB preprocessing stats + both paths
-    op_e = build_spmv(m, format="ehyb")
-    e = op_e.obj  # EHYBDevice; host-side stats via the autotune registry
-    shared = {}
-    at.estimate_bytes(m, "ehyb", shared=shared)
-    host = shared["ehyb"]
+    # 4. the paper's format, forced: EHYB preprocessing stats + the
+    #    explicit execution-space API
+    pe = api.plan(m, execution=api.ExecutionConfig(format="ehyb"))
+    ope = pe.bind(m)
+    host = pe.host_build
     print(f"EHYB: partitions={host.n_parts} vec_size={host.vec_size} "
           f"in-partition={host.in_part_fraction:.1%} "
           f"ell_width={host.ell_width} er_rows={host.er_rows}")
     print(f"preprocess: {host.preprocess_seconds['total']*1e3:.1f} ms "
           f"(partition {host.preprocess_seconds['partition']*1e3:.1f} ms)")
-    bm = host.bytes_moved(4)
-    print(f"modeled HBM bytes/SpMV: {bm['total']:,} "
-          f"(ELL {bm['ell']:,}, cached-x {bm['x_cache']:,}, ER {bm['er']:,})")
+    x_tilde = ope.to_space(x, api.Space.PERMUTED)     # hoist once
+    y_tilde = ope.apply(x_tilde, space=api.Space.PERMUTED)
+    y_e = np.asarray(ope.from_space(y_tilde, api.Space.PERMUTED))
+    print(f"permuted-space apply max rel err = "
+          f"{np.abs(y_e - y_ref).max()/scale:.2e}")
 
-    y_e = np.asarray(op_e(x))
-    y_pal = np.asarray(ehyb_spmv_pallas(e, x))          # interpret=True (CPU)
-    for name, yy in (("ehyb (jnp)", y_e), ("ehyb (pallas)", y_pal)):
-        print(f"{name:14s} max rel err = {np.abs(yy - y_ref).max()/scale:.2e}")
+    # 5. operators are differentiable jax citizens: grad w.r.t. x is Aᵀḡ
+    #    through a transpose plan, grad w.r.t. values is gathered per-nnz
+    v = jnp.asarray(np.random.default_rng(1).standard_normal(m.n),
+                    dtype=jnp.float32)
+    gx = jax.grad(lambda xx: jnp.vdot(op @ xx, v))(x)
+    gv = jax.grad(lambda vals: jnp.vdot(p.bind(vals) @ x, v))(
+        jnp.asarray(m.data, jnp.float32))
+    print(f"grad shapes: d/dx {gx.shape}, d/dvalues {gv.shape}")
 
-    # 4. SpMM (multi-RHS) through the same operator — used by the sparse-FFN
-    #    and serving integrations
+    # 6. SpMM (multi-RHS) through the same operator — used by the
+    #    sparse-FFN and serving integrations
     xr = jnp.asarray(np.random.default_rng(1).standard_normal((m.n, 8)),
                      dtype=jnp.float32)
-    yr = np.asarray(op(xr))
+    yr = np.asarray(op @ xr)
     print(f"SpMM out: {yr.shape}, finite: {np.isfinite(yr).all()}")
 
 

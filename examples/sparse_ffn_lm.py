@@ -1,6 +1,8 @@
-"""EHYB inside an LM: replace a dense FFN projection with an EHYBLinear
-(magnitude-pruned, explicit-caching SpMM) and measure agreement + modeled
-bytes. Integration point #2 of DESIGN.md §3.
+"""EHYB inside an LM: replace a dense FFN projection with a pruned sparse
+layer (magnitude-pruned, explicit-caching SpMM) and measure agreement +
+modeled bytes — then fine-tune the surviving weights THROUGH the operator
+with plain ``jax.grad`` (Operator API v2: the apply carries a custom VJP,
+so no hand-rolled backward pass).  Integration point #2 of DESIGN.md §3.
 
   PYTHONPATH=src python examples/sparse_ffn_lm.py
 """
@@ -9,10 +11,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs import get_config
-from repro.core.sparse_linear import EHYBLinear
 from repro.models import init_model
-from repro.models.layers import apply_mlp
 
 
 def main():
@@ -27,7 +28,8 @@ def main():
     y_dense = x @ jnp.asarray(w_down)
 
     for density in (0.5, 0.2, 0.05):
-        lin = EHYBLinear.from_dense(w_down.T, density=density)
+        lin = api.pruned_linear(w_down.T, density=density, format="ehyb",
+                                partition_method="bfs")
         # EHYBLinear computes y = A x with A (d_out,d_in); our dense op is
         # x @ W (d_ff,d_model) so A = W.T
         y_sparse = lin(x)
@@ -46,6 +48,34 @@ def main():
               f"bytes ratio vs dense={b['ratio']:.2f}")
     print("(bytes ratio < 1 ⇒ the sparse layer moves less HBM than dense; "
           "quality tradeoff is the pruning, not the format)")
+
+    # fixed-mask value fine-tuning: the pruned layer's nnz values are the
+    # trainable parameter, gradients flow through plan.bind + the operator's
+    # custom-VJP apply (repro.train.make_sparse_value_train_step)
+    from repro.train.optimizer import OptimizerConfig, init_opt_state
+    from repro.train.train_step import make_sparse_value_train_step
+
+    lin = api.pruned_linear(w_down.T, density=0.2, format="ehyb")
+    plan = lin.op.plan
+    xt = jnp.asarray(x.reshape(-1, cfg.d_ff).T[: lin.op.n])   # (n, T)
+    y_goal = jnp.asarray(y_dense.reshape(-1, cfg.d_model).T)  # target
+
+    def loss_fn(op):
+        y = (op @ xt)[: cfg.d_model]
+        d = y - y_goal
+        return jnp.vdot(d, d).real / d.size
+
+    values = jnp.asarray(lin.op.values, jnp.float32)
+    opt_cfg = OptimizerConfig(lr=2e-2, warmup_steps=0, weight_decay=0.0,
+                              clip_norm=1e9)
+    opt = init_opt_state({"values": values})
+    step = make_sparse_value_train_step(plan, loss_fn, opt_cfg)
+    l0 = None
+    for i in range(20):
+        values, opt, metrics = step(values, opt)
+        l0 = l0 or float(metrics["loss"])
+    print(f"value fine-tuning (fixed mask, grad through the operator): "
+          f"loss {l0:.4f} -> {float(metrics['loss']):.4f} in 20 steps")
 
 
 if __name__ == "__main__":

@@ -3,6 +3,10 @@ multi-pod JAX training/serving framework.
 
 Subpackages
 -----------
+api       — Operator API v2: the one public surface.  ``plan(A)`` →
+            ``Plan.bind(values)`` → differentiable ``LinearOperator``
+            (apply/solve/update_values, local or mesh-sharded).  Every
+            legacy entry point below delegates here.
 core      — the paper's contribution: partitioner, EHYB format, SpMV/SpMM,
             Krylov solvers, synthetic FEM matrix suite.
 kernels   — Pallas TPU kernels (VMEM-cached EHYB SpMV/SpMM) + jnp oracles.

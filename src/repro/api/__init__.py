@@ -1,0 +1,37 @@
+"""Operator API v2 — the one public surface for sparse operators.
+
+The lifecycle the paper's economics dictate (§3, §4.3: pay pattern-only
+preprocessing once, amortize it over many applies) as three explicit steps:
+
+    from repro import api
+
+    p  = api.plan(A)                    # pattern-only (cached: PLAN_CACHE)
+    op = p.bind(A)                      # values -> LinearOperator
+    y  = op @ x                         # apply (jit/vmap/grad-safe)
+
+    op = op.update_values(A2)           # same pattern, new values: refill
+    r  = op.solve(b, method="cg", x0=x_prev)   # Krylov solve, warm-startable
+
+Sharding is a planning argument, not a parallel API:
+
+    p  = api.plan(A, mesh=mesh)         # halo schedule planned here
+    op = p.bind(A)                      # same class, shard_map-ed apply
+    r  = op.solve(b)                    # distributed Krylov loop
+
+Every legacy entry point (``core.spmv.spmv``/``build_spmv``,
+``core.solver.solve``, ``dist.build_sharded_spmv``,
+``SparseLinear.from_dense``) now delegates here and emits a
+``DeprecationWarning``; see README "API v2" for the migration table.
+"""
+
+from .config import ExecutionConfig, Space
+from .plan import PLAN_CACHE, Plan, PlanCache, plan
+from .operator import LinearOperator, solve_operator
+from .nn import pruned_linear
+
+__all__ = [
+    "ExecutionConfig", "Space",
+    "PLAN_CACHE", "Plan", "PlanCache", "plan",
+    "LinearOperator", "solve_operator",
+    "pruned_linear",
+]

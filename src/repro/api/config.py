@@ -1,0 +1,87 @@
+"""Operator API v2 configuration: execution spaces and planning knobs.
+
+:class:`Space` replaces the stringly-typed ``space="original"|"permuted"``
+arguments (and the ``to_permuted``/``from_permuted`` method pairs) with one
+explicit enum, and :class:`ExecutionConfig` replaces the
+``context="spmv"|"solver"|"dist"`` keyword that PRs 1–4 threaded by
+copy-paste through ``build_spmv``/``solve``/``build_sharded_spmv``.  A plan
+is keyed by (sparsity pattern, execution config, mesh geometry) — see
+:mod:`repro.api.plan`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Optional, Tuple
+
+
+class Space(enum.Enum):
+    """Vector space an operator apply reads/writes.
+
+    ``ORIGINAL``   — the caller's coordinates: length-``n`` vectors indexed
+                     by matrix row/column.
+    ``PERMUTED``   — the format's execution space: symmetrically reordered
+                     and padded to ``n_pad`` (EHYB family).  Hot loops hoist
+                     the ``ORIGINAL ↔ PERMUTED`` gathers out of the loop via
+                     :meth:`repro.api.LinearOperator.to_space` /
+                     :meth:`~repro.api.LinearOperator.from_space`.
+    """
+
+    ORIGINAL = "original"
+    PERMUTED = "permuted"
+
+
+# workload -> autotuner cost-model context (see repro.autotune.cost)
+WORKLOADS = ("auto", "spmv", "solver", "dist")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """Value-independent planning knobs (all hashable — part of the plan key).
+
+    format            — "auto" (cost-model autotuner) or a registered format
+                        name ("csr", "ell", "hyb", "ehyb", "ehyb_bucketed",
+                        "ehyb_packed", "dense").
+    mode              — autotuner mode: "model" ranks on modeled HBM bytes;
+                        "measure" additionally times the top candidates.
+    workload          — what the byte model prices one apply as: "spmv"
+                        (one-shot original-space call), "solver" (permuted-
+                        space hot-loop iteration), "dist" (sharded hot-loop
+                        iteration, interconnect term included).  "auto"
+                        resolves to "dist" on a multi-device mesh, "solver"
+                        on a degenerate 1-device mesh (no interconnect to
+                        price — matching the legacy ``build_sharded_spmv``),
+                        and "spmv" locally; ``solve()`` shims plan with
+                        "solver".
+    dtype             — default value dtype for ``Plan.bind`` (None = f32).
+    partition_method  — non-default EHYB partitioner ("bfs", "natural", ...)
+                        for the family's shared host build.
+    candidates        — restrict the autotuner's candidate set.
+    """
+
+    format: str = "auto"
+    mode: str = "model"
+    workload: str = "auto"
+    dtype: Any = None
+    partition_method: Optional[str] = None
+    candidates: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self):
+        if self.workload not in WORKLOADS:
+            raise ValueError(f"workload must be one of {WORKLOADS}, "
+                             f"got {self.workload!r}")
+        if self.mode not in ("model", "measure"):
+            raise ValueError(f"mode must be 'model' or 'measure', "
+                             f"got {self.mode!r}")
+        if self.candidates is not None and not isinstance(self.candidates,
+                                                          tuple):
+            object.__setattr__(self, "candidates", tuple(self.candidates))
+
+    def token(self) -> tuple:
+        """Hashable identity for the plan cache (dtype name-normalized)."""
+        import jax.numpy as jnp
+
+        dt = None if self.dtype is None else jnp.dtype(self.dtype).name
+        return (self.format, self.mode, self.workload, dt,
+                self.partition_method, self.candidates)

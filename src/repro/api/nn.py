@@ -1,0 +1,52 @@
+"""Operator API v2: neural-network integration (pruned sparse layers).
+
+:func:`pruned_linear` is the new construction path for
+:class:`repro.core.sparse_linear.SparseLinear` — magnitude-prune a dense
+weight matrix, ``plan`` its pattern (autotuned format, optional mesh
+sharding), ``bind`` the surviving weights, and wrap the resulting
+:class:`~repro.api.LinearOperator` as a layer.  It replaces the deprecated
+``SparseLinear.from_dense`` classmethod; because the operator's apply
+carries a ``custom_vjp``, the layer composes with ``jax.grad`` directly
+(fixed-mask value training — see
+``repro.train.train_step.make_sparse_value_train_step``) instead of
+hand-rolling a backward pass.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from .config import ExecutionConfig
+from .plan import plan as _plan
+
+
+def pruned_linear(w, density: float = 0.1, *, format: str = "auto",
+                  dtype=None, partition_method: Optional[str] = None,
+                  mesh=None, mesh_axis: str = "data", mode: str = "model",
+                  candidates=None, cls=None):
+    """Prune ``w`` (dense ``(d_out, d_in)``) and bind it as a sparse layer.
+
+    Returns a :class:`~repro.core.sparse_linear.SparseLinear` whose ``op``
+    is a :class:`~repro.api.LinearOperator` — same plan→bind→apply
+    lifecycle as every other consumer, so weight updates on the fixed
+    pruning mask ride ``layer.update_values`` (one refill, zero
+    re-partitioning/recompilation) and a ``mesh`` shards the layer over
+    ``mesh[mesh_axis]`` with halo-exchange applies.
+    """
+    import jax.numpy as jnp
+
+    from ..core.sparse_linear import SparseLinear, prune_to_csr
+
+    cls = cls or SparseLinear
+    dtype = dtype or jnp.float32
+    d_out, d_in = w.shape
+    csr = prune_to_csr(w, density)
+    execution = ExecutionConfig(
+        format=format, mode=mode, partition_method=partition_method,
+        candidates=None if candidates is None else tuple(candidates))
+    p = _plan(csr, mesh=mesh, mesh_axis=mesh_axis, execution=execution)
+    op = p.bind(csr, dtype=dtype)
+    from ..core.sparse_linear import _host_ehyb_of
+
+    return cls(d_in=d_in, d_out=d_out, op=op, density=density, csr=csr,
+               ehyb=p.host_build or _host_ehyb_of(op.obj))

@@ -1,0 +1,552 @@
+"""Operator API v2: the pattern-only :class:`Plan` and its visible cache.
+
+The paper's economic argument (§3, §4.3) is that EHYB preprocessing is paid
+once per sparsity pattern and amortized across many SpMVs.  This module
+makes that lifecycle a first-class object instead of a convention smeared
+across entry points:
+
+    p  = plan(A)                  # pattern-only: partitioning, format
+                                  # choice, halo schedule, permutations
+    op = p.bind(A)                # values -> LinearOperator (device tables)
+    y  = op @ x                   # apply (differentiable, jit/vmap-safe)
+    op = op.update_values(A2)     # same pattern, new values: refill only
+
+Everything value-independent lives on the ``Plan``; everything value-bound
+lives on the :class:`~repro.api.operator.LinearOperator` it binds.  Plans
+are memoized in ONE visible :class:`PlanCache` (``repro.api.PLAN_CACHE``),
+which replaces the module-level ``_OP_CACHE``/``_OP_PATTERN_CACHE`` globals
+that used to hide in ``core.spmv`` and the ``_HOST_EHYB`` pair in
+``autotune.registry``.
+
+Differentiability: a plan also records, lazily, the **value maps** of its
+chosen format — for every device value table the static (dst, src) index
+pair such that ``table.flat[dst] = values[src]`` reproduces the table from
+the canonical per-nnz CSR value array.  The maps are probed from the
+format's own refill hook (fill distinguishable values, read back where they
+landed), so any registered format — including ones added later — inherits
+traceable ``bind`` and the custom-VJP apply without format-specific
+autodiff code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.cache import BoundedCache
+from ..core.matrices import SparseCSR
+from .config import ExecutionConfig
+
+
+def _is_traced(x) -> bool:
+    from ..compat import is_tracer
+
+    return is_tracer(x)
+
+
+def _run_untraced(fn):
+    """Run host-side bookkeeping outside any ambient jax trace.
+
+    Plan probing and template building execute concrete jnp computations
+    (refills, device uploads, reference applies).  They may be reached
+    lazily from inside a jit/grad trace — custom-vjp bwd, traced bind —
+    where jax's ambient tracing would capture those throwaway computations
+    as tracers (and pallas kernels refuse traced closure constants).  JAX
+    trace contexts are thread-local, so a worker thread gives us a clean,
+    trace-free evaluation context.
+    """
+    import threading
+
+    if threading.current_thread().name.startswith("repro-plan"):
+        return fn()          # already on the clean worker; nesting is fine
+    global _UNTRACED_POOL
+    if _UNTRACED_POOL is None:
+        import concurrent.futures
+
+        _UNTRACED_POOL = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="repro-plan")
+    return _UNTRACED_POOL.submit(fn).result()
+
+
+_UNTRACED_POOL = None
+
+
+# ---------------------------------------------------------------------------
+# the plan cache (the one visible memo replacing the old module globals)
+# ---------------------------------------------------------------------------
+
+class PlanCache:
+    """Bounded LRU of :class:`Plan` objects keyed by
+    ``(pattern hash, ExecutionConfig token, mesh, axis)`` plus the host-side
+    EHYB build memo the whole format family shares.
+
+    The host memo is two-level, as before: an exact (value-inclusive) hit
+    returns the build as-is; a *pattern* hit — same ``indptr``/``indices``,
+    new values — refills the cached build through its recorded scatter plan
+    instead of re-partitioning.
+    """
+
+    def __init__(self, maxsize: int = 32):
+        self._plans = BoundedCache(maxsize=maxsize)
+        self._host = BoundedCache(maxsize=maxsize)          # matrix key
+        self._host_pattern = BoundedCache(maxsize=maxsize)  # pattern hash
+
+    # ---- plans -------------------------------------------------------------
+
+    def plan_for(self, pattern: SparseCSR, mesh=None, axis: str = "data",
+                 execution: Optional[ExecutionConfig] = None) -> "Plan":
+        from ..autotune.cost import pattern_hash
+
+        execution = execution or ExecutionConfig()
+        key = pattern_hash(pattern)
+        ck = (key, execution.token(), None if mesh is None else (mesh, axis))
+        p = self._plans.get(ck)
+        if p is None:
+            p = Plan._create(pattern, key, mesh, axis, execution, self)
+            self._plans[ck] = p
+        return p
+
+    # ---- shared host EHYB build (one partitioning pass per pattern) --------
+
+    def host_ehyb(self, m: SparseCSR):
+        from ..autotune.cost import matrix_key, pattern_hash
+        from ..core.ehyb import build_ehyb
+
+        pkey = pattern_hash(m)
+        key = matrix_key(m, pkey)
+        e = self._host.get(key)
+        if e is None:
+            prev = self._host_pattern.get(pkey)
+            if prev is not None and prev.fill_plan is not None:
+                e = prev.refill(m.data)
+            else:
+                e = build_ehyb(m)
+            self._host[key] = e
+            self._host_pattern[pkey] = e
+        return e
+
+    # ---- bookkeeping -------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self._host.clear()
+        self._host_pattern.clear()
+
+    def stats(self) -> dict:
+        return {"plans": len(self._plans), "host_builds": len(self._host),
+                "host_patterns": len(self._host_pattern)}
+
+
+PLAN_CACHE = PlanCache()
+
+
+def plan(pattern: SparseCSR, *, mesh=None, mesh_axis: str = "data",
+         execution: Optional[ExecutionConfig] = None,
+         cache: Optional[PlanCache] = None) -> "Plan":
+    """Plan the operator lifecycle for a sparsity pattern.
+
+    ``pattern`` is a :class:`SparseCSR`; only its ``indptr``/``indices``
+    determine the plan (its values merely seed the autotuner's measured mode
+    and the first ``bind``).  ``mesh`` plans a sharded operator over
+    ``mesh[mesh_axis]`` (halo schedule included).  Plans are memoized in
+    ``cache`` (default: the module-level :data:`PLAN_CACHE`).
+    """
+    if not isinstance(pattern, SparseCSR):
+        raise TypeError(f"plan() takes a SparseCSR pattern, "
+                        f"got {type(pattern).__name__}")
+    return (cache or PLAN_CACHE).plan_for(pattern, mesh, mesh_axis, execution)
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class Plan:
+    """Pattern-only execution plan: format choice, partitioning/permutation,
+    halo schedule — everything cacheable per sparsity pattern.  Identity is
+    the pytree-aux anchor for every operator bound from it, so two binds of
+    the same plan always share one jit cache.
+    """
+
+    key: str                        # sparsity-pattern hash
+    n: int
+    nnz: int
+    format: str                     # chosen format name
+    context: str                    # autotuner context this plan ranked for
+    execution: ExecutionConfig
+    mesh: Any = None
+    axis: str = "data"
+    tuning: Any = None              # TuneResult | None
+    pattern: SparseCSR = None       # pattern holder (values = plan seed)
+    cache: Any = None               # owning PlanCache (host-build memo)
+    # ---- lazy value-bound state -------------------------------------------
+    _shared: dict = dataclasses.field(default_factory=dict)
+    _templates: dict = dataclasses.field(default_factory=dict)
+    _maps: Optional[List] = None          # per-leaf value maps (see probe)
+    _active: Optional[List] = None        # per-leaf: leaf feeds the apply
+    _recovery: Optional[List] = None      # minimal leaf cover of all nnz
+    _treedef: Any = None
+    _diff_cache: dict = dataclasses.field(default_factory=dict)
+    _perm_cache: dict = dataclasses.field(default_factory=dict)
+    _t_order: Optional[np.ndarray] = None
+    _coo: Optional[Tuple[np.ndarray, np.ndarray]] = None
+
+    # ---- construction ------------------------------------------------------
+
+    @classmethod
+    def _create(cls, pattern: SparseCSR, key: str, mesh, axis: str,
+                execution: ExecutionConfig, cache: PlanCache) -> "Plan":
+        from .. import autotune as at
+
+        shared: dict = {}
+        if execution.partition_method is not None:
+            from ..core.ehyb import build_ehyb
+
+            shared["ehyb"] = build_ehyb(pattern,
+                                        method=execution.partition_method)
+        n_dev = mesh.shape[axis] if mesh is not None else 1
+        if mesh is not None and n_dev > 1:
+            if execution.workload not in ("auto", "dist"):
+                raise ValueError(
+                    f"workload {execution.workload!r} conflicts with a "
+                    f"{n_dev}-device mesh: sharded plans rank with the "
+                    f"interconnect-aware 'dist' cost model")
+            context = "dist"
+        elif mesh is not None:
+            # degenerate 1-device mesh: no interconnect to price — "auto"
+            # ranks like a hot loop (matching the legacy build_sharded_spmv)
+            context = (execution.workload
+                       if execution.workload in ("spmv", "solver")
+                       else "solver")
+        elif execution.workload == "dist":
+            raise ValueError("workload='dist' prices a multi-device mesh; "
+                             "pass mesh= with more than one device")
+        else:
+            context = ("spmv" if execution.workload == "auto"
+                       else execution.workload)
+        tuning = None
+        fmt = execution.format
+        if mesh is not None:
+            shardable = tuple(f for f in at.available_formats()
+                              if at.get_format(f).shard is not None)
+            if fmt != "auto" and at.get_format(fmt).shard is None:
+                raise ValueError(
+                    f"format {fmt!r} carries no partition structure to "
+                    f"shard; pick one of {sorted(shardable)}")
+        if fmt == "auto":
+            cand = execution.candidates
+            if mesh is not None:
+                cand = tuple(f for f in (cand or shardable) if f in shardable)
+            kw = {"n_dev": n_dev} if context == "dist" else {}
+            tuning = at.autotune(pattern, execution.dtype,
+                                 mode=execution.mode, candidates=cand,
+                                 shared=shared, context=context, **kw)
+            fmt = tuning.format
+        else:
+            at.get_format(fmt)          # validate the name early
+        return cls(key=key, n=pattern.n, nnz=pattern.nnz, format=fmt,
+                   context=context, execution=execution, mesh=mesh,
+                   axis=axis, tuning=tuning, pattern=pattern, cache=cache,
+                   _shared=shared)
+
+    # ---- binding -----------------------------------------------------------
+
+    def _default_dtype(self):
+        import jax.numpy as jnp
+
+        return self.execution.dtype or jnp.float32
+
+    def _as_csr(self, values) -> Tuple[SparseCSR, np.ndarray]:
+        """Normalize concrete bind input to (csr, per-nnz data)."""
+        if isinstance(values, SparseCSR):
+            from ..autotune.cost import pattern_hash
+
+            if values.n != self.n or values.nnz != self.nnz or \
+                    pattern_hash(values) != self.key:
+                raise ValueError(
+                    "bind() needs values on this plan's sparsity pattern; "
+                    "call repro.api.plan() for a new pattern")
+            return values, values.data
+        data = np.asarray(values, dtype=np.float64)
+        if data.shape != (self.nnz,):
+            raise ValueError(f"bind() takes a ({self.nnz},) per-nnz value "
+                             f"array (CSR order) or a SparseCSR; "
+                             f"got shape {data.shape}")
+        return SparseCSR(self.n, self.pattern.indptr, self.pattern.indices,
+                         data), data
+
+    def bind(self, values, *, dtype=None) -> "LinearOperator":
+        """Bind entry values to the planned structure -> LinearOperator.
+
+        ``values`` is a :class:`SparseCSR` on this plan's pattern or a
+        ``(nnz,)`` per-nnz array in CSR order.  Concrete values take the
+        host refill fast path (zero re-partitioning, zero recompilation);
+        traced values (inside ``jit``/``grad``/``vmap``) are scattered into
+        the value tables in-graph through the plan's value maps, which is
+        what makes ``grad`` through ``bind`` work.
+        """
+        from .operator import LinearOperator
+
+        import jax.numpy as jnp
+
+        dtype = dtype or self._default_dtype()
+        if _is_traced(values) or (not isinstance(values, SparseCSR)
+                                  and _is_traced(jnp.asarray(values))):
+            return self._bind_traced(values, dtype)
+        csr, data = self._as_csr(values)
+        tpl = self._template_for(dtype, csr)
+        op = LinearOperator(plan=self, obj=tpl.obj)
+        op._dtype = jnp.dtype(dtype)
+        op._csr = csr
+        op._values = data
+        return op
+
+    def _template_for(self, dtype, csr: Optional[SparseCSR] = None):
+        """The per-dtype engine operator (SpMVOperator / ShardedOperator),
+        built on first bind and value-refilled on later binds."""
+        import jax.numpy as jnp
+
+        from ..autotune.cost import matrix_key
+
+        dt_name = jnp.dtype(dtype).name
+        seed = csr if csr is not None else self.pattern
+        mk = matrix_key(seed, self.key)
+        slot = self._templates.get(dt_name)
+        if slot is None:
+            tpl = self._build_template(seed, dtype)
+            self._templates[dt_name] = [tpl, mk]
+            return tpl
+        tpl, bound = slot
+        if csr is not None and mk != bound:
+            tpl = tpl.update_values(csr, pattern=self.key)
+            self._templates[dt_name] = [tpl, mk]
+        return tpl
+
+    def _build_template(self, csr: SparseCSR, dtype):
+        return _run_untraced(lambda: self._build_template_eager(csr, dtype))
+
+    def _build_template_eager(self, csr: SparseCSR, dtype):
+        if self.mesh is not None:
+            from ..dist.operator import _build_sharded_operator
+
+            return _build_sharded_operator(csr, self.mesh, self.axis,
+                                           format=self.format, dtype=dtype,
+                                           shared=self._shared)
+        from ..core.spmv import _build_operator
+
+        op = _build_operator(csr, self.format, dtype, shared=self._shared,
+                             context=self.context)
+        if op.tuning is None:
+            op = dataclasses.replace(op, tuning=self.tuning)
+        return op
+
+    def _any_template(self):
+        if self._templates:
+            return next(iter(self._templates.values()))[0]
+        return self._template_for(self._default_dtype())
+
+    # ---- value maps (probed from the format's own refill hook) -------------
+
+    def _refill_container(self, tpl, data: np.ndarray):
+        """The format's value-refill applied to the template container with
+        ``data`` as the per-nnz values (f32 tables; structure shared)."""
+        import jax.numpy as jnp
+
+        csr = SparseCSR(self.n, self.pattern.indptr, self.pattern.indices,
+                        np.asarray(data, np.float64))
+        if self.mesh is not None:
+            from ..dist.operator import _refill_shards
+
+            e_new = tpl.host_ehyb.refill(csr.data)
+            return _refill_shards(tpl.obj, e_new, tpl.plan, jnp.float32,
+                                  self.mesh, self.axis)
+        from .. import autotune as at
+
+        spec = at.get_format(self.format)
+        if spec.refill is None:
+            raise RuntimeError(f"format {self.format!r} has no refill hook; "
+                               f"traceable bind is unavailable")
+        return spec.refill(tpl.obj, csr, jnp.float32, {})
+
+    def _raw_apply(self, tpl=None):
+        """The format's original-space ``(obj, x) -> y`` closure."""
+        tpl = tpl or self._any_template()
+        return tpl.apply
+
+    def _raw_apply_permuted(self, tpl=None):
+        tpl = tpl or self._any_template()
+        return tpl.apply_permuted
+
+    def _ensure_value_maps(self) -> None:
+        if self._maps is not None:
+            return
+        _run_untraced(self._probe_value_maps)
+
+    def _probe_value_maps(self) -> None:
+        import jax
+
+        nnz = self.nnz
+        if 2 * nnz + 1 >= 2 ** 24:
+            raise RuntimeError(
+                "value-map probing uses exact f32 integer labels; "
+                f"nnz={nnz} exceeds the 2^23 label budget")
+        tpl = self._any_template()
+        probe1 = np.arange(1, nnz + 1, dtype=np.float64)
+        probe2 = probe1 + nnz
+        o1 = self._refill_container(tpl, probe1)
+        o2 = self._refill_container(tpl, probe2)
+        l0, treedef = jax.tree_util.tree_flatten(tpl.obj)
+        l1 = jax.tree_util.tree_flatten(o1)[0]
+        l2 = jax.tree_util.tree_flatten(o2)[0]
+        maps: List = []
+        for a1, a2 in zip(l1, l2):
+            a1h, a2h = np.asarray(a1), np.asarray(a2)
+            if not np.issubdtype(a1h.dtype, np.floating):
+                maps.append(None)
+                continue
+            f1 = np.asarray(a1h, np.float64).ravel()
+            f2 = np.asarray(a2h, np.float64).ravel()
+            diff = f1 != f2
+            if not diff.any():
+                maps.append(None)
+                continue
+            dst = np.flatnonzero(diff)
+            src = np.rint(f1[dst]).astype(np.int64) - 1
+            ok = ((src >= 0).all() and (src < nnz).all()
+                  and np.array_equal(
+                      np.rint(f2[dst]).astype(np.int64) - 1 - nnz, src)
+                  and not f1[~diff].any())
+            if not ok:
+                raise RuntimeError(
+                    f"format {self.format!r}: value tables are not a "
+                    f"zero-backed per-slot selection of the nnz values; "
+                    f"in-graph bind/differentiation unavailable")
+            maps.append({"dst": dst, "src": src, "shape": a1h.shape,
+                         "size": f1.size})
+        # which value leaves actually feed the apply (e.g. EHYBDevice keeps
+        # a global er_vals copy for the dist path that the fused apply never
+        # reads — its cotangent must stay zero or value grads double-count):
+        # re-run the apply with each value leaf zeroed; an unread leaf
+        # reproduces y bitwise (identical program, identical inputs)
+        import jax.numpy as jnp
+
+        raw = self._raw_apply(tpl)
+        rng = np.random.default_rng(0)
+        x = np.asarray(rng.standard_normal(self.n), np.float32)
+        y_full = np.asarray(raw(o1, x))
+        active: List = []
+        for i, vm in enumerate(maps):
+            if vm is None:
+                active.append(False)
+                continue
+            lz = list(l1)
+            lz[i] = jnp.zeros_like(l1[i])
+            y_z = np.asarray(raw(jax.tree_util.tree_unflatten(treedef, lz),
+                                 x))
+            active.append(not np.array_equal(y_z, y_full))
+        covered = np.zeros(nnz, bool)
+        recovery: List = []
+        for i, vm in enumerate(maps):
+            if vm is None:
+                continue
+            take = ~covered[vm["src"]]
+            if take.any():
+                recovery.append((i, vm["dst"][take], vm["src"][take]))
+                covered[vm["src"][take]] = True
+        if not covered.all():
+            raise RuntimeError(
+                f"format {self.format!r}: {int((~covered).sum())} of "
+                f"{nnz} values have no stored slot; cannot recover values")
+        self._maps, self._active, self._recovery = maps, active, recovery
+        self._treedef = treedef
+
+    def _bind_traced(self, values, dtype) -> "LinearOperator":
+        import jax
+        import jax.numpy as jnp
+
+        from .operator import LinearOperator
+
+        self._ensure_value_maps()
+        tpl = self._any_template()
+        leaves, treedef = jax.tree_util.tree_flatten(tpl.obj)
+        vals = jnp.asarray(values).astype(dtype)
+        new = []
+        for leaf, vm in zip(leaves, self._maps):
+            if vm is None:
+                new.append(leaf)
+            else:
+                flat = jnp.zeros((vm["size"],), dtype)
+                flat = flat.at[vm["dst"]].set(vals[vm["src"]])
+                new.append(flat.reshape(vm["shape"]))
+        obj = jax.tree_util.tree_unflatten(treedef, new)
+        op = LinearOperator(plan=self, obj=obj)
+        op._dtype = jnp.dtype(dtype)
+        return op
+
+    def values_of(self, obj):
+        """Recover the canonical per-nnz value array from a bound container
+        (gathers through the probed value maps; trace-safe)."""
+        import jax
+        import jax.numpy as jnp
+
+        self._ensure_value_maps()
+        leaves = jax.tree_util.tree_flatten(obj)[0]
+        dt = jnp.result_type(*(leaves[i].dtype for i, _, _ in
+                               self._recovery))
+        out = jnp.zeros((self.nnz,), dt)
+        for i, dst, src in self._recovery:
+            out = out.at[src].set(leaves[i].ravel()[dst].astype(dt))
+        return out
+
+    # ---- pattern derivatives ----------------------------------------------
+
+    def coo(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-nnz (rows, cols) of the pattern in CSR order (host arrays)."""
+        if self._coo is None:
+            rows = np.repeat(np.arange(self.n, dtype=np.int64),
+                             self.pattern.row_lengths())
+            self._coo = (rows, self.pattern.indices.astype(np.int64))
+        return self._coo
+
+    def transpose_order(self) -> np.ndarray:
+        """``t_order`` with ``A.T.data == A.data[t_order]`` (CSR order)."""
+        if self._t_order is None:
+            rows, cols = self.coo()
+            self._t_order = np.lexsort((rows, cols))
+        return self._t_order
+
+    @property
+    def transpose(self) -> "Plan":
+        """The plan of the transposed pattern (lazy; shares the plan cache,
+        so a structurally symmetric pattern — the FEM norm — resolves to a
+        cache hit rather than a second partitioning pass)."""
+        rows, cols = self.coo()
+        t = self.transpose_order()
+        from ..core.matrices import from_coo
+
+        tp = from_coo(self.n, cols[t], rows[t].astype(np.int32),
+                      self.pattern.data[t], sum_duplicates=False)
+        cache = self.cache or PLAN_CACHE
+        return cache.plan_for(tp, self.mesh, self.axis, self.execution)
+
+    # ---- properties --------------------------------------------------------
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def host_build(self):
+        """The shared host EHYB build, when the chosen format has one."""
+        return self._shared.get("ehyb")
+
+    def __repr__(self):
+        where = f", mesh[{self.axis}]" if self.mesh is not None else ""
+        return (f"Plan(n={self.n}, nnz={self.nnz}, format={self.format!r}, "
+                f"context={self.context!r}{where}, key={self.key})")

@@ -101,16 +101,12 @@ def build_format(name: str, m: SparseCSR, dtype=None,
 # shared host-side EHYB build (one partitioning pass for the whole family)
 # ---------------------------------------------------------------------------
 
-from ..core.cache import BoundedCache
-
-_HOST_EHYB = BoundedCache(maxsize=16)          # matrix_key -> host EHYB
-_HOST_EHYB_PATTERN = BoundedCache(maxsize=16)  # pattern_hash -> host EHYB
-
-
 def shared_ehyb(m: SparseCSR, shared: dict) -> EHYB:
-    """Host EHYB for ``m``: per-call ``shared`` dict first, then a bounded
-    global memo — so the cost model, the device builders, and any caller
-    asking for stats all reuse one partitioning pass per matrix.
+    """Host EHYB for ``m``: per-call ``shared`` dict first, then the host
+    memo of the Operator API v2 plan cache (``repro.api.PLAN_CACHE`` —
+    which replaced the ``_HOST_EHYB``/``_HOST_EHYB_PATTERN`` globals that
+    used to live here), so the cost model, the device builders, and any
+    caller asking for stats all reuse one partitioning pass per matrix.
 
     The memo is two-level: an exact (value-inclusive) hit returns the build
     as-is, and a *pattern* hit — same ``indptr``/``indices``, new values —
@@ -118,20 +114,9 @@ def shared_ehyb(m: SparseCSR, shared: dict) -> EHYB:
     plan instead of re-partitioning (the §6 amortization: structure cost is
     paid per pattern, not per value update)."""
     if "ehyb" not in shared:
-        from .cost import matrix_key, pattern_hash
+        from ..api.plan import PLAN_CACHE
 
-        pkey = pattern_hash(m)
-        key = matrix_key(m, pkey)
-        e = _HOST_EHYB.get(key)
-        if e is None:
-            prev = _HOST_EHYB_PATTERN.get(pkey)
-            if prev is not None and prev.fill_plan is not None:
-                e = prev.refill(m.data)
-            else:
-                e = build_ehyb(m)
-            _HOST_EHYB[key] = e
-            _HOST_EHYB_PATTERN[pkey] = e
-        shared["ehyb"] = e
+        shared["ehyb"] = PLAN_CACHE.host_ehyb(m)
     return shared["ehyb"]
 
 

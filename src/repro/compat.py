@@ -10,8 +10,12 @@ forward-compatible with the 0.5+/0.6+ API renames:
   ``jax.experimental.shard_map.shard_map(..., check_rep=...)`` (old) — use
   :func:`shard_map`, which maps the replication-check flag to whichever
   keyword exists.
+* tracing internals (``jax.core.Tracer`` / ``trace_state_clean``) have been
+  migrating out of ``jax.core`` — :func:`is_tracer` and
+  :func:`trace_state_clean` resolve whichever home the running jax uses, so
+  ``repro.api``'s dispatch never binds a moving attribute at import time.
 
-Keeping every call site on these two helpers is what the sharding tests pin.
+Keeping every call site on these helpers is what the sharding tests pin.
 """
 
 from __future__ import annotations
@@ -40,3 +44,34 @@ def shard_map(f, mesh, in_specs, out_specs, check_rep: bool = False):
     from jax.experimental.shard_map import shard_map as _sm
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=check_rep)
+
+
+def _resolve(*candidates):
+    for modname, attr in candidates:
+        try:
+            mod = __import__(modname, fromlist=[attr])
+            fn = getattr(mod, attr, None)
+        except ImportError:
+            fn = None
+        if fn is not None:
+            return fn
+    return None
+
+
+_TRACER = _resolve(("jax.core", "Tracer"), ("jax._src.core", "Tracer"))
+_TRACE_STATE_CLEAN = _resolve(("jax.core", "trace_state_clean"),
+                              ("jax._src.core", "trace_state_clean"))
+
+
+def is_tracer(x) -> bool:
+    """True when ``x`` is a jax tracer (any jax version's home for Tracer)."""
+    return _TRACER is not None and isinstance(x, _TRACER)
+
+
+def trace_state_clean() -> bool:
+    """True when no jax trace is active (conservatively False if the running
+    jax no longer exposes the probe — callers fall back to their trace-safe
+    path)."""
+    if _TRACE_STATE_CLEAN is None:
+        return False
+    return _TRACE_STATE_CLEAN()

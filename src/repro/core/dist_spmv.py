@@ -33,6 +33,32 @@ from __future__ import annotations
 
 import warnings
 
+# The shim's public surface.  Only names that still exist in ``repro.dist``
+# may be re-exported here: earlier revisions also forwarded names from the
+# pre-halo implementation (``all_gather_spmv``, ``DistSpMV``) that
+# ``repro.dist`` no longer defines, so importing the shim eagerly resolved
+# — and then AttributeError-ed on — stale attributes.  The list below is
+# import-audited by tests/test_dist.py under ``-W error`` filtering.
+__all__ = ["build_dist_spmv"]
+
+# Names forwarded (lazily, with a DeprecationWarning) to ``repro.dist`` for
+# source compatibility.  Everything else raises AttributeError immediately.
+_FORWARDED = ("ShardedOperator", "EHYBShards", "HaloPlan",
+              "build_halo_plan", "build_sharded_spmv",
+              "build_allgather_spmv")
+
+
+def __getattr__(name: str):
+    if name in _FORWARDED:
+        from .. import dist as _dist
+
+        warnings.warn(
+            f"core.dist_spmv.{name} is deprecated; import it from "
+            f"repro.dist (or use repro.api.plan(A, mesh=...))",
+            DeprecationWarning, stacklevel=2)
+        return getattr(_dist, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 def build_dist_spmv(dev, mesh, axis: str = "data", space: str = "original"):
     """Deprecated: returns the matvec of a :class:`repro.dist.ShardedOperator`.
@@ -43,14 +69,14 @@ def build_dist_spmv(dev, mesh, axis: str = "data", space: str = "original"):
     are padded), and non-float inputs are promoted exactly as ``spmv()``
     promotes them.
     """
-    from ..dist import build_sharded_spmv
+    from ..dist.operator import _build_sharded_operator
 
     warnings.warn(
         "core.dist_spmv.build_dist_spmv is deprecated; use "
-        "repro.dist.build_sharded_spmv (full operator API: permuted space, "
-        "value refills, distributed solve)", DeprecationWarning,
-        stacklevel=2)
+        "repro.api.plan(A, mesh=mesh).bind(A) (full operator API: "
+        "permuted space, value refills, distributed solve)",
+        DeprecationWarning, stacklevel=2)
     if space not in ("original", "permuted"):
         raise ValueError(f"unknown space {space!r}")
-    op = build_sharded_spmv(dev, mesh, axis)
+    op = _build_sharded_operator(dev, mesh, axis)
     return op.matvec_permuted if space == "permuted" else op.matvec

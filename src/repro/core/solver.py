@@ -164,8 +164,16 @@ def cg(matvec: Callable, b: jnp.ndarray, precond: Callable = lambda r: r,
        tol: float = 1e-6, max_iters: int = 500, *,
        fused_update: bool = False,
        precond_inv: Optional[jnp.ndarray] = None,
-       axis_name: Optional[str] = None) -> SolveResult:
+       axis_name: Optional[str] = None,
+       x0: Optional[jnp.ndarray] = None) -> SolveResult:
     """Preconditioned conjugate gradients (device-resident loop).
+
+    ``x0`` warm starts the iteration (None = zeros).  It must live in the
+    same space as ``b`` — callers running permuted-space loops permute it
+    once alongside ``b`` (``solve(..., x0=)`` does this for you); the
+    convergence test stays relative to ``‖b‖``, so a warm start close to
+    the solution converges in fewer iterations, never to a different
+    tolerance.
 
     ‖r‖² rides in the loop state (no extra residual pass in ``cond``).
     ``fused_update=True`` routes the vector updates through the fused Pallas
@@ -202,8 +210,8 @@ def cg(matvec: Callable, b: jnp.ndarray, precond: Callable = lambda r: r,
         d = jnp.vdot(u.astype(acc), v.astype(acc))
         return jax.lax.psum(d, axis_name) if axis_name else d
 
-    x0 = jnp.zeros_like(b)
-    r0 = b - matvec(x0)
+    x0 = jnp.zeros_like(b) if x0 is None else jnp.asarray(x0, dt)
+    r0 = (b - matvec(x0)).astype(dt)
     z0 = (precond(r0) if not fused_update else inv_vec * r0).astype(dt)
     p0 = z0
     rz0 = _dot(r0, z0)
@@ -247,8 +255,11 @@ def cg(matvec: Callable, b: jnp.ndarray, precond: Callable = lambda r: r,
 def bicgstab(matvec: Callable, b: jnp.ndarray,
              precond: Callable = lambda r: r, tol: float = 1e-6,
              max_iters: int = 500, *,
-             axis_name: Optional[str] = None) -> SolveResult:
+             axis_name: Optional[str] = None,
+             x0: Optional[jnp.ndarray] = None) -> SolveResult:
     """Preconditioned BiCGStab for non-symmetric systems.
+
+    ``x0`` warm starts the iteration exactly as documented on :func:`cg`.
 
     As in :func:`cg`, ‖r‖² is carried in the loop state — computed where the
     residual update already has ``r`` in registers — so the loop condition
@@ -261,8 +272,8 @@ def bicgstab(matvec: Callable, b: jnp.ndarray,
         d = jnp.vdot(u.astype(acc), v.astype(acc))
         return jax.lax.psum(d, axis_name) if axis_name else d
 
-    x0 = jnp.zeros_like(b)
-    r0 = b - matvec(x0)
+    x0 = jnp.zeros_like(b) if x0 is None else jnp.asarray(x0, dt)
+    r0 = (b - matvec(x0)).astype(dt)
     rhat = r0
     rr0 = jnp.real(_dot(r0, r0))
     # floor must be representable in acc (1e-60 underflows fp32
@@ -359,115 +370,52 @@ def _cached_precond(a: SparseCSR, kind: str, key: str,
     return out
 
 
-def _solve_sharded(op, b: jnp.ndarray, *, method: str, precond: str,
-                   tol: float, max_iters: int) -> SolveResult:
-    """Distributed solve on a :class:`repro.dist.ShardedOperator`.
-
-    The whole Krylov ``while_loop`` executes inside one shard_map over the
-    operator's mesh axis: ``b`` and the preconditioner diagonal are permuted
-    once and sharded, per-iteration communication is the operator's halo
-    exchange plus one psum per inner product, and the iterate is
-    un-permuted once at the end — the permuted-space contract of the module
-    DESIGN docstring, executed natively on shards."""
-    from .. import autotune as at
-
-    inv = None
-    if precond != "none":
-        if op.csr is None:
-            raise ValueError(
-                "a preconditioned distributed solve needs the operator's "
-                "host matrix; build it via build_sharded_spmv(SparseCSR, "
-                "mesh) or pass precond='none'")
-        key = at.matrix_key(op.csr)
-        _, inv = _cached_precond(op.csr, precond, key, perm=op.perm_host,
-                                 n_pad=op.n_pad)
-    b = jnp.asarray(b)
-    acc = jnp.promote_types(b.dtype, jnp.float32)
-    inv_arr = (jnp.ones((op.n_pad,), acc) if inv is None
-               else jnp.asarray(inv, acc))
-    if b.ndim > 1:
-        inv_arr = inv_arr[:, None]
-    b_new = op.to_permuted(b)
-    run = op.solver_runner(method)
-    r = run(op.obj, b_new, inv_arr, tol, max_iters=max_iters)
-    return SolveResult(x=op.from_permuted(r.x), iters=r.iters,
-                       residual=r.residual, converged=r.converged)
-
-
 def solve(a, b: jnp.ndarray, *, method: str = "cg",
           precond: str = "jacobi", format: str = "auto",
           tol: float = 1e-6, max_iters: int = 500, space: str = "auto",
-          fused_update: str | bool = "auto") -> SolveResult:
-    """Solve ``A x = b`` through the unified SpMV entry point.
+          fused_update: str | bool = "auto", x0=None) -> SolveResult:
+    """Deprecated: use ``repro.api`` —
+    ``plan(A, execution=ExecutionConfig(workload="solver")).bind(A).solve(b)``.
 
-    The matrix goes through ``build_spmv`` with ``context="solver"`` (the
-    autotuner ranks on permuted-space, fused-ER traffic), and the chosen
-    operator's matvec drives the Krylov loop.  When the operator supports the
-    permuted space (EHYB family), the whole ``lax.while_loop`` runs there:
-    ``b`` and the preconditioner diagonal are permuted once, the iterate is
-    un-permuted once at the end — see the module DESIGN docstring.
+    Solve ``A x = b`` through the unified operator surface.  The matrix is
+    planned with the solver-context cost model (permuted-space, fused-ER
+    traffic ranking) and the bound operator's matvec drives the Krylov
+    loop; when the format supports the permuted space (EHYB family) the
+    whole ``lax.while_loop`` runs there — see the module DESIGN docstring.
 
-    ``a`` may also be a :class:`repro.dist.ShardedOperator`, in which case
-    the solve runs distributed over the operator's mesh axis (``format``/
-    ``space``/``fused_update`` don't apply: the sharded permuted space is
-    the only execution space, and the fused CG-step kernel is
-    single-device).
+    ``a`` may also be a :class:`repro.dist.ShardedOperator` or a sharded
+    :class:`repro.api.LinearOperator`, in which case the solve runs
+    distributed over the operator's mesh axis.
 
-    space: "auto" (permuted whenever the format supports it — the default
-           for EHYB-family operators), "original", or "permuted" (error if
-           the chosen format has no permuted space).
-    fused_update: route CG's vector updates through the fused Pallas step
-           kernel; "auto" enables it off-CPU only (the interpreted kernel on
-           CPU is a validation path, not a fast path).
+    ``x0`` warm starts the iteration; like ``b`` it is permuted once into
+    the execution space, never per iteration.
     """
-    from .. import autotune as at
-    from .spmv import cached_spmv_operator
+    import warnings
 
-    if method not in SOLVERS:
-        raise ValueError(f"unknown method {method!r}; have {sorted(SOLVERS)}")
+    warnings.warn(
+        "core.solver.solve is deprecated; use repro.api: "
+        "plan(A, execution=ExecutionConfig(workload='solver'))"
+        ".bind(A).solve(b, ...)", DeprecationWarning, stacklevel=2)
+    from ..api import ExecutionConfig
+    from ..api.operator import LinearOperator, solve_operator
+    from ..api.plan import plan as _plan
+
     if space not in ("auto", "original", "permuted"):
         raise ValueError(f"unknown space {space!r}")
     if not isinstance(a, SparseCSR):
         from ..dist.operator import ShardedOperator
 
-        if isinstance(a, ShardedOperator):
-            return _solve_sharded(a, b, method=method, precond=precond,
-                                  tol=tol, max_iters=max_iters)
-        raise TypeError(f"solve takes a SparseCSR or a ShardedOperator, "
+        if isinstance(a, (ShardedOperator, LinearOperator)):
+            kw = {} if isinstance(a, ShardedOperator) else \
+                {"space": space, "fused_update": fused_update}
+            return solve_operator(a, b, method=method, precond=precond,
+                                  x0=x0, tol=tol, max_iters=max_iters, **kw)
+        raise TypeError(f"solve takes a SparseCSR, a ShardedOperator or a "
+                        f"repro.api.LinearOperator, "
                         f"got {type(a).__name__}")
-    op = cached_spmv_operator(a, format=format, dtype=b.dtype,
-                              context="solver")
-    use_perm = (op.supports_permuted if space == "auto"
-                else space == "permuted")
-    if use_perm and not op.supports_permuted:
-        raise ValueError(
-            f"format {op.format!r} has no permuted execution space")
-    if fused_update is True and method != "cg":
-        raise ValueError(
-            f"fused_update is a CG-step kernel; method {method!r} has no "
-            f"fused vector-update path")
-    if fused_update == "auto":
-        # TPU only: the fused kernel's cross-grid-step dots accumulation
-        # relies on the sequential TPU grid (racy on parallel GPU grids)
-        fused_update = jax.default_backend() == "tpu" and method == "cg"
-    key = at.matrix_key(a)
-    if use_perm:
-        pre, inv = _cached_precond(a, precond, key,
-                                   perm=np.asarray(op.obj.perm),
-                                   n_pad=op.n_pad)
-        b_run = op.to_permuted(b)
-        mv = op.matvec_permuted
-    else:
-        pre, inv = _cached_precond(a, precond, key)
-        b_run, mv = b, op.matvec
-    kw = {}
-    if method == "cg":
-        kw = {"fused_update": bool(fused_update),
-              "precond_inv": None if inv is None
-              else jnp.asarray(inv, jnp.promote_types(b.dtype,
-                                                      jnp.float32))}
-    r = SOLVERS[method](mv, b_run, pre, tol=tol, max_iters=max_iters, **kw)
-    if use_perm:
-        r = SolveResult(x=op.from_permuted(r.x), iters=r.iters,
-                        residual=r.residual, converged=r.converged)
-    return r
+    p = _plan(a, execution=ExecutionConfig(format=format,
+                                           workload="solver"))
+    op = p.bind(a, dtype=jnp.asarray(b).dtype)
+    return solve_operator(op, b, method=method, precond=precond, x0=x0,
+                          tol=tol, max_iters=max_iters, space=space,
+                          fused_update=fused_update)

@@ -26,7 +26,7 @@ import numpy as np
 
 from .ehyb import EHYB
 from .matrices import SparseCSR, from_coo
-from .spmv import SpMVOperator, build_spmv
+from .spmv import SpMVOperator
 
 
 def _host_ehyb_of(obj) -> Optional[EHYB]:
@@ -38,6 +38,16 @@ def _host_ehyb_of(obj) -> Optional[EHYB]:
             if handle is not None:
                 return handle.base
     return e
+
+
+def _raw_applies(op):
+    """The ``(obj, x) -> y`` closures of either operator generation: the
+    v2 :class:`repro.api.LinearOperator` exposes them as ``raw_apply*``;
+    the engine-level :class:`SpMVOperator`/``ShardedOperator`` as
+    ``apply``/``apply_permuted`` attributes."""
+    if hasattr(op, "raw_apply"):
+        return op.raw_apply, op.raw_apply_permuted
+    return op.apply, op.apply_permuted
 
 
 def prune_to_csr(w: np.ndarray, density: float) -> SparseCSR:
@@ -66,32 +76,23 @@ class SparseLinear:
                    partition_method: Optional[str] = None,
                    mesh=None, mesh_axis: str = "data",
                    **build_kw) -> "SparseLinear":
-        """Prune ``w`` and bind it to the chosen SpMV format.
+        """Deprecated: use :func:`repro.api.pruned_linear` (Operator API
+        v2 — same pruning, the operator is planned and bound through
+        ``repro.api.plan``).  Kept as a thin shim; behavior is unchanged:
+        ``mesh`` still shards the layer over ``mesh[mesh_axis]`` with the
+        interconnect-aware ranking, and ``update_values`` keeps riding the
+        pattern-only refill path."""
+        import warnings
 
-        ``mesh`` shards the layer over ``mesh[mesh_axis]`` (large pruned
-        heads): the operator becomes a :class:`repro.dist.ShardedOperator`
-        — autotuned with the interconnect-aware ``context="dist"`` ranking
-        when ``format="auto"`` — and every apply pays only the halo
-        exchange for cross-shard traffic.  ``update_values`` keeps working
-        unchanged (the halo plan is pattern-only)."""
-        d_out, d_in = w.shape
-        csr = prune_to_csr(w, density)
-        shared: dict = {}
-        if partition_method is not None:      # non-default partitioner for
-            from .ehyb import build_ehyb      # the EHYB-family formats
+        warnings.warn(
+            "SparseLinear.from_dense is deprecated; use "
+            "repro.api.pruned_linear(w, density, ...) — see README "
+            "'API v2'", DeprecationWarning, stacklevel=2)
+        from ..api.nn import pruned_linear
 
-            shared["ehyb"] = build_ehyb(csr, method=partition_method)
-        if mesh is not None:
-            from ..dist.operator import build_sharded_spmv
-
-            op = build_sharded_spmv(csr, mesh, mesh_axis, format=format,
-                                    dtype=dtype, shared=shared, **build_kw)
-        else:
-            op = build_spmv(csr, format=format, dtype=dtype, shared=shared,
-                            **build_kw)
-        return cls(d_in=d_in, d_out=d_out, op=op, density=density,
-                   csr=csr, ehyb=shared.get("ehyb")
-                   or getattr(op, "host_ehyb", None))
+        return pruned_linear(w, density, format=format, dtype=dtype,
+                             partition_method=partition_method, mesh=mesh,
+                             mesh_axis=mesh_axis, cls=cls, **build_kw)
 
     def update_values(self, w: np.ndarray) -> "SparseLinear":
         """Same pruning mask, new weights: refill the operator's value
@@ -163,15 +164,16 @@ class SparseLinear:
         after ``update_values`` with no re-trace (closure-captured arrays
         are baked into the compiled program as constants)."""
         lead = x.shape[:-1]
+        apply, apply_permuted = _raw_applies(self.op)
         if space == "permuted":
             if not self.supports_permuted:
                 raise ValueError(
                     f"format {self.op.format!r} has no permuted space")
             xt = x.reshape(-1, self.op.n_pad).T
-            yt = self.op.apply_permuted(obj, xt)
+            yt = apply_permuted(obj, xt)
             return yt.T.reshape(*lead, self.op.n_pad)
         xt = self._embed(x.reshape(-1, self.d_in).T)     # (n, T)
-        yt = self.op.apply(obj, xt)                      # (n, T)
+        yt = apply(obj, xt)                              # (n, T)
         return yt[: self.d_out].T.reshape(*lead, self.d_out)
 
     def bytes_vs_dense(self, val_bytes: int = 4) -> dict:
@@ -194,5 +196,7 @@ class EHYBLinear(SparseLinear):
     @classmethod
     def from_dense(cls, w: np.ndarray, density: float = 0.1,
                    method: str = "bfs", dtype=jnp.float32) -> "EHYBLinear":
-        return super().from_dense(w, density, format="ehyb", dtype=dtype,
-                                  partition_method=method)
+        from ..api.nn import pruned_linear
+
+        return pruned_linear(w, density, format="ehyb", dtype=dtype,
+                             partition_method=method, cls=cls)

@@ -529,7 +529,7 @@ class SpMVOperator:
         dtype = self.dtype or jnp.float32
         spec = at.get_format(self.format)
         if spec.refill is None:
-            return build_spmv(a_new, self.format, dtype)
+            return _build_operator(a_new, self.format, dtype)
         obj = spec.refill(self.obj, a_new, dtype, {})
         return dataclasses.replace(self, obj=obj)
 
@@ -575,10 +575,12 @@ class SpMVOperator:
         return self._permuted_call
 
 
-def build_spmv(a, format: str = "auto", dtype=None, *, mode: str = "model",
-               candidates=None, shared: dict = None,
-               context: str = "spmv", n_dev: int = 1) -> SpMVOperator:
-    """Build the unified SpMV operator for CSR matrix ``a``.
+def _build_operator(a, format: str = "auto", dtype=None, *,
+                    mode: str = "model", candidates=None, shared: dict = None,
+                    context: str = "spmv", n_dev: int = 1) -> SpMVOperator:
+    """Build the SpMV engine operator for CSR matrix ``a`` (the internal,
+    non-deprecated form of the old ``build_spmv``; ``repro.api.Plan`` binds
+    through this).
 
     format="auto"    — pick via the autotuner (cost model; ``mode="measure"``
                        additionally times the top candidates on-device);
@@ -589,8 +591,7 @@ def build_spmv(a, format: str = "auto", dtype=None, *, mode: str = "model",
                        "solver" (iterative hot loop in the permuted space,
                        permutation hoisted and amortized), or "dist" (a
                        hot-loop iteration sharded over ``n_dev`` devices,
-                       interconnect term included — what
-                       ``repro.dist.build_sharded_spmv`` ranks on).
+                       interconnect term included).
     """
     from .. import autotune as at
 
@@ -610,65 +611,71 @@ def build_spmv(a, format: str = "auto", dtype=None, *, mode: str = "model",
                         else at.pattern_hash(a))
 
 
-from .cache import BoundedCache
+def build_spmv(a, format: str = "auto", dtype=None, *, mode: str = "model",
+               candidates=None, shared: dict = None,
+               context: str = "spmv", n_dev: int = 1) -> SpMVOperator:
+    """Deprecated: use ``repro.api.plan(a).bind(a)`` (Operator API v2).
 
-_OP_CACHE = BoundedCache(maxsize=16)          # exact (values-inclusive) hits
-_OP_PATTERN_CACHE = BoundedCache(maxsize=16)  # pattern -> latest operator
+    Kept as a thin shim over the same engine; behavior is unchanged.
+    """
+    import warnings
+
+    warnings.warn(
+        "core.spmv.build_spmv is deprecated; use repro.api.plan(a"
+        ", execution=ExecutionConfig(...)).bind(a) — see README 'API v2'",
+        DeprecationWarning, stacklevel=2)
+    return _build_operator(a, format, dtype, mode=mode,
+                           candidates=candidates, shared=shared,
+                           context=context, n_dev=n_dev)
 
 
 def cached_spmv_operator(a, format: str = "auto", dtype=None,
                          context: str = "spmv") -> SpMVOperator:
-    """``build_spmv`` memoized at two levels (LRU, bounded — transient
-    workloads that update values per step evict old operators instead of
-    leaking device arrays):
+    """The engine operator for ``a``, memoized through the Operator API v2
+    :class:`repro.api.PlanCache` (which replaced the module-level
+    ``_OP_CACHE``/``_OP_PATTERN_CACHE`` globals that used to live here):
 
     1. value-inclusive matrix hash — an exact hit returns the *same*
        operator object, keeping its matvec jit-cache-stable (repeated
-       ``spmv()``/``solve()`` calls neither rebuild device arrays nor
-       retrigger XLA compilation);
-    2. sparsity-pattern hash — same pattern, new values refreshes the cached
-       operator through ``update_values``: one value scatter + upload, zero
-       partitioning/reordering/packing and zero recompilation.  This is what
-       makes per-step value updates (transient FEM, ``SparseLinear``
+       calls neither rebuild device arrays nor retrigger XLA compilation);
+    2. sparsity-pattern hash — same pattern, new values refreshes the plan's
+       bound operator through ``update_values``: one value scatter + upload,
+       zero partitioning/reordering/packing and zero recompilation.  This is
+       what makes per-step value updates (transient FEM, ``SparseLinear``
        training, served pruned heads) amortize preprocessing across the
        pattern's lifetime instead of paying it per update.
     """
-    from .. import autotune as at
+    from ..api import ExecutionConfig
+    from ..api.plan import plan as _plan
 
     dtype = dtype or jnp.float32
-    dt_name = jnp.dtype(dtype).name
-    ph = at.pattern_hash(a)           # hashed once, reused by every key
-    key = (at.matrix_key(a, ph), format, dt_name, context)
-    op = _OP_CACHE.get(key)
-    if op is None:
-        pkey = (ph, format, dt_name, context)
-        prev = _OP_PATTERN_CACHE.get(pkey)
-        if prev is not None:
-            op = prev.update_values(a, pattern=ph)
-        else:
-            op = build_spmv(a, format, dtype, context=context)
-        _OP_CACHE[key] = op
-        _OP_PATTERN_CACHE[pkey] = op
-    return op
+    p = _plan(a, execution=ExecutionConfig(format=format, workload=context))
+    return p._template_for(dtype, a)
 
 
 def spmv(a, x: jnp.ndarray, format: str = "auto", dtype=None) -> jnp.ndarray:
-    """Unified SpMV: ``y = A @ x`` for a SparseCSR ``A`` in the best format.
+    """Deprecated: use ``repro.api`` (``plan(A).bind(A) @ x``).
 
-    The built operator is cached under the sparsity-pattern hash, so repeated
-    calls on the same pattern pay one build — and calls with the same pattern
-    but *new values* pay one value refill (see ``cached_spmv_operator``).
-    Hot loops should hold the operator from :func:`build_spmv` directly (no
-    per-call hashing).  ``x`` may be (n,) or (n, R); dtype defaults to
-    ``x.dtype`` for floating/complex ``x`` and float32 otherwise (an integer
-    rhs must not build integer value tables).
+    Unified SpMV: ``y = A @ x`` for a SparseCSR ``A`` in the best format.
+    The built operator is cached per sparsity pattern in the visible
+    ``repro.api.PLAN_CACHE``, so repeated calls on the same pattern pay one
+    build — and calls with the same pattern but *new values* pay one value
+    refill.  ``x`` may be (n,) or (n, R); dtype defaults to ``x.dtype`` for
+    floating/complex ``x`` and float32 otherwise (an integer rhs must not
+    build integer value tables).
     """
+    import warnings
+
+    warnings.warn(
+        "core.spmv.spmv is deprecated; use repro.api: plan(A).bind(A) @ x",
+        DeprecationWarning, stacklevel=2)
     if isinstance(a, SpMVOperator):
         return a(x)
     if not isinstance(a, SparseCSR):
+        from ..api.operator import LinearOperator
         from ..dist.operator import ShardedOperator
 
-        if isinstance(a, ShardedOperator):
+        if isinstance(a, (ShardedOperator, LinearOperator)):
             return a(x)         # promotes non-float x itself
     x = jnp.asarray(x)
     if dtype is None:

@@ -307,8 +307,8 @@ class ShardedOperator:
         solver = SOLVERS[method]
 
         @partial(jax.jit, static_argnames=("max_iters",))
-        def run(obj, b_new, inv, tol, max_iters):
-            def local(obj_loc, b_loc, inv_loc, tol_loc):
+        def run(obj, b_new, x0_new, inv, tol, max_iters):
+            def local(obj_loc, b_loc, x0_loc, inv_loc, tol_loc):
                 def mv(v):
                     v2 = v[:, None] if v.ndim == 1 else v
                     y = _local_apply(axis, obj_loc, v2)
@@ -320,14 +320,15 @@ class ShardedOperator:
                     ).astype(r.dtype)
 
                 return solver(mv, b_loc, pre, tol=tol_loc,
-                              max_iters=max_iters, axis_name=axis)
+                              max_iters=max_iters, axis_name=axis,
+                              x0=x0_loc)
 
             mapped = shard_map(
                 local, mesh,
-                in_specs=(specs, P(axis), P(axis), P()),
+                in_specs=(specs, P(axis), P(axis), P(axis), P()),
                 out_specs=SolveResult(x=P(axis), iters=P(),
                                       residual=P(), converged=P()))
-            return mapped(obj, b_new, inv, tol)
+            return mapped(obj, b_new, x0_new, inv, tol)
 
         self._solver_cache[method] = run
         return run
@@ -434,10 +435,12 @@ def shard_operator(op: SpMVOperator, mesh, axis: str = "data",
         pattern_key=op.pattern_key, tuning=op.tuning)
 
 
-def build_sharded_spmv(a, mesh, axis: str = "data", format: str = "auto",
-                       dtype=None, *, mode: str = "model",
-                       shared: Optional[dict] = None) -> ShardedOperator:
-    """Build a :class:`ShardedOperator` over ``mesh[axis]``.
+def _build_sharded_operator(a, mesh, axis: str = "data",
+                            format: str = "auto", dtype=None, *,
+                            mode: str = "model",
+                            shared: Optional[dict] = None) -> ShardedOperator:
+    """Build a :class:`ShardedOperator` over ``mesh[axis]`` (the internal,
+    non-deprecated engine behind ``repro.api.plan(A, mesh=...)``).
 
     ``a`` may be a host :class:`SparseCSR` (full lifecycle: autotuned
     format with the ``context="dist"`` interconnect-aware ranking,
@@ -448,7 +451,7 @@ def build_sharded_spmv(a, mesh, axis: str = "data", format: str = "auto",
     Any ``n_parts``/``n_dev`` combination works: partitions that don't
     divide the mesh axis are padded with empty (zero-width) tiles.
     ``shared`` carries a caller-supplied host EHYB build (non-default
-    partitioner), as in :func:`repro.core.spmv.build_spmv`.
+    partitioner).
     """
     from .. import autotune as at
 
@@ -456,7 +459,7 @@ def build_sharded_spmv(a, mesh, axis: str = "data", format: str = "auto",
     if isinstance(a, ShardedOperator):
         return a
     if isinstance(a, SparseCSR):
-        from ..core.spmv import build_spmv
+        from ..core.spmv import _build_operator
 
         # a degenerate 1-device mesh has no interconnect to price
         ctx = {"context": "dist", "n_dev": n_dev} if n_dev > 1 \
@@ -464,15 +467,15 @@ def build_sharded_spmv(a, mesh, axis: str = "data", format: str = "auto",
         shardable = [f for f in at.available_formats()
                      if at.get_format(f).shard is not None]
         if format == "auto":
-            op = build_spmv(a, format="auto", dtype=dtype, mode=mode,
-                            candidates=shardable, shared=shared, **ctx)
+            op = _build_operator(a, format="auto", dtype=dtype, mode=mode,
+                                 candidates=shardable, shared=shared, **ctx)
         else:
             if at.get_format(format).shard is None:
                 raise ValueError(
                     f"format {format!r} carries no partition structure to "
                     f"shard; pick one of {sorted(shardable)}")
-            op = build_spmv(a, format=format, dtype=dtype, shared=shared,
-                            **ctx)
+            op = _build_operator(a, format=format, dtype=dtype,
+                                 shared=shared, **ctx)
         return at.get_format(op.format).shard(op, mesh, axis, csr=a)
     if isinstance(a, SpMVOperator):
         return shard_operator(a, mesh, axis)
@@ -495,6 +498,21 @@ def build_sharded_spmv(a, mesh, axis: str = "data", format: str = "auto",
                                n=e.n, nnz=e.nnz, plan=plan, host_ehyb=e,
                                dtype=dtype)
     if isinstance(a, EHYBBuckets):
-        return build_sharded_spmv(a.base, mesh, axis, format, dtype)
-    raise TypeError(f"build_sharded_spmv cannot shard a "
-                    f"{type(a).__name__}")
+        return _build_sharded_operator(a.base, mesh, axis, format, dtype)
+    raise TypeError(f"cannot shard a {type(a).__name__}")
+
+
+def build_sharded_spmv(a, mesh, axis: str = "data", format: str = "auto",
+                       dtype=None, *, mode: str = "model",
+                       shared: Optional[dict] = None) -> ShardedOperator:
+    """Deprecated: use ``repro.api.plan(a, mesh=mesh).bind(a)`` — the same
+    halo-plan engine behind the unified :class:`repro.api.LinearOperator`
+    contract.  Kept as a thin shim; behavior is unchanged."""
+    import warnings
+
+    warnings.warn(
+        "repro.dist.build_sharded_spmv is deprecated; use "
+        "repro.api.plan(A, mesh=mesh).bind(A) — see README 'API v2'",
+        DeprecationWarning, stacklevel=2)
+    return _build_sharded_operator(a, mesh, axis, format, dtype, mode=mode,
+                                   shared=shared)

@@ -12,9 +12,9 @@ device logits of the single new position.
 
 Sparse decode head (``sparse_head_density``): the LM head is the largest
 single decode-step matmul (d_model × vocab every token).  When set, the head
-weights are magnitude-pruned and served through the unified SpMV entry point
-(``repro.core.spmv`` → format autotuner), so decode inherits whichever
-format wins for the pruned head's sparsity pattern — the serving-side
+weights are magnitude-pruned and served through the Operator API v2 surface
+(``repro.api.pruned_linear`` → plan → bind → apply), so decode inherits
+whichever format wins for the pruned head's sparsity pattern — the serving-side
 integration of the paper's explicit-caching SpMM.  EHYB-family winners
 execute the fused megakernel pipeline inside ``SparseLinear.__call__``
 (permute in, ONE kernel launch with the ER rows folded into their owning
@@ -101,11 +101,10 @@ class ServeEngine:
         sharded tables reach the compiled steps as traced arguments too."""
         if density is None:
             return None
-        from ..core.sparse_linear import SparseLinear
+        from ..api import pruned_linear
 
-        return SparseLinear.from_dense(self._head_weights(), density=density,
-                                       format=fmt, mesh=mesh,
-                                       mesh_axis=axis)
+        return pruned_linear(self._head_weights(), density=density,
+                             format=fmt, mesh=mesh, mesh_axis=axis)
 
     def _head_obj(self):
         """The sparse head's device container, passed to the compiled steps

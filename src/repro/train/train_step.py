@@ -52,6 +52,35 @@ def make_loss_fn(cfg, *, skip_causal=False, shard_act=None):
     return loss_fn
 
 
+def make_sparse_value_train_step(plan, loss_fn, opt_cfg: OptimizerConfig):
+    """Train step over the nnz VALUES of a fixed sparsity pattern.
+
+    The Operator API v2 integration for fixed-mask sparse training
+    (pruned FFN projections / LM heads): the trainable parameter is the
+    ``(nnz,)`` per-nnz value array, ``loss_fn(op) -> scalar`` consumes the
+    :class:`repro.api.LinearOperator` bound from it, and gradients flow
+    through ``plan.bind`` (in-graph value scatter) and the operator's
+    ``custom_vjp`` apply — no hand-rolled backward pass.  The pattern,
+    partitioning, and compiled applies are fixed for the whole run: every
+    step costs one traced bind, never a re-plan.
+
+    Returns ``step(values, opt_state) -> (values, opt_state, metrics)``,
+    jit-compiled.  Initialize with ``init_opt_state({"values": v0})``.
+    """
+    import jax.numpy as jnp  # noqa: F401  (kept for parity with callers)
+
+    def step(values, opt_state: OptState):
+        def loss_of(v):
+            return loss_fn(plan.bind(v))
+
+        loss, g = jax.value_and_grad(loss_of)(values)
+        new_p, new_opt, om = adamw_update({"values": values},
+                                          {"values": g}, opt_state, opt_cfg)
+        return new_p["values"], new_opt, {"loss": loss, **om}
+
+    return jax.jit(step)
+
+
 def make_train_step(cfg, opt_cfg: OptimizerConfig, *, microbatches: int = 1,
                     skip_causal: bool = False, shard_act=None):
     loss_fn = make_loss_fn(cfg, skip_causal=skip_causal, shard_act=shard_act)

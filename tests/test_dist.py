@@ -144,6 +144,32 @@ def test_sharded_dtype_promotion(rng):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_dist_spmv_shim_exports_are_audited():
+    """ISSUE 5 satellite: the shim must only (re-)export names that still
+    resolve — importing it and touching ``__all__`` under error-level
+    warning filters must not raise, forwarded names must exist in
+    ``repro.dist`` (with a DeprecationWarning on access), and stale names
+    must fail fast with AttributeError."""
+    import importlib
+    import warnings
+
+    import repro.dist as dist
+
+    with warnings.catch_warnings():
+        # strict import: the shim itself must not warn at import time
+        # (-W error::FutureWarning-safe: error on every warning category)
+        warnings.simplefilter("error")
+        mod = importlib.reload(importlib.import_module("repro.core.dist_spmv"))
+        for name in mod.__all__:
+            assert getattr(mod, name) is not None
+    for name in mod._FORWARDED:
+        assert hasattr(dist, name), f"stale forwarded export {name!r}"
+        with pytest.warns(DeprecationWarning, match=name):
+            assert getattr(mod, name) is getattr(dist, name)
+    with pytest.raises(AttributeError):
+        mod.all_gather_spmv          # the pre-halo API: pruned, stays gone
+
+
 def test_dist_spmv_shim_deprecated(rng):
     """core.dist_spmv survives as a warning shim over repro.dist."""
     from repro.core.dist_spmv import build_dist_spmv
@@ -236,8 +262,12 @@ def test_serve_sparse_head_mesh():
         eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
         outs.append(eng.run_until_done()[0].generated)
     assert outs[0] == outs[1]
-    from repro.dist import ShardedOperator
-    assert isinstance(eng.sparse_head.op, ShardedOperator)
+    # API v2: the head is a LinearOperator whose plan is sharded — the
+    # ShardedOperator is the engine behind it, not a parallel API
+    op = eng.sparse_head.op
+    assert op.plan.is_sharded and op.plan.mesh is mesh
+    from repro.dist import EHYBShards
+    assert isinstance(op.obj, EHYBShards)
 
 
 # ---------------------------------------------------------------------------

@@ -44,3 +44,60 @@ def test_matvec_format_agnostic(rng):
     assert int(r1.iters) == int(r2.iters)
     np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r2.x),
                                rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# warm starts (ISSUE 5 satellite: solve() used to ignore any initial guess)
+# ---------------------------------------------------------------------------
+
+def test_warm_started_cg_converges_in_fewer_iterations(rng):
+    """Regression: ``solve`` accepts ``x0=`` and permutes it once into the
+    execution space alongside ``b`` — a warm start from (near) the solution
+    must beat the cold start's iteration count, at the same tolerance."""
+    from repro import api
+
+    m = poisson3d(8)
+    b = jnp.asarray(rng.standard_normal(m.n), dtype=jnp.float32)
+    op = api.plan(m, execution=api.ExecutionConfig(
+        format="ehyb", workload="solver")).bind(m)
+    cold = op.solve(b, tol=1e-6, max_iters=800)
+    assert bool(cold.converged) and int(cold.iters) > 3
+    warm = op.solve(b, x0=cold.x, tol=1e-6, max_iters=800)
+    assert bool(warm.converged)
+    assert int(warm.iters) < int(cold.iters)
+    # a partially converged iterate also warm starts (the transient-FEM
+    # shape: consecutive systems share a nearby solution)
+    part = op.solve(b, tol=1e-2, max_iters=800)
+    warm2 = op.solve(b, x0=part.x, tol=1e-6, max_iters=800)
+    assert int(warm2.iters) < int(cold.iters)
+    np.testing.assert_allclose(np.asarray(warm2.x), np.asarray(cold.x),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_warm_start_through_deprecated_solve_and_bicgstab(rng):
+    import warnings
+
+    from repro.core import solve
+
+    m = poisson3d(6)
+    b = jnp.asarray(rng.standard_normal(m.n), dtype=jnp.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        cold = solve(m, b, method="bicgstab", tol=1e-6, max_iters=800)
+        warm = solve(m, b, method="bicgstab", x0=cold.x, tol=1e-6,
+                     max_iters=800)
+    assert bool(cold.converged) and bool(warm.converged)
+    assert int(warm.iters) < int(cold.iters)
+
+
+def test_warm_start_distributed_solve(rng):
+    from repro import api
+    from repro.compat import make_mesh
+
+    m = poisson3d(6)
+    b = jnp.asarray(rng.standard_normal(m.n), dtype=jnp.float32)
+    op = api.plan(m, mesh=make_mesh((1,), ("data",))).bind(m)
+    cold = op.solve(b, tol=1e-6, max_iters=600)
+    warm = op.solve(b, x0=cold.x, tol=1e-6, max_iters=600)
+    assert bool(warm.converged)
+    assert int(warm.iters) < int(cold.iters)
