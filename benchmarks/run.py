@@ -1,6 +1,8 @@
 """Benchmark entry point — one module per paper table/figure.
 
   Fig 2/3 + 4/5  -> spmv_throughput   (per-matrix GFLOP/s per format)
+  framework      -> spmm_throughput   (batched k-wide apply vs k SpMVs —
+                                       the megakernel amortization gate)
   Table 1/2      -> speedup_table     (EHYB vs baselines, fp32/fp64)
   Fig 6          -> preprocessing_time (partition/reorder × single-SpMV)
   §3.4           -> bytes_model       (modeled HBM bytes; int16 ablation)
@@ -17,7 +19,11 @@ Prints ``name,us_per_call,derived`` CSV lines, and writes the
 machine-readable perf trajectory:
 
   BENCH_spmv.json    — per (matrix × format): measured ns/iter, GFLOP/s,
-                       rel-err, modeled HBM bytes (+ per-nnz); plus one
+                       rel-err, modeled HBM bytes (+ per-nnz); plus
+                       ``kind: "spmm"`` records per (matrix × format × k):
+                       batched-apply vs k-single-SpMV timings with
+                       ``speedup_vs_k_spmv`` and the k-axis modeled bytes;
+                       plus one
                        ``kind: "preprocess"`` record per matrix with
                        rebuild-vs-refill preprocessing seconds (the
                        value-refresh fast path's amortization multiplier);
@@ -52,10 +58,20 @@ import pathlib
 import sys
 
 DEFAULT_MODS = ["bytes_model", "preprocessing_time", "speedup_table",
-                "solver_bench", "dist_halo", "autotune_table",
-                "api_overhead", "lm_step_bench"]
+                "spmm_throughput", "solver_bench", "dist_halo",
+                "autotune_table", "api_overhead", "lm_step_bench"]
 QUICK_MODS = ["solver_bench", "preprocessing_time", "dist_halo",
-              "api_overhead"]
+              "api_overhead", "spmm_throughput"]
+
+
+def collect_spmm_records(results: dict, quick: bool = False) -> list:
+    """kind:"spmm" batched-vs-k-SpMV records for the BENCH trajectory."""
+    rows = results.get("spmm_throughput")
+    if rows is None:
+        from . import spmm_throughput
+
+        rows = spmm_throughput.main(quick=quick)
+    return rows
 
 
 def collect_dist_records(results: dict, quick: bool = False) -> list:
@@ -150,6 +166,7 @@ def main(argv=None) -> None:
     rows = (results.get("speedup_table") or {}).get("rows_f32") \
         or results.get("spmv_throughput", {}).get("f32")
     spmv_records = collect_spmv_records(args.quick, rows=rows)
+    spmv_records += collect_spmm_records(results, args.quick)
     spmv_records += collect_preprocess_records(results, args.quick)
     spmv_records += collect_dist_records(results, args.quick)
     spmv_records += results.get("api_overhead") or []

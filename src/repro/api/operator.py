@@ -104,10 +104,14 @@ def _make_diff_apply(plan: Plan):
                 contrib)
             xbar = xbar2[:, 0] if x.ndim == 1 else xbar2
         else:
+            # bind the transpose at the promoted accumulation dtype — like
+            # the sharded branch above.  Binding at vals.dtype would
+            # silently round an fp64 cotangent down to the stored values'
+            # (typically fp32) precision before the Aᵀḡ apply.
             tplan = plan.transpose
             t_vals = vals[plan.transpose_order()]
-            t_obj = tplan._bind_traced(t_vals, vals.dtype).obj
-            xbar = tplan._raw_apply()(t_obj, g.astype(vals.dtype))
+            t_obj = tplan._bind_traced(t_vals.astype(acc), acc).obj
+            xbar = tplan._raw_apply()(t_obj, g.astype(acc))
         return obj_bar, xbar.astype(x.dtype)
 
     apply.defvjp(fwd, bwd)
@@ -311,9 +315,14 @@ class LinearOperator:
 
     # ---- lifecycle ---------------------------------------------------------
 
-    def update_values(self, values, **_ignored) -> "LinearOperator":
+    def update_values(self, values) -> "LinearOperator":
         """Same pattern, new values: one value refill, zero re-partitioning,
-        zero recompilation (delegates to ``plan.bind``)."""
+        zero recompilation (delegates to ``plan.bind``).
+
+        Takes exactly one argument on purpose: the refill reuses the bound
+        plan's dtype/format/mesh, so a keyword like ``dtype=`` here would be
+        dead — and silently swallowing unknown keywords (as an older
+        ``**_ignored`` signature did) turned typos into no-ops."""
         return self.plan.bind(values, dtype=self._dtype)
 
     def transpose(self) -> "LinearOperator":

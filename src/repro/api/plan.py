@@ -246,7 +246,8 @@ class Plan:
             kw = {"n_dev": n_dev} if context == "dist" else {}
             tuning = at.autotune(pattern, execution.dtype,
                                  mode=execution.mode, candidates=cand,
-                                 shared=shared, context=context, **kw)
+                                 shared=shared, context=context,
+                                 k=execution.k, **kw)
             fmt = tuning.format
         else:
             at.get_format(fmt)          # validate the name early

@@ -115,31 +115,40 @@ def matrix_key(m: SparseCSR, pattern: Optional[str] = None) -> str:
 CONTEXTS = ("spmv", "solver", "dist")
 
 
-def allgather_penalty_bytes(n: int, n_dev: int, val_bytes: int) -> int:
+def allgather_penalty_bytes(n: int, n_dev: int, val_bytes: int,
+                            k: int = 1) -> int:
     """Mesh-total interconnect bytes/iteration for a format with no
     partition structure: every device gathers the remote x
     (n − n/n_dev words) and reduces its remote y contribution back —
     the strategy the replaced ``dist_spmv`` implementation used for
     everything.  Mesh-total (× n_dev) so the unit matches the EHYB
     family's ``halo_words``, which sums the scheduled payload over all
-    ordered device pairs."""
-    return n_dev * 2 * (n - n // max(n_dev, 1)) * val_bytes
+    ordered device pairs.  Every exchanged word is an x/y-sided quantity,
+    so a k-wide rhs multiplies the whole penalty."""
+    return n_dev * 2 * (n - n // max(n_dev, 1)) * val_bytes * k
 
 
 def estimate_bytes(m: SparseCSR, fmt: str, val_bytes: int = 4,
                    shared: Optional[dict] = None,
                    stats: Optional[MatrixStats] = None,
-                   context: str = "spmv") -> int:
+                   context: str = "spmv", k: int = 1) -> int:
     """Modeled bytes of one SpMV of ``m`` in format ``fmt``.
 
     ``context="solver"`` models one hot-loop iteration in the operator's
     native (permuted) space; ``"spmv"`` models a one-shot original-space
     call; ``context="dist"`` adds the interconnect term for execution
-    sharded over ``shared["n_dev"]`` devices — see the module docstring."""
+    sharded over ``shared["n_dev"]`` devices — see the module docstring.
+
+    ``k`` is the rhs batch width of a multi-rhs (SpMM) apply: A-sided
+    streams are read once regardless of k, x/y-sided streams scale ×k.
+    Because each format splits its traffic differently between the two
+    sides, the ranking is k-dependent — the SpMM crossover."""
     from .registry import get_format
 
     if context not in CONTEXTS:
         raise ValueError(f"unknown context {context!r}; have {CONTEXTS}")
+    if not isinstance(k, int) or k < 1:
+        raise ValueError(f"k must be a positive int, got {k!r}")
     shared = {} if shared is None else shared
     stats = stats or matrix_stats(m)
     spec = get_format(fmt)
@@ -151,27 +160,28 @@ def estimate_bytes(m: SparseCSR, fmt: str, val_bytes: int = 4,
         # no partition structure to shard: the HBM story is the solver
         # iteration's, the interconnect story is the full gather+reduce
         n_dev = int(shared["n_dev"])
-        return int(spec.model(m, stats, val_bytes, shared, context="solver")
-                   + allgather_penalty_bytes(stats.n, n_dev, val_bytes))
-    return int(spec.model(m, stats, val_bytes, shared, context=context))
+        return int(spec.model(m, stats, val_bytes, shared, context="solver",
+                              k=k)
+                   + allgather_penalty_bytes(stats.n, n_dev, val_bytes, k))
+    return int(spec.model(m, stats, val_bytes, shared, context=context, k=k))
 
 
 def model_table(m: SparseCSR, val_bytes: int = 4,
                 candidates=None, shared: Optional[dict] = None,
-                context: str = "spmv") -> Dict[str, int]:
+                context: str = "spmv", k: int = 1) -> Dict[str, int]:
     """Per-format modeled bytes; one shared EHYB build serves the family."""
     from .registry import available_formats
 
     shared = {} if shared is None else shared
     stats = matrix_stats(m)
-    return {f: estimate_bytes(m, f, val_bytes, shared, stats, context)
+    return {f: estimate_bytes(m, f, val_bytes, shared, stats, context, k)
             for f in (candidates or available_formats())}
 
 
 def rank_formats(m: SparseCSR, val_bytes: int = 4, candidates=None,
                  shared: Optional[dict] = None,
-                 context: str = "spmv") -> list[tuple[str, int]]:
+                 context: str = "spmv", k: int = 1) -> list[tuple[str, int]]:
     """Formats sorted by modeled bytes, cheapest first (ties: by name, so
     rankings are deterministic)."""
-    table = model_table(m, val_bytes, candidates, shared, context)
+    table = model_table(m, val_bytes, candidates, shared, context, k)
     return sorted(table.items(), key=lambda kv: (kv[1], kv[0]))

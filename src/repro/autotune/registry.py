@@ -59,7 +59,7 @@ from .cost import MatrixStats, _x_stream_bytes
 class FormatSpec:
     name: str
     build: Callable[..., tuple]        # (m, dtype, shared) -> (obj, apply)
-    model: Callable[..., int]          # (m, stats, vb, shared, context) -> B
+    model: Callable[..., int]          # (m, stats, vb, shared, context, k)->B
     kernel: str = "xla"                # "xla" | "pallas-interpret"
     description: str = ""
     permuted: Optional[Callable] = None   # (obj, x_new) -> y_new, or None
@@ -310,29 +310,34 @@ def _refill_ehyb_packed(obj, m, dtype, shared):
 # ``context``: "spmv" = one-shot original-space call; "solver" = one
 # permuted-space hot-loop iteration (EHYB family drops the perm round trip —
 # non-EHYB formats have no reordered space, so their models ignore it).
+# ``k``: rhs batch width (SpMM) — A-sided streams are read once, every
+# x/y-sided term scales ×k, so formats whose traffic is x/y-light (dense,
+# EHYB's exact cache) gain ground on the gather-heavy ones as k grows.
 # ---------------------------------------------------------------------------
 
 def _model_csr(m, stats: MatrixStats, vb: int, shared,
-               context: str = "spmv") -> int:
+               context: str = "spmv", k: int = 1) -> int:
     # COO stream realization of CSR semantics: rows + cols int32 per nnz
     idx = 8 * stats.nnz
-    return idx + vb * stats.nnz + _x_stream_bytes(stats, vb) + vb * stats.n
+    return (idx + vb * stats.nnz
+            + k * (_x_stream_bytes(stats, vb) + vb * stats.n))
 
 
 def _model_ell(m, stats: MatrixStats, vb: int, shared,
-               context: str = "spmv") -> int:
+               context: str = "spmv", k: int = 1) -> int:
     stored = stats.n * stats.max_row
-    return stored * (vb + 4) + _x_stream_bytes(stats, vb) + vb * stats.n
+    return (stored * (vb + 4)
+            + k * (_x_stream_bytes(stats, vb) + vb * stats.n))
 
 
 def _model_hyb(m, stats: MatrixStats, vb: int, shared,
-               context: str = "spmv") -> int:
+               context: str = "spmv", k: int = 1) -> int:
     lens = m.row_lengths()
-    k = max(int(np.quantile(lens, 0.9)) if stats.n else 1, 1)
-    spill = int(np.maximum(lens - k, 0).sum())
-    ell = stats.n * k * (vb + 4)
+    kq = max(int(np.quantile(lens, 0.9)) if stats.n else 1, 1)
+    spill = int(np.maximum(lens - kq, 0).sum())
+    ell = stats.n * kq * (vb + 4)
     coo = spill * (vb + 8)
-    return ell + coo + _x_stream_bytes(stats, vb) + vb * stats.n
+    return ell + coo + k * (_x_stream_bytes(stats, vb) + vb * stats.n)
 
 
 def _ehyb_space(context: str) -> str:
@@ -352,33 +357,37 @@ def _ehyb_dist_kw(m, shared, context: str) -> dict:
     return {"halo_words": ehyb_halo_words(e, n_dev), "n_dev": n_dev}
 
 
-def _model_ehyb(m, stats, vb, shared, context: str = "spmv") -> int:
+def _model_ehyb(m, stats, vb, shared, context: str = "spmv",
+                k: int = 1) -> int:
     return shared_ehyb(m, shared).bytes_moved(
         vb, layout="tile", space=_ehyb_space(context),
-        fused_er=True, **_ehyb_dist_kw(m, shared, context))["total"]
+        fused_er=True, k=k, **_ehyb_dist_kw(m, shared, context))["total"]
 
 
-def _model_ehyb_bucketed(m, stats, vb, shared, context: str = "spmv") -> int:
+def _model_ehyb_bucketed(m, stats, vb, shared, context: str = "spmv",
+                         k: int = 1) -> int:
     if context == "dist":
         # the shared shard hook executes the BASE uniform-tile apply for
         # the whole family — ranking dist candidates by single-device
         # layout savings the sharded program never realizes would make
         # the "winner" noise (ties then break to plain "ehyb" by name)
-        return _model_ehyb(m, stats, vb, shared, context)
+        return _model_ehyb(m, stats, vb, shared, context, k)
     return shared_buckets(m, shared).bytes_moved(
-        vb, space=_ehyb_space(context), fused_er=True)["total"]
+        vb, space=_ehyb_space(context), fused_er=True, k=k)["total"]
 
 
-def _model_ehyb_packed(m, stats, vb, shared, context: str = "spmv") -> int:
+def _model_ehyb_packed(m, stats, vb, shared, context: str = "spmv",
+                       k: int = 1) -> int:
     if context == "dist":
-        return _model_ehyb(m, stats, vb, shared, context)  # see bucketed
+        return _model_ehyb(m, stats, vb, shared, context, k)  # see bucketed
     return shared_ehyb(m, shared).bytes_moved(
         vb, layout="packed", space=_ehyb_space(context),
-        fused_er=True)["total"]
+        fused_er=True, k=k)["total"]
 
 
-def _model_dense(m, stats, vb, shared, context: str = "spmv") -> int:
-    return stats.n * stats.n * vb + 2 * stats.n * vb
+def _model_dense(m, stats, vb, shared, context: str = "spmv",
+                 k: int = 1) -> int:
+    return stats.n * stats.n * vb + k * 2 * stats.n * vb
 
 
 register_format(FormatSpec(

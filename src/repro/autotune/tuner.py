@@ -64,7 +64,8 @@ def _time_spmv(apply, obj, x, repeats: int = 3, warmup: int = 1) -> float:
 def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
              candidates=None, top_k: int = 3, use_cache: bool = True,
              shared: Optional[dict] = None,
-             context: str = "spmv", n_dev: int = 1) -> TuneResult:
+             context: str = "spmv", n_dev: int = 1,
+             k: int = 1) -> TuneResult:
     """Select the SpMV format for ``m``; see module docstring for the passes.
 
     ``shared`` (optional dict) carries the host EHYB build across the cost
@@ -84,6 +85,11 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
     model-driven — a single-device timing contains zero interconnect
     traffic, the very term this context prices.  Decisions are cached
     per context (and per ``n_dev`` for "dist").
+
+    ``k`` is the rhs batch width the apply will run at (SpMM).  The byte
+    model scales its x/y-sided terms ×k while A-sided streams stay fixed,
+    so the ranking can flip as k grows — the SpMM crossover; the measured
+    pass times an (n, k) rhs to match.  Decisions are cached per k.
     """
     import jax
     import jax.numpy as jnp
@@ -100,11 +106,13 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
         raise ValueError("context='dist' prices a multi-device mesh; "
                          "pass n_dev >= 2 (a 1-device build is "
                          "context='solver')")
+    if not isinstance(k, int) or k < 1:
+        raise ValueError(f"k must be a positive int, got {k!r}")
     dtype = dtype or jnp.float32
     cand = tuple(candidates or available_formats())
     key = pattern_hash(m)
     cache_key = (key, jnp.dtype(dtype).name, mode, cand, context,
-                 n_dev if context == "dist" else None)
+                 n_dev if context == "dist" else None, k)
     if use_cache and cache_key in _CACHE:
         return _CACHE[cache_key]
 
@@ -112,7 +120,7 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
     if context == "dist":
         shared["n_dev"] = n_dev
     val_bytes = jnp.dtype(dtype).itemsize
-    ranked = rank_formats(m, val_bytes, cand, shared, context)
+    ranked = rank_formats(m, val_bytes, cand, shared, context, k)
     modeled = dict(ranked)
     # the winner must be executable efficiently on the current backend:
     # interpreter-backed kernels are ranked (their modeled bytes are the TPU
@@ -131,7 +139,8 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
         timed = eligible[:top_k]
         if timed:
             rng0 = np.random.default_rng(0)
-            x = jnp.asarray(rng0.standard_normal(m.n), dtype=dtype)
+            shape = (m.n,) if k == 1 else (m.n, k)
+            x = jnp.asarray(rng0.standard_normal(shape), dtype=dtype)
             measured = {}
             for f in timed:
                 spec = get_format(f)
@@ -141,7 +150,8 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
                     # permuted-space apply on a permuted-space vector — the
                     # original-space apply's per-call perm round trip would
                     # pollute exactly the timings this context ranks on
-                    xp = jnp.asarray(rng0.standard_normal(obj.n_pad),
+                    pshape = (obj.n_pad,) if k == 1 else (obj.n_pad, k)
+                    xp = jnp.asarray(rng0.standard_normal(pshape),
                                      dtype=dtype)
                     measured[f] = _time_spmv(spec.permuted, obj, xp)
                 else:

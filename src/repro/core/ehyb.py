@@ -86,7 +86,7 @@ class EHYB:
     def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2,
                     layout: str = "sliced", space: str = "permuted",
                     fused_er: bool = True, halo_words: Optional[int] = None,
-                    n_dev: int = 1) -> dict:
+                    n_dev: int = 1, k: int = 1) -> dict:
         """Modeled HBM traffic of one SpMV (the paper's §3.4 accounting).
 
         ELL streams vals + uint16 local cols once; every partition streams its
@@ -126,6 +126,15 @@ class EHYB:
                compaction that a single combined total still ranks formats
                correctly — the per-channel breakdown stays in the dict for
                callers that weight them separately.
+
+        k: rhs batch width of a multi-rhs (SpMM) apply.  The A streams
+               (ELL vals/cols, ER vals/cols/rows) are read ONCE regardless
+               of k — that is the whole point of the explicit cache — while
+               every x/y-sided term (x_cache, the ER x-gather, y, the
+               permutation round trip, the halo payload) scales ×k.
+               Arithmetic intensity therefore grows with k and the SpMM
+               crossover between formats moves; ``autotune(..., k=)`` ranks
+               with this axis.
         """
         if layout == "tile" or self.slice_widths is None:
             ell_n = self.n_parts * self.vec_size * self.ell_width
@@ -135,7 +144,7 @@ class EHYB:
             per_part = self.slice_widths.sum(axis=1) * 8
             ell_n = int(per_part.max()) * self.n_parts
         ell = ell_n * (val_bytes + col_bytes)
-        x_cache = self.n_pad * val_bytes
+        x_cache = self.n_pad * val_bytes * k
         er_n = self.er_rows * self.er_width
         has_er = bool(self.er_vals.any())
         if fused_er:
@@ -148,18 +157,18 @@ class EHYB:
             # its (V, R) output block).
             if has_er:
                 g = group_er_by_partition(self)
-                er_x = min(er_n, self.n_pad) * val_bytes
+                er_x = min(er_n, self.n_pad) * val_bytes * k
                 er = (g["er_p_vals"].size * (val_bytes + 4) + er_x
                       + g["er_p_rows"].size * 4)
             else:
                 er = 0      # ER stage skipped statically
         else:
-            er = (er_n * (val_bytes + 4) + er_n * val_bytes
+            er = (er_n * (val_bytes + 4) + er_n * val_bytes * k
                   + self.er_rows * 4
-                  + (2 * self.er_rows * val_bytes if has_er else 0))
-        y = self.n_pad * val_bytes
-        perm = 2 * self.n_pad * val_bytes if space == "original" else 0
-        ic = (halo_words or 0) * val_bytes if n_dev > 1 else 0
+                  + (2 * self.er_rows * val_bytes * k if has_er else 0))
+        y = self.n_pad * val_bytes * k
+        perm = 2 * self.n_pad * val_bytes * k if space == "original" else 0
+        ic = (halo_words or 0) * val_bytes * k if n_dev > 1 else 0
         return {"ell": ell, "x_cache": x_cache, "er": er, "y": y,
                 "perm": perm, "interconnect": ic,
                 "total": ell + x_cache + er + y + perm + ic}
@@ -476,10 +485,10 @@ class PackedEHYB:
     def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2,
                     space: str = "permuted", fused_er: bool = True,
                     halo_words: Optional[int] = None,
-                    n_dev: int = 1) -> dict:
+                    n_dev: int = 1, k: int = 1) -> dict:
         b = self.base.bytes_moved(val_bytes, col_bytes, layout="sliced",
                                   space=space, fused_er=fused_er,
-                                  halo_words=halo_words, n_dev=n_dev)
+                                  halo_words=halo_words, n_dev=n_dev, k=k)
         ell = self.base.n_parts * self.packed_len * (val_bytes + col_bytes)
         return {**b, "ell": ell,
                 "total": ell + b["x_cache"] + b["er"] + b["y"] + b["perm"]
@@ -552,11 +561,11 @@ class EHYBBuckets:                   # jit-static aux data of the device form
     def bytes_moved(self, val_bytes: int = 4, col_bytes: int = 2,
                     space: str = "permuted", fused_er: bool = True,
                     halo_words: Optional[int] = None,
-                    n_dev: int = 1) -> dict:
+                    n_dev: int = 1, k: int = 1) -> dict:
         ell = sum(v.size * (val_bytes + col_bytes) for v in self.vals)
         base = self.base.bytes_moved(val_bytes, col_bytes, space=space,
                                      fused_er=fused_er,
-                                     halo_words=halo_words, n_dev=n_dev)
+                                     halo_words=halo_words, n_dev=n_dev, k=k)
         return {**base, "ell": ell,
                 "total": ell + base["x_cache"] + base["er"] + base["y"]
                 + base["perm"] + base["interconnect"]}

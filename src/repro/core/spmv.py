@@ -577,7 +577,8 @@ class SpMVOperator:
 
 def _build_operator(a, format: str = "auto", dtype=None, *,
                     mode: str = "model", candidates=None, shared: dict = None,
-                    context: str = "spmv", n_dev: int = 1) -> SpMVOperator:
+                    context: str = "spmv", n_dev: int = 1,
+                    k: int = 1) -> SpMVOperator:
     """Build the SpMV engine operator for CSR matrix ``a`` (the internal,
     non-deprecated form of the old ``build_spmv``; ``repro.api.Plan`` binds
     through this).
@@ -592,6 +593,8 @@ def _build_operator(a, format: str = "auto", dtype=None, *,
                        permutation hoisted and amortized), or "dist" (a
                        hot-loop iteration sharded over ``n_dev`` devices,
                        interconnect term included).
+    k                — expected rhs batch width (SpMM); steers the ranking
+                       only, applies accept any width at run time.
     """
     from .. import autotune as at
 
@@ -600,7 +603,8 @@ def _build_operator(a, format: str = "auto", dtype=None, *,
     tuning = None
     if format == "auto":
         tuning = at.autotune(a, dtype, mode=mode, candidates=candidates,
-                             shared=shared, context=context, n_dev=n_dev)
+                             shared=shared, context=context, n_dev=n_dev,
+                             k=k)
         format = tuning.format
     spec = at.get_format(format)
     obj, apply = spec.build(a, dtype, shared)

@@ -1,0 +1,263 @@
+"""Pallas TPU SpMM megakernels for EHYB — the multi-rhs (n_pad, K) apply.
+
+SpMV streams A's value/column tiles once per x-vector; SpMM streams them
+once for ALL K right-hand sides, so arithmetic intensity scales with K
+while the HBM bytes for A stay fixed — the paper's §1 explicit-caching
+argument gets strictly stronger with batch width.  The kernels here are the
+k-looped siblings of the ``ehyb_spmv`` megakernels, with the same grid
+(one step = one partition) and the same BlockSpecs: the explicitly-cached
+x-tile is DMA'd HBM→VMEM ONCE per partition and then reused across every
+rhs column.
+
+The K loop follows the blockwise chunk-and-accumulate idiom: sweep the rhs
+in static column chunks, keep a (V, Kc) f32 accumulator per chunk, and
+concatenate the chunk outputs for the single block store.  Chunking bounds
+the gathered ``(V, Wc, Kc)`` intermediate by the same VMEM budget the SpMV
+kernels use, and because K is static the sweep unrolls at trace time — on
+TPU the A tiles are already VMEM-resident, so the re-sweep costs vector
+ops, not HBM traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ehyb_spmv import _er_stage, _w_chunk
+
+# rhs columns per accumulator chunk.  Small enough that the (V, Wc, Kc)
+# gather chunk keeps Wc large (the W sweep stays shallow); large enough to
+# amortize each column-index widen/gather across many rhs.
+_RHS_CHUNK = 16
+
+
+def _k_chunk(k: int) -> int:
+    return max(1, min(k, _RHS_CHUNK))
+
+
+def _ell_sweep(x, vals, cols, *, w_chunk: int):
+    """Sliced-ELL contribution for one rhs chunk: (V, Kc) f32 partials."""
+    v, w = vals.shape
+    acc = jnp.zeros((v, x.shape[1]), dtype=jnp.float32)
+    for w0 in range(0, w, w_chunk):           # static unroll over W chunks
+        w1 = min(w0 + w_chunk, w)
+        c = cols[:, w0:w1].astype(jnp.int32)  # widen in-register
+        g = jnp.take(x, c, axis=0)            # (V, Wc, Kc) gather from VMEM
+        acc = acc + jnp.sum(vals[:, w0:w1, None].astype(jnp.float32)
+                            * g.astype(jnp.float32), axis=1)
+    return acc
+
+
+def _ehyb_ell_spmm_kernel(x_ref, vals_ref, cols_ref, y_ref, *, k_chunk: int,
+                          w_chunk: int):
+    """One grid step = one partition; the (V, K) x-tile is the explicit
+    cache, loaded once and swept chunk-by-chunk over the rhs columns."""
+    x = x_ref[0]                              # (V, K) — loaded once
+    vals = vals_ref[0]                        # (V, W)
+    cols = cols_ref[0]                        # (V, W) uint16/int32 local
+    k = x.shape[1]
+    outs = []
+    for c0 in range(0, k, k_chunk):           # static unroll over rhs chunks
+        outs.append(_ell_sweep(x[:, c0:min(c0 + k_chunk, k)], vals, cols,
+                               w_chunk=w_chunk))
+    y_ref[0] = jnp.concatenate(outs, axis=1).astype(y_ref.dtype)
+
+
+def ehyb_ell_spmm_pallas(x_parts: jnp.ndarray, ell_vals: jnp.ndarray,
+                         ell_cols: jnp.ndarray, *, interpret: bool = True
+                         ) -> jnp.ndarray:
+    """Cached (sliced-ELL) part, multi-rhs: y_parts (P, V, K).
+
+    Same BlockSpecs as the SpMV version — R just widens to K; the per-step
+    A-tile DMA is unchanged while each byte feeds K dot products."""
+    p, v, k = x_parts.shape
+    _, _, w = ell_vals.shape
+    kc = _k_chunk(k)
+    w_chunk = _w_chunk(v, w, kc, x_parts.dtype.itemsize)
+    kernel = functools.partial(_ehyb_ell_spmm_kernel, k_chunk=kc,
+                               w_chunk=w_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, v, k), lambda i: (i, 0, 0)),   # x-tile → VMEM
+            pl.BlockSpec((1, v, w), lambda i: (i, 0, 0)),   # values
+            pl.BlockSpec((1, v, w), lambda i: (i, 0, 0)),   # local cols
+        ],
+        out_specs=pl.BlockSpec((1, v, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, v, k), x_parts.dtype),
+        interpret=interpret,
+    )(x_parts, ell_vals, ell_cols)
+
+
+def _ehyb_fused_spmm_kernel(x_ref, xfull_ref, vals_ref, cols_ref, erv_ref,
+                            erc_ref, err_ref, y_ref, *, k_chunk: int,
+                            w_chunk: int, e_chunk: int):
+    """SpMM megakernel: sliced-ELL tile AND the partition's own ER rows into
+    the same (V, K) output block, one launch for all K rhs."""
+    x = x_ref[0]                              # (V, K) — loaded once
+    vals = vals_ref[0]
+    cols = cols_ref[0]
+    xf = xfull_ref[...]                       # (n_pad, K) resident full x
+    v = vals.shape[0]
+    k = x.shape[1]
+    outs = []
+    for c0 in range(0, k, k_chunk):           # static unroll over rhs chunks
+        c1 = min(c0 + k_chunk, k)
+        acc = _ell_sweep(x[:, c0:c1], vals, cols, w_chunk=w_chunk)
+        outs.append(_er_stage(acc, xf[:, c0:c1], erv_ref[0], erc_ref[0],
+                              err_ref[0], v, e_chunk))
+    y_ref[0] = jnp.concatenate(outs, axis=1).astype(y_ref.dtype)
+
+
+def ehyb_fused_spmm_pallas(x_new: jnp.ndarray, ell_vals: jnp.ndarray,
+                           ell_cols: jnp.ndarray, er_p_vals: jnp.ndarray,
+                           er_p_cols: jnp.ndarray, er_p_rows: jnp.ndarray,
+                           *, interpret: bool = True) -> jnp.ndarray:
+    """Fused EHYB SpMM in the permuted space: y_new (n_pad, K)."""
+    n_pad, k = x_new.shape
+    p, v, w = ell_vals.shape
+    _, e, we = er_p_vals.shape
+    x_parts = x_new.reshape(p, v, k)
+    kc = _k_chunk(k)
+    w_chunk = _w_chunk(v, w, kc, x_new.dtype.itemsize)
+    e_chunk = _w_chunk(e, we, kc, x_new.dtype.itemsize)
+    kernel = functools.partial(_ehyb_fused_spmm_kernel, k_chunk=kc,
+                               w_chunk=w_chunk, e_chunk=e_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, v, k), lambda i: (i, 0, 0)),   # x-tile → VMEM
+            pl.BlockSpec((n_pad, k), lambda i: (0, 0)),     # full x (stays)
+            pl.BlockSpec((1, v, w), lambda i: (i, 0, 0)),   # values
+            pl.BlockSpec((1, v, w), lambda i: (i, 0, 0)),   # local cols
+            pl.BlockSpec((1, e, we), lambda i: (i, 0, 0)),  # ER values
+            pl.BlockSpec((1, e, we), lambda i: (i, 0, 0)),  # ER global cols
+            pl.BlockSpec((1, e), lambda i: (i, 0)),         # ER local rows
+        ],
+        out_specs=pl.BlockSpec((1, v, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, v, k), x_new.dtype),
+        interpret=interpret,
+    )(x_parts, x_new, ell_vals, ell_cols, er_p_vals, er_p_cols,
+      er_p_rows).reshape(n_pad, k)
+
+
+def _packed_sweep(x, vals_ref, cols_ref, starts_ref, rows_ref, *, w: int,
+                  v: int):
+    """Packed-staircase contribution for one rhs chunk: (V, Kc) f32.
+
+    The packed value/col segments are loaded per column exactly as in the
+    SpMV kernel v2; each static-length load now feeds Kc rhs columns."""
+    acc = jnp.zeros((v, x.shape[1]), dtype=jnp.float32)
+    row_iota = jax.lax.iota(jnp.int32, v)
+    for col in range(w):                      # static unroll over columns
+        off = starts_ref[0, col]
+        rk = rows_ref[0, col]
+        vals = pl.load(vals_ref, (pl.dslice(0, 1), pl.dslice(off, v)))[0]
+        cols = pl.load(cols_ref, (pl.dslice(0, 1), pl.dslice(off, v)))[0]
+        mask = row_iota < rk
+        g = jnp.take(x, cols.astype(jnp.int32), axis=0)        # (V, Kc)
+        acc = acc + jnp.where(mask, vals.astype(jnp.float32),
+                              0.0)[:, None] * g.astype(jnp.float32)
+    return acc
+
+
+def _ehyb_packed_spmm_kernel(x_ref, vals_ref, cols_ref, starts_ref, rows_ref,
+                             y_ref, *, w: int, v: int, k_chunk: int):
+    x = x_ref[0]                                   # (V, K) cached tile
+    k = x.shape[1]
+    outs = []
+    for c0 in range(0, k, k_chunk):
+        outs.append(_packed_sweep(x[:, c0:min(c0 + k_chunk, k)], vals_ref,
+                                  cols_ref, starts_ref, rows_ref, w=w, v=v))
+    y_ref[0] = jnp.concatenate(outs, axis=1).astype(y_ref.dtype)
+
+
+def ehyb_ell_packed_spmm_pallas(x_parts: jnp.ndarray,
+                                packed_vals: jnp.ndarray,
+                                packed_cols: jnp.ndarray,
+                                col_starts: jnp.ndarray,
+                                col_rows: jnp.ndarray, *,
+                                interpret: bool = True) -> jnp.ndarray:
+    """Cached part, packed layout, multi-rhs: y_parts (P, V, K)."""
+    p, v, k = x_parts.shape
+    l = packed_vals.shape[1]
+    w = col_rows.shape[1]
+    kernel = functools.partial(_ehyb_packed_spmm_kernel, w=w, v=v,
+                               k_chunk=_k_chunk(k))
+    return pl.pallas_call(
+        kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, v, k), lambda i: (i, 0, 0)),    # x-tile cache
+            pl.BlockSpec((1, l), lambda i: (i, 0)),          # packed values
+            pl.BlockSpec((1, l), lambda i: (i, 0)),          # packed cols
+            pl.BlockSpec((1, w + 1), lambda i: (i, 0)),      # col offsets
+            pl.BlockSpec((1, w), lambda i: (i, 0)),          # col row counts
+        ],
+        out_specs=pl.BlockSpec((1, v, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, v, k), x_parts.dtype),
+        interpret=interpret,
+    )(x_parts, packed_vals, packed_cols, col_starts, col_rows)
+
+
+def _ehyb_packed_fused_spmm_kernel(x_ref, xfull_ref, vals_ref, cols_ref,
+                                   starts_ref, rows_ref, erv_ref, erc_ref,
+                                   err_ref, y_ref, *, w: int, v: int,
+                                   k_chunk: int, e_chunk: int):
+    x = x_ref[0]                                   # (V, K) cached tile
+    xf = xfull_ref[...]                            # (n_pad, K)
+    k = x.shape[1]
+    outs = []
+    for c0 in range(0, k, k_chunk):
+        c1 = min(c0 + k_chunk, k)
+        acc = _packed_sweep(x[:, c0:c1], vals_ref, cols_ref, starts_ref,
+                            rows_ref, w=w, v=v)
+        outs.append(_er_stage(acc, xf[:, c0:c1], erv_ref[0], erc_ref[0],
+                              err_ref[0], v, e_chunk))
+    y_ref[0] = jnp.concatenate(outs, axis=1).astype(y_ref.dtype)
+
+
+def ehyb_packed_fused_spmm_pallas(x_new: jnp.ndarray,
+                                  packed_vals: jnp.ndarray,
+                                  packed_cols: jnp.ndarray,
+                                  col_starts: jnp.ndarray,
+                                  col_rows: jnp.ndarray,
+                                  er_p_vals: jnp.ndarray,
+                                  er_p_cols: jnp.ndarray,
+                                  er_p_rows: jnp.ndarray, *, vec_size: int,
+                                  interpret: bool = True) -> jnp.ndarray:
+    """Fused packed EHYB SpMM in the permuted space: y_new (n_pad, K)."""
+    n_pad, k = x_new.shape
+    p, l = packed_vals.shape
+    w = col_rows.shape[1]
+    v = vec_size
+    _, e, we = er_p_vals.shape
+    x_parts = x_new.reshape(p, v, k)
+    kc = _k_chunk(k)
+    e_chunk = _w_chunk(e, we, kc, x_new.dtype.itemsize)
+    kernel = functools.partial(_ehyb_packed_fused_spmm_kernel, w=w, v=v,
+                               k_chunk=kc, e_chunk=e_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, v, k), lambda i: (i, 0, 0)),    # x-tile cache
+            pl.BlockSpec((n_pad, k), lambda i: (0, 0)),      # full x (stays)
+            pl.BlockSpec((1, l), lambda i: (i, 0)),          # packed values
+            pl.BlockSpec((1, l), lambda i: (i, 0)),          # packed cols
+            pl.BlockSpec((1, w + 1), lambda i: (i, 0)),      # col offsets
+            pl.BlockSpec((1, w), lambda i: (i, 0)),          # col row counts
+            pl.BlockSpec((1, e, we), lambda i: (i, 0, 0)),   # ER values
+            pl.BlockSpec((1, e, we), lambda i: (i, 0, 0)),   # ER global cols
+            pl.BlockSpec((1, e), lambda i: (i, 0)),          # ER local rows
+        ],
+        out_specs=pl.BlockSpec((1, v, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, v, k), x_new.dtype),
+        interpret=interpret,
+    )(x_parts, x_new, packed_vals, packed_cols, col_starts, col_rows,
+      er_p_vals, er_p_cols, er_p_rows).reshape(n_pad, k)

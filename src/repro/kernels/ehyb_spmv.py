@@ -19,6 +19,11 @@ Mapping (DESIGN.md §2):
 
 The inner loop chunks W so the gathered ``(V, Wc, R)`` intermediate stays
 inside a VMEM budget; ``W`` is static so chunking unrolls at trace time.
+
+These kernels carry a single rhs (or a thin trailing R used by the solver's
+blocked probes); the batched (n_pad, K) serving path lives in the sibling
+``ehyb_spmm`` module, which reuses ``_w_chunk`` and ``_er_stage`` and adds a
+k-chunked accumulator sweep over the rhs columns.
 """
 
 from __future__ import annotations

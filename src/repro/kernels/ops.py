@@ -20,7 +20,14 @@ import jax.numpy as jnp
 
 from ..core.spmv import (EHYBDevice, _as_2d, _from_permuted, _fused_er_parts,
                          _to_permuted)
+from . import ehyb_spmm as _km
 from . import ehyb_spmv as _k
+
+# Rhs width at which the *_permuted wrappers route to the SpMM megakernels
+# (k-chunked accumulators, x-tile loaded once for all rhs) instead of the
+# SpMV kernels.  Static at trace time — the dispatch costs nothing at run
+# time and each width compiles its own specialized kernel.
+_SPMM_MIN_RHS = 2
 
 
 def _resolve_interpret(interpret):
@@ -45,14 +52,16 @@ def ehyb_spmv_pallas_permuted(m: EHYBDevice, x_new: jnp.ndarray, *,
     """
     interpret = _resolve_interpret(interpret)
     x2, squeeze = _as_2d(x_new)
+    spmm = x2.shape[1] >= _SPMM_MIN_RHS
     if m.has_er and use_er_kernel:
-        y_new = _k.ehyb_fused_pallas(x2, m.ell_vals, m.ell_cols,
-                                     m.er_p_vals, m.er_p_cols, m.er_p_rows,
-                                     interpret=interpret)
+        fused = _km.ehyb_fused_spmm_pallas if spmm else _k.ehyb_fused_pallas
+        y_new = fused(x2, m.ell_vals, m.ell_cols,
+                      m.er_p_vals, m.er_p_cols, m.er_p_rows,
+                      interpret=interpret)
     else:
         x_parts = x2.reshape(m.n_parts, m.vec_size, x2.shape[1])
-        y_parts = _k.ehyb_ell_pallas(x_parts, m.ell_vals, m.ell_cols,
-                                     interpret=interpret)
+        ell = _km.ehyb_ell_spmm_pallas if spmm else _k.ehyb_ell_pallas
+        y_parts = ell(x_parts, m.ell_vals, m.ell_cols, interpret=interpret)
         if m.has_er:
             y_parts = y_parts + _fused_er_parts(
                 x2, m.er_p_vals, m.er_p_cols, m.er_p_rows,
@@ -93,14 +102,19 @@ def ehyb_spmv_packed_pallas_permuted(m, x_new: jnp.ndarray, *,
     m: core.spmv.EHYBPackedDevice. x_new: (n_pad,) or (n_pad, R)."""
     interpret = _resolve_interpret(interpret)
     x2, squeeze = _as_2d(x_new)
+    spmm = x2.shape[1] >= _SPMM_MIN_RHS
     if m.has_er:
-        y_new = _k.ehyb_packed_fused_pallas(
+        fused = (_km.ehyb_packed_fused_spmm_pallas if spmm
+                 else _k.ehyb_packed_fused_pallas)
+        y_new = fused(
             x2, m.packed_vals, m.packed_cols, m.col_starts, m.col_rows,
             m.er_p_vals, m.er_p_cols, m.er_p_rows, vec_size=m.vec_size,
             interpret=interpret)
     else:
         x_parts = x2.reshape(m.n_parts, m.vec_size, x2.shape[1])
-        y_parts = _k.ehyb_ell_packed_pallas(
+        ell = (_km.ehyb_ell_packed_spmm_pallas if spmm
+               else _k.ehyb_ell_packed_pallas)
+        y_parts = ell(
             x_parts, m.packed_vals, m.packed_cols, m.col_starts, m.col_rows,
             interpret=interpret)
         y_new = y_parts.reshape(m.n_pad, x2.shape[1])

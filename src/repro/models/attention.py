@@ -305,19 +305,30 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype):
 
 def decode_attention(p, x, cache, pos, cfg, *, kind="attn", chunk_kv=2048):
     """Single-token decode: x (B,1,d); cache {"k","v"} (B,Smax,Hkv,D); pos
-    scalar int32 (current length). Returns (out, new_cache)."""
+    scalar int32 (current length) or (B,) int32 per-row lengths (a
+    continuously-batched engine's slots admit at different times, so each
+    row carries its own write index / RoPE angle / causal horizon).
+    Returns (out, new_cache)."""
     b = x.shape[0]
     q, k_new, v_new = _project_qkv(p, x, None, cfg)
-    pos_b = jnp.broadcast_to(pos[None, None], (b, 1))
+    pos = jnp.asarray(pos)
+    per_row = pos.ndim == 1
+    pos_b = pos[:, None] if per_row else jnp.broadcast_to(pos[None, None],
+                                                          (b, 1))
     if cfg.pos_embedding == "rope":
         q = apply_rope(q, pos_b, cfg.rope_theta)
         k_new = apply_rope(k_new, pos_b, cfg.rope_theta)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"],
-                                                  k_new.astype(cache["k"].dtype),
-                                                  pos, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"],
-                                                  v_new.astype(cache["v"].dtype),
-                                                  pos, axis=1)
+    if per_row:
+        rows = jnp.arange(b)
+        k_cache = cache["k"].at[rows, pos].set(
+            k_new[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[rows, pos].set(
+            v_new[:, 0].astype(cache["v"].dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
     smax = k_cache.shape[1]
     kv_pos = jnp.broadcast_to(jnp.arange(smax), (b, smax))
     window = cfg.window_size if kind == "attn_local" else 0

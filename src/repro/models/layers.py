@@ -94,13 +94,19 @@ def init_embedding(key, cfg):
 
 
 def embed_tokens(p, tokens, cfg, pos_offset=0):
+    """``pos_offset``: scalar start position, or (B,) int32 per-row starts
+    (continuous batching — each decode slot sits at its own position)."""
     x = jnp.take(p["embedding"].astype(cdtype(cfg)), tokens, axis=0)
     if cfg.embed_scale:
         x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
     if cfg.pos_embedding == "learned":
         s = tokens.shape[-1]
-        pos = jax.lax.dynamic_slice_in_dim(
-            p["pos_embedding"].astype(cdtype(cfg)), pos_offset, s, axis=0)
+        pe = p["pos_embedding"].astype(cdtype(cfg))
+        po = jnp.asarray(pos_offset)
+        if po.ndim == 1:
+            pos = jnp.take(pe, po[:, None] + jnp.arange(s), axis=0)
+        else:
+            pos = jax.lax.dynamic_slice_in_dim(pe, po, s, axis=0)
         x = x + pos
     return x
 

@@ -293,8 +293,11 @@ def prefill(params, batch, cfg, state, *, shard_act=None, skip_causal=False):
 
 
 def decode_step(params, tokens, cfg, state, pos, *, shard_act=None):
-    """One decode step: tokens (B,1) at position ``pos`` (scalar int32).
-    Returns (hidden (B,1,d), new state)."""
+    """One decode step: tokens (B,1) at position ``pos`` — scalar int32
+    when all rows advance in lock-step, or (B,) int32 per-row positions
+    (continuous batching: slots admitted at different times each write
+    their KV-cache entry, RoPE angle, and learned-position lookup at their
+    own index).  Returns (hidden (B,1,d), new state)."""
     x = embed_tokens(params["embed"], tokens, cfg, pos_offset=pos)
     x, _, new_state = _scan_units(params["units"], x, cfg, cfg.unit_pattern,
                                   "decode", states=state, pos=pos,

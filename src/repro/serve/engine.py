@@ -1,11 +1,14 @@
-"""Serving engine: prefill + decode steps with continuous-batching-lite.
+"""Serving engine: prefill + decode steps with continuous batching.
 
 The engine keeps a fixed pool of ``batch`` decode slots (the compiled decode
 step has a static batch shape — standard for TPU serving).  Requests queue
-up; free slots are prefilled (one compiled prefill per waiting request, padded
-to ``max_prompt``), and every ``step()`` advances all active slots one token.
-Finished slots (EOS or max tokens) are returned and immediately refillable —
-the vLLM-style decoupling of request lifetime from batch shape, minus paging.
+up; ALL free slots are prefilled in one compiled full-width prefill per
+``step()`` (admitted rows merged into the live state under a mask), and every
+step advances all active slots one token with their true per-slot positions —
+slots admitted at different times each write their KV-cache entry at their
+own index.  Finished slots (EOS or max tokens) are returned and immediately
+refillable — the vLLM-style decoupling of request lifetime from batch shape,
+minus paging.
 
 Sampling: greedy or temperature (per-request), computed on host from the
 device logits of the single new position.
@@ -15,7 +18,13 @@ single decode-step matmul (d_model × vocab every token).  When set, the head
 weights are magnitude-pruned and served through the Operator API v2 surface
 (``repro.api.pruned_linear`` → plan → bind → apply), so decode inherits
 whichever format wins for the pruned head's sparsity pattern — the serving-side
-integration of the paper's explicit-caching SpMM.  EHYB-family winners
+integration of the paper's explicit-caching SpMM.  Because every step runs
+all slots through ONE decode (and one prefill) program, the concurrent
+users' head matvecs coalesce into a single batched SpMM apply of width
+``batch`` — the head is planned at that width (``pruned_linear(..., k=)``)
+so format selection prices the amortized A-stream, and the batched apply
+routes to the SpMM megakernels that load each explicitly-cached x-tile once
+for the whole batch.  EHYB-family winners
 execute the fused megakernel pipeline inside ``SparseLinear.__call__``
 (permute in, ONE kernel launch with the ER rows folded into their owning
 partitions, un-permute out): activations arrive in feature order and logits
@@ -78,8 +87,8 @@ class ServeEngine:
             sparse_head_mesh, sparse_head_axis)
         self._decode = jax.jit(partial(self._decode_impl, cfg=cfg,
                                        head=self.sparse_head))
-        self._prefill_one = jax.jit(partial(self._prefill_impl, cfg=cfg,
-                                            head=self.sparse_head))
+        self._prefill = jax.jit(partial(self._prefill_impl, cfg=cfg,
+                                        head=self.sparse_head))
 
     def _head_weights(self) -> np.ndarray:
         """The dense (V, d) LM-head weights under the current params."""
@@ -103,8 +112,12 @@ class ServeEngine:
             return None
         from ..api import pruned_linear
 
+        # plan at the slot-pool width: every step coalesces the active
+        # slots' head matvecs into one (d, batch)-wide SpMM apply, so the
+        # format ranking should price the A-stream amortized over it
         return pruned_linear(self._head_weights(), density=density,
-                             format=fmt, mesh=mesh, mesh_axis=axis)
+                             format=fmt, mesh=mesh, mesh_axis=axis,
+                             k=self.batch)
 
     def _head_obj(self):
         """The sparse head's device container, passed to the compiled steps
@@ -156,20 +169,32 @@ class ServeEngine:
     @staticmethod
     def _decode_impl(params, tokens, state, pos_vec, head_obj, cfg,
                      head=None):
-        # per-slot positions: run with the max and rely on per-slot causal
-        # masks via per-slot pos (we pass a vector but decode uses a scalar
-        # write index per step; slots advance in lock-step so we use the
-        # per-slot position to mask logits host-side)
-        pos = pos_vec.max()
-        h, new_state = decode_step(params, tokens, cfg, state, pos)
+        # true per-slot positions: each slot writes its KV-cache entry (and
+        # takes its RoPE angle / causal horizon) at its own index, so slots
+        # admitted at different times decode correctly side by side.
+        # (An earlier version collapsed to pos_vec.max(), silently writing
+        # lagging slots' cache entries at the leading slot's position.)
+        h, new_state = decode_step(params, tokens, cfg, state, pos_vec)
         logits = ServeEngine._head_logits(params, h, cfg, head, head_obj)
         return logits[:, 0], new_state
 
     @staticmethod
-    def _prefill_impl(params, batchd, state_slice, head_obj, cfg, head=None):
-        h_last, st = prefill(params, batchd, cfg, state_slice)
+    def _prefill_impl(params, batchd, state, admit_mask, head_obj, cfg,
+                      head=None):
+        """Full-width prefill: every waiting request's row runs through ONE
+        compiled program per step and ``admit_mask`` (B,) merges only the
+        admitted rows' state back — active slots keep theirs.  All admitted
+        prompts' last-position head matvecs coalesce into the one batched
+        head apply inside ``_head_logits``."""
+        h_last, st = prefill(params, batchd, cfg, state)
         logits = ServeEngine._head_logits(params, h_last, cfg, head, head_obj)
-        return logits[:, 0], st
+
+        def merge(old, new):
+            # state leaves are (n_units, B, ...): mask broadcast on axis 1
+            m = admit_mask.reshape((1, -1) + (1,) * (new.ndim - 2))
+            return jnp.where(m, new.astype(old.dtype), old)
+
+        return logits[:, 0], jax.tree.map(merge, state, st)
 
     # ---- request management -------------------------------------------------
     def submit(self, req: Request):
@@ -179,30 +204,51 @@ class ServeEngine:
         return [i for i, r in enumerate(self.slots) if r is None]
 
     def _admit(self):
-        """Prefill waiting requests into free slots (batched per admission)."""
+        """Admit waiting requests into ALL free slots with one coalesced
+        full-width prefill (continuous batching: one compiled program per
+        step regardless of how many requests arrive, and their head
+        matvecs run as a single batched SpMM apply).
+
+        The token sampled from the prefill logits is the request's FIRST
+        generated token, so it counts against ``max_new_tokens`` and is
+        checked against EOS right here — a request asking for one token
+        gets exactly one, and an EOS at prefill never decodes further.
+        Returns the list of requests finished at admission."""
+        finished = []
         free = self._free_slots()
         while free and self.queue:
-            i = free.pop(0)
-            req = self.queue.popleft()
-            prompt = req.prompt[-self.max_prompt:]
-            plen = len(prompt)
-            toks = np.zeros((1, self.max_prompt), np.int32)
-            toks[0, :plen] = prompt
+            admitted = []
+            while free and self.queue:
+                admitted.append((free.pop(0), self.queue.popleft()))
+            toks = np.zeros((self.batch, self.max_prompt), np.int32)
+            mask = np.zeros(self.batch, bool)
+            for i, req in admitted:
+                prompt = req.prompt[-self.max_prompt:]
+                toks[i, :len(prompt)] = prompt
+                mask[i] = True
             batchd = {"tokens": jnp.asarray(toks)}
             if self.cfg.family == "encdec":
                 batchd["enc_frames"] = jnp.zeros(
-                    (1, self.max_prompt, self.cfg.d_model),
+                    (self.batch, self.max_prompt, self.cfg.d_model),
                     jnp.dtype(self.cfg.dtype))
-            slot_state = jax.tree.map(lambda a: a[:, i:i + 1], self.state)
-            logits, st = self._prefill_one(self.params, batchd, slot_state,
-                                           self._head_obj())
-            self.state = jax.tree.map(
-                lambda full, s: jax.lax.dynamic_update_slice_in_dim(
-                    full, s.astype(full.dtype), i, axis=1), self.state, st)
-            self.slots[i] = req
-            self.positions[i] = plen
-            tok = self._sample(np.asarray(logits)[0], req)
-            req.generated.append(int(tok))
+            logits, self.state = self._prefill(self.params, batchd,
+                                               self.state,
+                                               jnp.asarray(mask),
+                                               self._head_obj())
+            logits = np.asarray(logits)
+            for i, req in admitted:
+                self.slots[i] = req
+                self.positions[i] = len(req.prompt[-self.max_prompt:])
+                tok = self._sample(logits[i], req)
+                req.generated.append(int(tok))
+                if (tok == req.eos_id
+                        or len(req.generated) >= req.max_new_tokens):
+                    req.done = True
+                    finished.append(req)
+                    self.slots[i] = None
+                    self.positions[i] = 0
+                    free.append(i)      # reusable within this same pass
+        return finished
 
     def _sample(self, logits: np.ndarray, req: Request) -> int:
         if req.temperature <= 0:
@@ -213,11 +259,11 @@ class ServeEngine:
 
     # ---- main loop -----------------------------------------------------------
     def step(self):
-        """Advance every active slot one token."""
-        self._admit()
+        """Admit what fits, then advance every active slot one token."""
+        finished = self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
-            return []
+            return finished
         tokens = np.zeros((self.batch, 1), np.int32)
         for i in active:
             tokens[i, 0] = self.slots[i].generated[-1]
@@ -225,7 +271,6 @@ class ServeEngine:
             self.params, jnp.asarray(tokens), self.state,
             jnp.asarray(self.positions), self._head_obj())
         logits = np.asarray(logits)
-        finished = []
         for i in active:
             req = self.slots[i]
             self.positions[i] += 1
@@ -236,6 +281,7 @@ class ServeEngine:
                 req.done = True
                 finished.append(req)
                 self.slots[i] = None
+                self.positions[i] = 0
         return finished
 
     def run_until_done(self, max_steps: int = 10000):

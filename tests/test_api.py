@@ -122,6 +122,19 @@ def test_update_values_and_exact_rebind_identity():
     assert op3.plan is p and op3.obj.perm is op1.obj.perm
 
 
+def test_update_values_rejects_unknown_kwargs():
+    """Regression: ``update_values`` used to take ``**_ignored``, so a
+    typo'd keyword (``dytpe=...``) was silently swallowed and the caller's
+    intent dropped on the floor.  It must raise a TypeError naming the
+    stray argument."""
+    m = poisson3d(6)
+    op = api.plan(m).bind(m)
+    with pytest.raises(TypeError, match="dytpe"):
+        op.update_values(_with_values(m, 2.0), dytpe=jnp.float64)
+    op2 = op.update_values(_with_values(m, 2.0))     # positional path intact
+    assert op2.plan is op.plan
+
+
 # ---------------------------------------------------------------------------
 # pytree + jit-cache stability
 # ---------------------------------------------------------------------------
@@ -270,6 +283,33 @@ def test_grad_all_formats_no_double_counting(rng):
         np.testing.assert_allclose(
             np.asarray(gv, np.float64) / scale, gv_ref / scale,
             rtol=1e-5, atol=1e-5, err_msg=f"format {fmt}")
+
+
+def test_grad_fp64_cotangent_not_downcast(rng):
+    """An fp64 cotangent must flow through Aᵀḡ at fp64.
+
+    Regression: the local VJP branch bound the transpose plan at the stored
+    values' dtype and cast ``g.astype(vals.dtype)`` — rounding an fp64
+    cotangent to fp32 (~1e-7 relative) before the transpose apply.  With
+    the transpose bound at the promoted accumulation dtype the gradient
+    agrees with the dense reference (built from the same fp32-rounded
+    values, so storage rounding can't mask the bug) to fp64 resolution."""
+    from jax.experimental import enable_x64
+
+    m = poisson3d(6)
+    m32 = SparseCSR(m.n, m.indptr, m.indices,
+                    m.data.astype(np.float32).astype(np.float64))
+    dense = m32.to_dense()                          # fp64, fp32-rounded vals
+    with enable_x64():
+        op = api.plan(m).bind(m)                    # values stored at fp32
+        x = jnp.asarray(rng.standard_normal(m.n), jnp.float64)
+        v = jnp.asarray(rng.standard_normal(m.n), jnp.float64)
+        g = jax.grad(lambda xx: jnp.vdot(op @ xx, v))(x)
+        assert g.dtype == jnp.float64
+        g = np.asarray(g)
+    g_ref = dense.T @ np.asarray(v, np.float64)
+    err = np.abs(g - g_ref).max() / max(np.abs(g_ref).max(), 1e-12)
+    assert err < 1e-10, f"fp64 cotangent was downcast (rel err {err:.2e})"
 
 
 def test_transpose_operator(rng):

@@ -97,6 +97,91 @@ def test_sparse_head_decode_matches_dense_head_at_high_density():
         .available_formats())
 
 
+def test_staggered_admission_matches_sequential_decoding():
+    """Slots admitted at different times must decode at their own positions.
+
+    Regression: ``_decode_impl`` used to collapse the per-slot position
+    vector to ``pos_vec.max()``, so a request admitted while another slot
+    was ahead wrote its KV-cache entries (and took RoPE angles / causal
+    horizons) at the leading slot's position — silently corrupting the
+    lagging request's generations.  Staggered admission into a batch=2
+    engine must reproduce what each request generates alone."""
+    cfg = get_config("llama3_2_1b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompts = [np.arange(1, 7, dtype=np.int32),      # len 6
+               np.arange(3, 7, dtype=np.int32)]      # len 4
+
+    refs = []
+    for uid, prompt in enumerate(prompts):
+        solo = ServeEngine(params, cfg, batch=1, max_len=48, max_prompt=8)
+        solo.submit(Request(uid=uid, prompt=prompt, max_new_tokens=6))
+        refs.append(solo.run_until_done()[0].generated)
+
+    eng = ServeEngine(params, cfg, batch=2, max_len=48, max_prompt=8)
+    eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=6))
+    done = eng.step() + eng.step()       # slot 0 pulls ahead by two tokens
+    eng.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=6))
+    done += eng.run_until_done()
+    got = {r.uid: r.generated for r in done}
+    assert got[0] == refs[0]
+    assert got[1] == refs[1]
+
+
+def test_max_new_tokens_is_exact():
+    """``max_new_tokens`` must mean what it says.
+
+    Regression: the prefill-sampled token used to be appended without
+    counting against the budget or checking EOS, so every request produced
+    one token more than asked — ``max_new_tokens=1`` generated two."""
+    cfg = get_config("llama3_2_1b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    for max_new in (1, 2, 5):
+        engine = ServeEngine(params, cfg, batch=1, max_len=48, max_prompt=8)
+        engine.submit(Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                              max_new_tokens=max_new))
+        done = engine.run_until_done()
+        assert len(done) == 1
+        assert len(done[0].generated) == max_new
+
+
+def test_eos_at_prefill_stops_before_decode():
+    """An EOS sampled from the prefill logits finishes the request at
+    admission — it must never enter the decode loop."""
+    cfg = get_config("llama3_2_1b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompt = np.arange(1, 6, dtype=np.int32)
+    probe = ServeEngine(params, cfg, batch=1, max_len=48, max_prompt=8)
+    probe.submit(Request(uid=0, prompt=prompt, max_new_tokens=1))
+    first = probe.run_until_done()[0].generated[0]
+
+    engine = ServeEngine(params, cfg, batch=1, max_len=48, max_prompt=8)
+    engine.submit(Request(uid=1, prompt=prompt, max_new_tokens=20,
+                          eos_id=first))
+    done = engine.run_until_done()
+    assert done[0].generated == [first]
+
+
+def test_sparse_head_batched_decode_matches_dense_head():
+    """Two concurrent requests through the batch-wide coalesced SpMM head
+    (sparse_head_density=1.0) generate exactly what the dense head does —
+    the continuous-batching serving path of the batched megakernel."""
+    cfg = get_config("llama3_2_1b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+
+    def reqs():
+        return [Request(uid=i, prompt=np.arange(1 + i, 7 + i, dtype=np.int32),
+                        max_new_tokens=4) for i in range(2)]
+
+    outs = {}
+    for name, kw in (("dense", {}), ("sparse", {"sparse_head_density": 1.0})):
+        engine = ServeEngine(params, cfg, batch=2, max_len=48, max_prompt=8,
+                             **kw)
+        for r in reqs():
+            engine.submit(r)
+        outs[name] = {r.uid: r.generated for r in engine.run_until_done()}
+    assert outs["sparse"] == outs["dense"]
+
+
 def test_refresh_sparse_head_refills_without_rebuild():
     """A weight push refreshes the served pruned head through the value
     scatter plan: same mask, same partitioning, no new partition/pack pass —
