@@ -99,6 +99,20 @@ def collect_preprocess_records(results: dict, quick: bool = False) -> list:
             for name, r in rows.items()]
 
 
+def collect_reliability_records() -> list:
+    """One kind:"reliability" record carrying the guarded-apply / solver /
+    serve counters accumulated over this benchmark run — nonzero
+    ``guard.*`` entries in the CI artifact mean the bench executed on a
+    degraded fallback level rather than the native kernels it claims to
+    time."""
+    from repro.core import counters
+
+    prefixes = ("guard.", "tune.", "solver.", "serve.")
+    snap = {k: v for k, v in counters.snapshot().items()
+            if k.startswith(prefixes)}
+    return [{"kind": "reliability", "counters": snap}]
+
+
 def collect_spmv_records(quick: bool = False, rows=None) -> list:
     """Measured SpMV timings joined with the modeled-bytes table.
 
@@ -170,6 +184,7 @@ def main(argv=None) -> None:
     spmv_records += collect_preprocess_records(results, args.quick)
     spmv_records += collect_dist_records(results, args.quick)
     spmv_records += results.get("api_overhead") or []
+    spmv_records += collect_reliability_records()
     solver_records = results.get("solver_bench")
     if solver_records is None:
         from . import solver_bench

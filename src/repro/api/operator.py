@@ -346,14 +346,27 @@ class LinearOperator:
 
     def solve(self, b, *, method: str = "cg", precond: str = "jacobi",
               x0=None, tol: float = 1e-6, max_iters: int = 500,
-              space="auto", fused_update="auto"):
+              space="auto", fused_update="auto", policy=None,
+              raise_on_failure: bool = False, warn: bool = True):
         """Solve ``A x = b`` with this operator driving the Krylov loop —
         distributed automatically when the plan is sharded.  ``x0`` warm
         starts the iteration (permuted once into the execution space
-        alongside ``b``)."""
+        alongside ``b``).
+
+        A non-converged final status always either warns
+        (:class:`~repro.reliability.SolveFailureWarning`, default) or
+        raises (:class:`~repro.reliability.SolveFailure` with the result
+        attached, ``raise_on_failure=True``) — never a silent
+        ``converged=False``.  Passing a
+        :class:`~repro.reliability.SolvePolicy` arms the in-loop
+        stagnation/divergence sentinels and the host escalation ladder
+        (restart → method escalation → reference apply); see
+        ``repro.reliability`` DESIGN."""
         return solve_operator(self, b, method=method, precond=precond,
                               x0=x0, tol=tol, max_iters=max_iters,
-                              space=space, fused_update=fused_update)
+                              space=space, fused_update=fused_update,
+                              policy=policy,
+                              raise_on_failure=raise_on_failure, warn=warn)
 
 
 import jax  # noqa: E402  (registration needs jax; kept after the class)
@@ -400,12 +413,62 @@ def _solve_sharded_engine(sop, b, *, csr, method, precond, x0, tol,
     r = run(sop.obj if obj is None else obj, b_new, x0_new, inv_arr, tol,
             max_iters=max_iters)
     return SolveResult(x=sop.from_permuted(r.x), iters=r.iters,
-                       residual=r.residual, converged=r.converged)
+                       residual=r.residual, converged=r.converged,
+                       status_code=r.status_code)
+
+
+def _reference_solve(op, b, *, method, precond, x0, tol, max_iters,
+                     kw_guard):
+    """Escalation rung 3: re-run the Krylov loop on a pure lax/gather CSR
+    matvec built straight from the operator's host matrix — no planned
+    kernels, no permuted space — so it recovers even from kernel-level
+    output corruption the capability probe cannot see."""
+    import jax.numpy as jnp
+
+    from ..autotune.cost import matrix_key
+    from ..core import solver as S
+
+    a = op.csr
+    rows = np.repeat(np.arange(a.n), a.row_lengths())
+    cols = np.asarray(a.indices)
+    b = jnp.asarray(b)
+    vals = jnp.asarray(a.data, b.dtype)
+    acc = jnp.promote_types(b.dtype, jnp.float32)
+
+    def mv(x):
+        x2 = x[:, None] if x.ndim == 1 else x
+        contrib = vals[:, None].astype(acc) * x2[cols].astype(acc)
+        y = jnp.zeros((a.n, x2.shape[1]), acc).at[rows].add(contrib)
+        y = y.astype(x2.dtype)
+        return y[:, 0] if x.ndim == 1 else y
+
+    pre, _ = S._cached_precond(a, precond, matrix_key(a))
+    return S.SOLVERS[method](mv, b, pre, tol=tol, max_iters=max_iters,
+                             x0=x0, **kw_guard)
+
+
+def _better(r_old, r_new):
+    """The more useful of two solve attempts: converged wins; otherwise the
+    smaller finite residual (NaN never beats a finite iterate)."""
+    import math
+
+    if bool(r_new.converged):
+        return r_new
+    if bool(r_old.converged):
+        return r_old
+    res_new = float(r_new.residual)
+    res_old = float(r_old.residual)
+    if math.isfinite(res_new) and not math.isfinite(res_old):
+        return r_new
+    if math.isfinite(res_old) and not math.isfinite(res_new):
+        return r_old
+    return r_new if res_new <= res_old else r_old
 
 
 def solve_operator(op, b, *, method: str = "cg", precond: str = "jacobi",
                    x0=None, tol: float = 1e-6, max_iters: int = 500,
-                   space="auto", fused_update="auto"):
+                   space="auto", fused_update="auto", policy=None,
+                   raise_on_failure: bool = False, warn: bool = True):
     """Solve ``A x = b`` on a bound operator (the engine behind both
     :meth:`LinearOperator.solve` and the deprecated ``core.solver.solve``).
 
@@ -413,6 +476,17 @@ def solve_operator(op, b, *, method: str = "cg", precond: str = "jacobi",
     :class:`repro.dist.ShardedOperator` engine.  ``x0`` (optional) warm
     starts the Krylov iteration; like ``b`` it is permuted once into the
     execution space, never per iteration.
+
+    Failure handling (host-side, skipped when the result is traced):
+
+    * a final non-converged status warns once
+      (:class:`~repro.reliability.SolveFailureWarning`) or, with
+      ``raise_on_failure=True``, raises
+      :class:`~repro.reliability.SolveFailure` carrying the result;
+    * a :class:`~repro.reliability.SolvePolicy` arms the solver's
+      stagnation/divergence sentinels and the escalation ladder — warm
+      restarts, cg→bicgstab, then the reference CSR apply (local
+      operators only; sharded solves report but do not escalate).
     """
     import jax
     import jax.numpy as jnp
@@ -424,14 +498,16 @@ def solve_operator(op, b, *, method: str = "cg", precond: str = "jacobi",
         raise ValueError(f"unknown method {method!r}; "
                          f"have {sorted(S.SOLVERS)}")
     if isinstance(op, ShardedOperator):
-        return _solve_sharded_engine(op, b, csr=op.csr, method=method,
-                                     precond=precond, x0=x0, tol=tol,
-                                     max_iters=max_iters)
+        r = _solve_sharded_engine(op, b, csr=op.csr, method=method,
+                                  precond=precond, x0=x0, tol=tol,
+                                  max_iters=max_iters)
+        return _finalize_solve(r, (), raise_on_failure, warn)
     if op.plan.is_sharded:
         tpl = op.plan._template_for(op._dtype or jnp.float32)
-        return _solve_sharded_engine(tpl, b, csr=op.csr, method=method,
-                                     precond=precond, x0=x0, tol=tol,
-                                     max_iters=max_iters, obj=op.obj)
+        r = _solve_sharded_engine(tpl, b, csr=op.csr, method=method,
+                                  precond=precond, x0=x0, tol=tol,
+                                  max_iters=max_iters, obj=op.obj)
+        return _finalize_solve(r, (), raise_on_failure, warn)
     if space in ("auto", None):
         use_perm = op.supports_permuted
     else:
@@ -461,20 +537,100 @@ def solve_operator(op, b, *, method: str = "cg", precond: str = "jacobi",
     else:
         pre, inv = S._cached_precond(a, precond, key)
         b_run, mv = b, op.matvec
-    x0_run = None
-    if x0 is not None:
-        x0 = jnp.asarray(x0, b.dtype)
-        x0_run = op.to_space(x0, Space.PERMUTED) if use_perm else x0
-    kw = {}
-    if method == "cg":
-        kw = {"fused_update": bool(fused_update),
-              "precond_inv": None if inv is None
-              else jnp.asarray(inv, jnp.promote_types(b.dtype,
-                                                      jnp.float32))}
-    r = S.SOLVERS[method](mv, b_run, pre, tol=tol, max_iters=max_iters,
-                          x0=x0_run, **kw)
-    if use_perm:
-        r = S.SolveResult(x=op.from_space(r.x, Space.PERMUTED),
-                          iters=r.iters, residual=r.residual,
-                          converged=r.converged)
+    kw_guard = {}
+    if policy is not None:
+        kw_guard = {"stag_window": policy.stagnation_window,
+                    "stag_rtol": policy.stagnation_rtol,
+                    "div_factor": policy.divergence_factor}
+
+    def _run_local(method_, x0_orig):
+        x0_run = None
+        if x0_orig is not None:
+            x0a = jnp.asarray(x0_orig, b.dtype)
+            x0_run = op.to_space(x0a, Space.PERMUTED) if use_perm else x0a
+        kw = dict(kw_guard)
+        if method_ == "cg":
+            kw.update(fused_update=bool(fused_update),
+                      precond_inv=None if inv is None
+                      else jnp.asarray(inv, jnp.promote_types(b.dtype,
+                                                              jnp.float32)))
+        elif policy is not None and policy.breakdown_tol is not None:
+            kw["breakdown_tol"] = policy.breakdown_tol
+        r = S.SOLVERS[method_](mv, b_run, pre, tol=tol,
+                               max_iters=max_iters, x0=x0_run, **kw)
+        if use_perm:
+            r = S.SolveResult(x=op.from_space(r.x, Space.PERMUTED),
+                              iters=r.iters, residual=r.residual,
+                              converged=r.converged,
+                              status_code=r.status_code)
+        return r
+
+    r = _run_local(method, x0)
+    stages: list = []
+    if (policy is not None and not isinstance(r.converged, jax.core.Tracer)
+            and not bool(r.converged)):
+        import warnings as _w
+
+        from ..core.counters import bump as _bump
+        from ..reliability.policy import ReliabilityWarning
+
+        def _warm(res):
+            return (res.x if bool(jnp.isfinite(res.x).all())
+                    else x0)   # never warm start from a corrupted iterate
+
+        cur = method
+        restarts = 0
+        while (not bool(r.converged) and r.status != "breakdown"
+               and restarts < policy.max_restarts):
+            restarts += 1
+            _bump("solver.restart")
+            stages.append(f"restart[{cur}]")
+            r = _better(r, _run_local(cur, _warm(r)))
+        if (not bool(r.converged) and policy.escalate_method
+                and cur == "cg"):
+            cur = "bicgstab"
+            _bump("solver.escalate_method")
+            stages.append("escalate:bicgstab")
+            r = _better(r, _run_local(cur, _warm(r)))
+        if not bool(r.converged) and policy.escalate_reference:
+            _bump("solver.escalate_reference")
+            stages.append("escalate:reference")
+            kw_ref = dict(kw_guard)
+            if policy.breakdown_tol is not None and cur == "bicgstab":
+                kw_ref["breakdown_tol"] = policy.breakdown_tol
+            r = _better(r, _reference_solve(
+                op, b, method=cur, precond=precond, x0=_warm(r), tol=tol,
+                max_iters=max_iters, kw_guard=kw_ref))
+        if stages:
+            _w.warn(
+                f"solve escalated through {', '.join(stages)} "
+                f"(final status {r.status!r})", ReliabilityWarning,
+                stacklevel=2)
+    return _finalize_solve(r, tuple(stages), raise_on_failure, warn)
+
+
+def _finalize_solve(r, stages, raise_on_failure, warn):
+    """Terminal accounting: a non-converged result is never silent."""
+    import jax
+
+    if isinstance(r.converged, jax.core.Tracer):
+        return r           # traced solve: the caller sees the status array
+    from ..core.counters import bump as _bump
+    from ..reliability.policy import SolveFailure, SolveFailureWarning
+
+    if bool(r.converged):
+        if stages:
+            _bump("solver.recovered")
+        return r
+    _bump("solver.failed")
+    msg = (f"solve did not converge: status={r.status!r}, "
+           f"residual={float(r.residual):.3e}, iters={int(r.iters)}")
+    if stages:
+        msg += f"; escalation tried: {', '.join(stages)}"
+    if raise_on_failure:
+        raise SolveFailure(msg, result=r)
+    if warn:
+        import warnings as _w
+
+        _w.warn(msg, SolveFailureWarning, stacklevel=3)
     return r

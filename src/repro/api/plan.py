@@ -196,6 +196,8 @@ class Plan:
     _perm_cache: dict = dataclasses.field(default_factory=dict)
     _t_order: Optional[np.ndarray] = None
     _coo: Optional[Tuple[np.ndarray, np.ndarray]] = None
+    _guards: dict = dataclasses.field(default_factory=dict)
+    _indices_ok: Optional[bool] = None    # bind-time index check, memoized
 
     # ---- construction ------------------------------------------------------
 
@@ -282,7 +284,31 @@ class Plan:
         return SparseCSR(self.n, self.pattern.indptr, self.pattern.indices,
                          data), data
 
-    def bind(self, values, *, dtype=None) -> "LinearOperator":
+    def _validate_bind(self, data: np.ndarray) -> None:
+        """Bind-time input validation: non-finite values and out-of-range
+        column indices both produce garbage *silently* downstream (NaN
+        pollutes every iterate; a bad index gathers from the wrong vertex
+        or out of bounds, which XLA clamps rather than reports).  Reject at
+        the API boundary instead.  The index check is pattern-level and
+        memoized; the value check is one vectorized ``isfinite`` pass."""
+        if not np.isfinite(data).all():
+            bad = int((~np.isfinite(np.asarray(data))).sum())
+            raise ValueError(
+                f"bind() got {bad} non-finite value(s); a NaN/Inf entry "
+                f"silently corrupts every downstream apply/solve "
+                f"(pass validate=False to bind anyway)")
+        if self._indices_ok is None:
+            idx = np.asarray(self.pattern.indices)
+            self._indices_ok = bool(
+                idx.size == 0 or (idx.min() >= 0 and idx.max() < self.n))
+        if not self._indices_ok:
+            raise ValueError(
+                f"plan pattern carries column indices outside [0, {self.n})"
+                f"; the gather they feed is undefined "
+                f"(pass validate=False to bind anyway)")
+
+    def bind(self, values, *, dtype=None,
+             validate: bool = True) -> "LinearOperator":
         """Bind entry values to the planned structure -> LinearOperator.
 
         ``values`` is a :class:`SparseCSR` on this plan's pattern or a
@@ -291,6 +317,11 @@ class Plan:
         traced values (inside ``jit``/``grad``/``vmap``) are scattered into
         the value tables in-graph through the plan's value maps, which is
         what makes ``grad`` through ``bind`` work.
+
+        ``validate=True`` (default) rejects non-finite values and
+        out-of-range column indices at the boundary (concrete binds only —
+        traced values cannot be host-inspected); ``validate=False`` opts
+        out for callers that stage NaN payloads deliberately.
         """
         from .operator import LinearOperator
 
@@ -301,6 +332,8 @@ class Plan:
                                   and _is_traced(jnp.asarray(values))):
             return self._bind_traced(values, dtype)
         csr, data = self._as_csr(values)
+        if validate:
+            self._validate_bind(data)
         tpl = self._template_for(dtype, csr)
         op = LinearOperator(plan=self, obj=tpl.obj)
         op._dtype = jnp.dtype(dtype)
@@ -376,13 +409,35 @@ class Plan:
         return spec.refill(tpl.obj, csr, jnp.float32, {})
 
     def _raw_apply(self, tpl=None):
-        """The format's original-space ``(obj, x) -> y`` closure."""
+        """The format's original-space ``(obj, x) -> y`` closure, wrapped in
+        the reliability guard: a Pallas lowering/compile failure downgrades
+        through the fallback chain (fused -> unfused -> reference) at host
+        dispatch instead of crashing the apply.  Sharded plans dispatch
+        inside shard_map and keep the unguarded closure."""
         tpl = tpl or self._any_template()
-        return tpl.apply
+        if self.is_sharded:
+            return tpl.apply
+        from ..reliability.guard import guarded_apply
+
+        return guarded_apply(self, tpl, "apply")
 
     def _raw_apply_permuted(self, tpl=None):
         tpl = tpl or self._any_template()
-        return tpl.apply_permuted
+        if tpl.apply_permuted is None or self.is_sharded:
+            return tpl.apply_permuted
+        from ..reliability.guard import guarded_apply
+
+        return guarded_apply(self, tpl, "permuted")
+
+    @property
+    def degraded(self) -> dict:
+        """Non-primary guard resolutions, ``{kind: level_name}`` — empty
+        when every apply runs its native level (or none resolved yet)."""
+        out = {}
+        for kind, g in self._guards.items():
+            if g.level is not None and g.chain and g.level != g.chain[0]:
+                out[kind] = g.level
+        return out
 
     def _ensure_value_maps(self) -> None:
         if self._maps is not None:
@@ -437,7 +492,10 @@ class Plan:
         # reproduces y bitwise (identical program, identical inputs)
         import jax.numpy as jnp
 
-        raw = self._raw_apply(tpl)
+        # the UNguarded native apply on purpose: the guard's reference level
+        # calls back into these value maps (recursion), and a chaos-degraded
+        # level must not leak into active-leaf detection
+        raw = tpl.apply
         rng = np.random.default_rng(0)
         x = np.asarray(rng.standard_normal(self.n), np.float32)
         y_full = np.asarray(raw(o1, x))

@@ -65,6 +65,13 @@ class FormatSpec:
     permuted: Optional[Callable] = None   # (obj, x_new) -> y_new, or None
     refill: Optional[Callable] = None     # (obj, m_new, dtype, shared) -> obj
     shard: Optional[Callable] = None      # (op, mesh, axis, csr) -> Sharded
+    # degraded apply levels for the guarded fallback chain
+    # (reliability.guard): same (obj, x)/(obj, x_new) signatures as
+    # apply/permuted but with the most specialized kernel stage dropped —
+    # e.g. ehyb_packed's packed-ELL kernel + jnp ER instead of the fused
+    # megakernel.  None = the chain goes native -> reference directly.
+    fallback: Optional[Callable] = None
+    fallback_permuted: Optional[Callable] = None
 
 
 FORMATS: Dict[str, FormatSpec] = {}
@@ -184,6 +191,18 @@ def _packed_permuted(d, x_new):
     from ..kernels.ops import ehyb_spmv_packed_pallas_permuted
 
     return ehyb_spmv_packed_pallas_permuted(d, x_new)
+
+
+def _packed_unfused(d, x):
+    from ..kernels.ops import ehyb_spmv_packed_pallas
+
+    return ehyb_spmv_packed_pallas(d, x, use_er_kernel=False)
+
+
+def _packed_unfused_permuted(d, x_new):
+    from ..kernels.ops import ehyb_spmv_packed_pallas_permuted
+
+    return ehyb_spmv_packed_pallas_permuted(d, x_new, use_er_kernel=False)
 
 
 def _build_dense(m, dtype, shared):
@@ -428,7 +447,8 @@ register_format(FormatSpec(
     kernel="pallas-interpret",
     description="EHYB packed staircase (fused Pallas megakernel v2)",
     permuted=_packed_permuted, refill=_refill_ehyb_packed,
-    shard=_shard_ehyb))
+    shard=_shard_ehyb,
+    fallback=_packed_unfused, fallback_permuted=_packed_unfused_permuted))
 register_format(FormatSpec(
     "dense", _build_dense, _model_dense,
     description="dense matmul (wins only on tiny/near-dense matrices)",

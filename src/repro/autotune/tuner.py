@@ -113,6 +113,12 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
     key = pattern_hash(m)
     cache_key = (key, jnp.dtype(dtype).name, mode, cand, context,
                  n_dev if context == "dist" else None, k)
+    # rankings decided under fault injection must not outlive it (nor may a
+    # clean cached ranking mask an injected failure a test wants to observe)
+    from ..reliability.chaos import active as _chaos_active
+    from ..reliability.chaos import check_kernel as _chaos_check
+
+    use_cache = use_cache and _chaos_active() is None
     if use_cache and cache_key in _CACHE:
         return _CACHE[cache_key]
 
@@ -143,20 +149,38 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
             x = jnp.asarray(rng0.standard_normal(shape), dtype=dtype)
             measured = {}
             for f in timed:
-                spec = get_format(f)
-                obj, apply = spec.build(m, dtype, shared)
-                if context == "solver" and spec.permuted is not None:
-                    # time what the solver loop actually runs: the
-                    # permuted-space apply on a permuted-space vector — the
-                    # original-space apply's per-call perm round trip would
-                    # pollute exactly the timings this context ranks on
-                    pshape = (obj.n_pad,) if k == 1 else (obj.n_pad, k)
-                    xp = jnp.asarray(rng0.standard_normal(pshape),
-                                     dtype=dtype)
-                    measured[f] = _time_spmv(spec.permuted, obj, xp)
-                else:
-                    measured[f] = _time_spmv(apply, obj, x)
-            winner = min(sorted(measured), key=measured.get)
+                # a candidate whose build/compile/run fails (organically or
+                # chaos-injected) is skipped, not fatal — the measured pass
+                # ranks whatever actually executes on this backend
+                try:
+                    _chaos_check(f"tune:{f}")
+                    spec = get_format(f)
+                    obj, apply = spec.build(m, dtype, shared)
+                    if context == "solver" and spec.permuted is not None:
+                        # time what the solver loop actually runs: the
+                        # permuted-space apply on a permuted-space vector —
+                        # the original-space apply's per-call perm round
+                        # trip would pollute exactly the timings this
+                        # context ranks on
+                        pshape = (obj.n_pad,) if k == 1 else (obj.n_pad, k)
+                        xp = jnp.asarray(rng0.standard_normal(pshape),
+                                         dtype=dtype)
+                        measured[f] = _time_spmv(spec.permuted, obj, xp)
+                    else:
+                        measured[f] = _time_spmv(apply, obj, x)
+                except Exception as e:    # noqa: BLE001 — any kernel error
+                    import warnings
+
+                    from ..core.counters import bump
+                    from ..reliability.policy import ReliabilityWarning
+
+                    bump("tune.candidate_failed")
+                    warnings.warn(
+                        f"autotune: measured candidate {f!r} failed "
+                        f"({type(e).__name__}: {e}); skipping it",
+                        ReliabilityWarning, stacklevel=2)
+            if measured:
+                winner = min(sorted(measured), key=measured.get)
 
     result = TuneResult(format=winner, key=key, mode=mode,
                         modeled_bytes=modeled, measured_s=measured,

@@ -80,11 +80,35 @@ import numpy as np
 from .matrices import SparseCSR
 
 
+# Structured solve statuses (SolveResult.status_code).  In-loop sentinels
+# classify *why* a solve stopped instead of collapsing everything onto
+# converged=False: breakdown (a Krylov denominator hit float noise — the
+# recurrence is dead, restarting is pointless), divergence (non-finite or
+# exploding residual — a corrupted matvec or a wildly indefinite system),
+# stagnation (no relative residual progress over a window — tolerance
+# unreachable at this precision).  The host escalation ladder in
+# ``api.operator.solve_operator`` keys off these.
+STATUS_CONVERGED, STATUS_MAXITER, STATUS_BREAKDOWN, STATUS_DIVERGED, \
+    STATUS_STAGNATED = range(5)
+STATUS_NAMES = ("converged", "maxiter", "breakdown", "diverged", "stagnated")
+_RUNNING = -1   # in-loop sentinel: no terminal status assigned yet
+
+
 class SolveResult(NamedTuple):
     x: jnp.ndarray
     iters: jnp.ndarray
     residual: jnp.ndarray
     converged: jnp.ndarray
+    # int32 scalar in STATUS_* (device-resident; None only for results built
+    # by legacy third-party code that predates the field)
+    status_code: Optional[jnp.ndarray] = None
+
+    @property
+    def status(self) -> str:
+        """Human-readable status name (host-side; forces the scalar)."""
+        if self.status_code is None:
+            return "converged" if bool(self.converged) else "maxiter"
+        return STATUS_NAMES[int(self.status_code)]
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +182,17 @@ PRECONDITIONERS = {
 # solvers
 # ---------------------------------------------------------------------------
 
+def _classify_exit(status, res, tol):
+    """Post-loop status: a loop that exited without an in-loop sentinel
+    either converged, ran out of iterations, or started non-finite."""
+    status = jnp.where(
+        status >= 0, status,
+        jnp.where(res <= tol, STATUS_CONVERGED,
+                  jnp.where(jnp.isfinite(res), STATUS_MAXITER,
+                            STATUS_DIVERGED))).astype(jnp.int32)
+    return status
+
+
 @partial(jax.jit, static_argnames=("matvec", "precond", "max_iters",
                                    "fused_update", "axis_name"))
 def cg(matvec: Callable, b: jnp.ndarray, precond: Callable = lambda r: r,
@@ -165,7 +200,9 @@ def cg(matvec: Callable, b: jnp.ndarray, precond: Callable = lambda r: r,
        fused_update: bool = False,
        precond_inv: Optional[jnp.ndarray] = None,
        axis_name: Optional[str] = None,
-       x0: Optional[jnp.ndarray] = None) -> SolveResult:
+       x0: Optional[jnp.ndarray] = None,
+       stag_window: int = 0, stag_rtol: float = 1e-8,
+       div_factor: float = 1e12) -> SolveResult:
     """Preconditioned conjugate gradients (device-resident loop).
 
     ``x0`` warm starts the iteration (None = zeros).  It must live in the
@@ -189,6 +226,16 @@ def cg(matvec: Callable, b: jnp.ndarray, precond: Callable = lambda r: r,
     a :class:`repro.dist.ShardedOperator`: the whole ``while_loop`` lives
     inside one shard_map, with the halo exchange as the matvec's only
     communication and one psum per dot.
+
+    Guardrails (all branch-free selects riding the existing carry):
+    ``p·Ap ≤ 0`` is a CG breakdown — the operator is not SPD along this
+    direction and the recurrence is meaningless past it — the step rolls
+    back and the loop exits with ``status="breakdown"``.  A non-finite or
+    exploding ‖r‖² (``> div_factor·max(‖b‖², ‖r₀‖²)``) rolls back and
+    exits ``"diverged"``.  ``stag_window > 0`` arms stagnation detection:
+    that many iterations without a relative best-residual improvement of
+    ``stag_rtol`` exits ``"stagnated"`` (the step is kept — it was not
+    wrong, just unproductive).
     """
     if fused_update and axis_name is not None:
         raise ValueError("fused_update is a single-device CG-step kernel; "
@@ -220,34 +267,63 @@ def cg(matvec: Callable, b: jnp.ndarray, precond: Callable = lambda r: r,
     # to 0.0 -> 0/0 = NaN on a zero rhs)
     bnorm2 = jnp.maximum(jnp.real(_dot(b, b)), jnp.finfo(acc).tiny)
     thresh2 = (tol ** 2) * bnorm2
+    div_thresh = jnp.asarray(div_factor, acc) * jnp.maximum(bnorm2, rr0)
+    stag_w = jnp.asarray(stag_window, jnp.int32)
+    k0 = jnp.asarray(0, jnp.int32)
+    status0 = jnp.asarray(_RUNNING, jnp.int32)
 
     def cond(state):
-        _, _, _, _, rr, k = state
-        return (rr > thresh2) & (k < max_iters)
+        _, _, _, _, rr, k, status, _, _ = state
+        return (status < 0) & (rr > thresh2) & (k < max_iters)
 
     def body(state):
-        x, r, p, rz, rr, k = state
+        x, r, p, rz, rr, k, _, best, since = state
         ap = matvec(p)
-        alpha = rz / jnp.maximum(_dot(p, ap), 1e-30)
+        pap = jnp.real(_dot(p, ap))
+        breakdown = pap <= 0          # not SPD along p: recurrence is dead
+        # denominator stays finite either way; on breakdown the whole step
+        # rolls back below, so alpha's value there never reaches the result
+        alpha = (rz / jnp.where(breakdown, jnp.ones((), pap.dtype),
+                                jnp.maximum(pap, 1e-30))).astype(rz.dtype)
         if fused_update:
-            x, r, z, rz_new, rr_new = fused_cg_update(x, r, p, ap, inv_vec,
-                                                      alpha)
+            x_n, r_n, z, rz_new, rr_new = fused_cg_update(x, r, p, ap,
+                                                          inv_vec, alpha)
             rz_new = rz_new.astype(rz.dtype)
             rr_new = rr_new.astype(rr.dtype)
         else:
-            x = (x + alpha * p).astype(dt)
-            r = (r - alpha * ap).astype(dt)
-            z = precond(r).astype(dt)
-            rz_new = _dot(r, z)
-            rr_new = jnp.real(_dot(r, r))
+            x_n = (x + alpha * p).astype(dt)
+            r_n = (r - alpha * ap).astype(dt)
+            z = precond(r_n).astype(dt)
+            rz_new = _dot(r_n, z)
+            rr_new = jnp.real(_dot(r_n, r_n))
         beta = rz_new / jnp.maximum(rz, 1e-30)
-        p = (z + beta * p).astype(dt)
-        return x, r, p, rz_new, rr_new, k + 1
+        p_n = (z + beta * p).astype(dt)
+        bad = breakdown | ~jnp.isfinite(rr_new) | (rr_new > div_thresh)
+        improved = rr_new < best * (1 - stag_rtol)
+        since_n = jnp.where(improved | bad, 0, since + 1)
+        stalled = (stag_w > 0) & (since_n >= stag_w) & (rr_new > thresh2)
+        status_n = jnp.where(
+            breakdown, STATUS_BREAKDOWN,
+            jnp.where(bad, STATUS_DIVERGED,
+                      jnp.where(stalled, STATUS_STAGNATED,
+                                _RUNNING))).astype(jnp.int32)
+        # roll back a bad step (keep a merely-stagnated one: it was valid)
+        x_n = jnp.where(bad, x, x_n)
+        r_n = jnp.where(bad, r, r_n)
+        p_n = jnp.where(bad, p, p_n)
+        rz_n = jnp.where(bad, rz, rz_new)
+        rr_n = jnp.where(bad, rr, rr_new)
+        return (x_n, r_n, p_n, rz_n, rr_n,
+                k + jnp.where(bad, 0, 1).astype(jnp.int32), status_n,
+                jnp.minimum(best, rr_n), since_n.astype(jnp.int32))
 
-    x, _, _, _, rr, k = jax.lax.while_loop(
-        cond, body, (x0, r0, p0, rz0, rr0, 0))
+    x, _, _, _, rr, k, status, _, _ = jax.lax.while_loop(
+        cond, body, (x0, r0, p0, rz0, rr0, k0, status0, rr0, k0))
     res = jnp.sqrt(rr / bnorm2)
-    return SolveResult(x=x, iters=k, residual=res, converged=res <= tol)
+    status = _classify_exit(status, res, tol)
+    return SolveResult(x=x, iters=k, residual=res,
+                       converged=status == STATUS_CONVERGED,
+                       status_code=status)
 
 
 @partial(jax.jit, static_argnames=("matvec", "precond", "max_iters",
@@ -256,7 +332,10 @@ def bicgstab(matvec: Callable, b: jnp.ndarray,
              precond: Callable = lambda r: r, tol: float = 1e-6,
              max_iters: int = 500, *,
              axis_name: Optional[str] = None,
-             x0: Optional[jnp.ndarray] = None) -> SolveResult:
+             x0: Optional[jnp.ndarray] = None,
+             stag_window: int = 0, stag_rtol: float = 1e-8,
+             div_factor: float = 1e12,
+             breakdown_tol: Optional[float] = None) -> SolveResult:
     """Preconditioned BiCGStab for non-symmetric systems.
 
     ``x0`` warm starts the iteration exactly as documented on :func:`cg`.
@@ -264,7 +343,19 @@ def bicgstab(matvec: Callable, b: jnp.ndarray,
     As in :func:`cg`, ‖r‖² is carried in the loop state — computed where the
     residual update already has ``r`` in registers — so the loop condition
     costs no extra vector pass.  ``axis_name`` distributes the recurrence
-    over shards with psum-ed dots, exactly as documented on :func:`cg`."""
+    over shards with psum-ed dots, exactly as documented on :func:`cg`.
+
+    Breakdown is *detected*, not masked: ``|ρ| ≤ breakdown_tol·√(‖r̂‖²‖r‖²)``
+    (the Cauchy–Schwarz-relative test — below it the computed ρ is float
+    noise; default tol = the accumulation dtype's eps) or ``|r̂·v| ≤ 1e-30``
+    rolls the step back and exits ``status="breakdown"``.  The historic
+    ``jnp.where(rho == 0, ...)`` floors survive only to keep the discarded
+    branch's arithmetic finite — they can no longer launder a dead
+    recurrence into garbage iterates.  ``t·t → 0`` with ``s`` not yet
+    converged is likewise a breakdown, but the valid BiCGStab *half-step*
+    (x += α·p̂, r = s) is kept before exiting; when ``s`` has already
+    converged the half-step simply finishes the solve.  Divergence and
+    stagnation sentinels match :func:`cg`."""
     dt = b.dtype
     acc = jnp.promote_types(dt, jnp.float32)   # dots/norms in ≥fp32
 
@@ -276,40 +367,86 @@ def bicgstab(matvec: Callable, b: jnp.ndarray,
     r0 = (b - matvec(x0)).astype(dt)
     rhat = r0
     rr0 = jnp.real(_dot(r0, r0))
+    rhat2 = rr0                                # ‖r̂‖² (r̂ is frozen at r₀)
+    bt = jnp.asarray(jnp.finfo(acc).eps if breakdown_tol is None
+                     else breakdown_tol, jnp.real(rr0).dtype)
     # floor must be representable in acc (1e-60 underflows fp32
     # to 0.0 -> 0/0 = NaN on a zero rhs)
     bnorm2 = jnp.maximum(jnp.real(_dot(b, b)), jnp.finfo(acc).tiny)
     thresh2 = (tol ** 2) * bnorm2
+    div_thresh = jnp.asarray(div_factor, bnorm2.dtype) * \
+        jnp.maximum(bnorm2, rr0)
+    stag_w = jnp.asarray(stag_window, jnp.int32)
     one = jnp.ones((), acc)
-    init = (x0, r0, r0, one, one, one,
-            jnp.zeros_like(b), jnp.zeros_like(b), rr0, 0)
+    k0 = jnp.asarray(0, jnp.int32)
+    status0 = jnp.asarray(_RUNNING, jnp.int32)
+    init = (x0, r0, one, one, one, jnp.zeros_like(b), jnp.zeros_like(b),
+            rr0, k0, status0, rr0, k0)
 
     def cond(state):
-        *_, rr, k = state
-        return (rr > thresh2) & (k < max_iters)
+        rr, k, status = state[7], state[8], state[9]
+        return (status < 0) & (rr > thresh2) & (k < max_iters)
 
     def body(state):
-        x, r, _, rho, alpha, omega, v, p, _, k = state
+        x, r, rho, alpha, omega, v, p, rr, k, _, best, since = state
         rho_new = _dot(rhat, r)
+        rho_break = jnp.abs(rho_new) <= bt * jnp.sqrt(rhat2) * jnp.sqrt(rr)
         beta = (rho_new / jnp.where(rho == 0, 1e-30, rho)) * (
             alpha / jnp.where(omega == 0, 1e-30, omega))
-        p = (r + beta * (p - omega * v)).astype(dt)
-        ph = precond(p).astype(dt)
-        v = matvec(ph)
-        alpha = rho_new / jnp.maximum(_dot(rhat, v), 1e-30)
-        s = (r - alpha * v).astype(dt)
+        p_n = (r + beta * (p - omega * v)).astype(dt)
+        ph = precond(p_n).astype(dt)
+        v_n = matvec(ph)
+        rv = _dot(rhat, v_n)
+        rv_break = jnp.abs(rv) <= 1e-30
+        alpha_n = rho_new / jnp.where(rv_break, jnp.ones((), rv.dtype), rv)
+        s = (r - alpha_n * v_n).astype(dt)
+        ss = jnp.real(_dot(s, s))
+        s_conv = ss <= thresh2
         sh = precond(s).astype(dt)
         t = matvec(sh)
-        omega = _dot(t, s) / jnp.maximum(_dot(t, t), 1e-30)
-        x = (x + alpha * ph + omega * sh).astype(dt)
-        r = (s - omega * t).astype(dt)
-        rr = jnp.real(_dot(r, r))
-        return x, r, rhat, rho_new, alpha, omega, v, p, rr, k + 1
+        tt = jnp.real(_dot(t, t))
+        tt_break = (tt <= 1e-30) & ~s_conv
+        omega_n = _dot(t, s) / jnp.maximum(tt, 1e-30)
+        x_half = (x + alpha_n * ph).astype(dt)
+        x_full = (x_half + omega_n * sh).astype(dt)
+        r_full = (s - omega_n * t).astype(dt)
+        rr_full = jnp.real(_dot(r_full, r_full))
+        # three-way select: dead recurrence -> keep the pre-step iterate;
+        # early s-convergence or t-breakdown -> keep the valid half-step;
+        # otherwise the full BiCGStab step
+        pick_old = rho_break | rv_break
+        pick_half = ~pick_old & (s_conv | tt_break)
+
+        def sel(old, half, full):
+            return jnp.where(pick_old, old, jnp.where(pick_half, half, full))
+
+        x_n = sel(x, x_half, x_full)
+        r_n = sel(r, s, r_full)
+        rr_n = sel(rr, ss, rr_full)
+        blow = (~jnp.isfinite(rr_n) | (rr_n > div_thresh)) & ~pick_old
+        x_n = jnp.where(blow, x, x_n)
+        r_n = jnp.where(blow, r, r_n)
+        rr_n = jnp.where(blow, rr, rr_n)
+        improved = rr_n < best * (1 - stag_rtol)
+        bad = pick_old | blow
+        since_n = jnp.where(improved | bad, 0, since + 1).astype(jnp.int32)
+        stalled = (stag_w > 0) & (since_n >= stag_w) & (rr_n > thresh2)
+        status_n = jnp.where(
+            pick_old | tt_break, STATUS_BREAKDOWN,
+            jnp.where(blow, STATUS_DIVERGED,
+                      jnp.where(stalled, STATUS_STAGNATED,
+                                _RUNNING))).astype(jnp.int32)
+        return (x_n, r_n, rho_new, alpha_n, omega_n, v_n, p_n, rr_n,
+                k + jnp.where(bad, 0, 1).astype(jnp.int32), status_n,
+                jnp.minimum(best, rr_n), since_n)
 
     out = jax.lax.while_loop(cond, body, init)
-    x, rr, k = out[0], out[-2], out[-1]
+    x, rr, k, status = out[0], out[7], out[8], out[9]
     res = jnp.sqrt(rr / bnorm2)
-    return SolveResult(x=x, iters=k, residual=res, converged=res <= tol)
+    status = _classify_exit(status, res, tol)
+    return SolveResult(x=x, iters=k, residual=res,
+                       converged=status == STATUS_CONVERGED,
+                       status_code=status)
 
 
 SOLVERS = {"cg": cg, "bicgstab": bicgstab}

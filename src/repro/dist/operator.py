@@ -327,7 +327,8 @@ class ShardedOperator:
                 local, mesh,
                 in_specs=(specs, P(axis), P(axis), P(axis), P()),
                 out_specs=SolveResult(x=P(axis), iters=P(),
-                                      residual=P(), converged=P()))
+                                      residual=P(), converged=P(),
+                                      status_code=P()))
             return mapped(obj, b_new, x0_new, inv, tol)
 
         self._solver_cache[method] = run

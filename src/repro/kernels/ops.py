@@ -39,6 +39,51 @@ def _resolve_interpret(interpret):
     return interpret
 
 
+# ---------------------------------------------------------------------------
+# per-backend capability probe (the guarded-apply chain keys off this)
+# ---------------------------------------------------------------------------
+
+_PALLAS_OK: dict = {}
+
+
+def backend_supports_pallas(backend: str | None = None) -> bool:
+    """Can a trivial ``pallas_call`` lower, compile, and run correctly on
+    ``backend`` (default: the current one)?
+
+    Cached per (backend, chaos epoch): ``reliability.chaos`` can force the
+    probe to fail — and its epoch bump on exit re-arms the real answer.
+    A False here short-circuits every Pallas level of the guarded-apply
+    fallback chain without paying one doomed compile per plan."""
+    import numpy as np
+
+    # function imports (the package attr `chaos` shadows the submodule)
+    from ..reliability.chaos import check_kernel as _chaos_check
+    from ..reliability.chaos import epoch as _chaos_epoch
+
+    backend = backend or jax.default_backend()
+    key = (backend, _chaos_epoch())
+    hit = _PALLAS_OK.get(key)
+    if hit is not None:
+        return hit
+    try:
+        _chaos_check("pallas:probe")
+        from jax.experimental import pallas as pl
+
+        def _double(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2.0
+
+        x = jnp.arange(8, dtype=jnp.float32)
+        y = pl.pallas_call(
+            _double, out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+            interpret=_resolve_interpret(None))(x)
+        ok = bool(np.allclose(np.asarray(jax.block_until_ready(y)),
+                              np.arange(8, dtype=np.float32) * 2.0))
+    except Exception:
+        ok = False
+    _PALLAS_OK[key] = ok
+    return ok
+
+
 @partial(jax.jit, static_argnames=("interpret", "use_er_kernel"))
 def ehyb_spmv_pallas_permuted(m: EHYBDevice, x_new: jnp.ndarray, *,
                               interpret: bool | None = None,
@@ -93,17 +138,23 @@ def ehyb_ell_only_pallas(m: EHYBDevice, x: jnp.ndarray, *,
                               interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("interpret", "use_er_kernel"))
 def ehyb_spmv_packed_pallas_permuted(m, x_new: jnp.ndarray, *,
-                                     interpret: bool | None = None
+                                     interpret: bool | None = None,
+                                     use_er_kernel: bool = True
                                      ) -> jnp.ndarray:
     """Kernel v2 (packed staircase), permuted space, ER fused.
 
-    m: core.spmv.EHYBPackedDevice. x_new: (n_pad,) or (n_pad, R)."""
+    m: core.spmv.EHYBPackedDevice. x_new: (n_pad,) or (n_pad, R).
+
+    ``use_er_kernel=False`` is the unfused degraded level of the guarded
+    apply's fallback chain: the packed ELL kernel alone plus the jnp
+    per-partition ER path — one fewer fused Pallas stage to lower when a
+    backend rejects the megakernel."""
     interpret = _resolve_interpret(interpret)
     x2, squeeze = _as_2d(x_new)
     spmm = x2.shape[1] >= _SPMM_MIN_RHS
-    if m.has_er:
+    if m.has_er and use_er_kernel:
         fused = (_km.ehyb_packed_fused_spmm_pallas if spmm
                  else _k.ehyb_packed_fused_pallas)
         y_new = fused(
@@ -117,16 +168,22 @@ def ehyb_spmv_packed_pallas_permuted(m, x_new: jnp.ndarray, *,
         y_parts = ell(
             x_parts, m.packed_vals, m.packed_cols, m.col_starts, m.col_rows,
             interpret=interpret)
+        if m.has_er:
+            y_parts = y_parts + _fused_er_parts(
+                x2, m.er_p_vals, m.er_p_cols, m.er_p_rows,
+                m.vec_size).astype(y_parts.dtype)
         y_new = y_parts.reshape(m.n_pad, x2.shape[1])
     return y_new[:, 0] if squeeze else y_new
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("interpret", "use_er_kernel"))
 def ehyb_spmv_packed_pallas(m, x: jnp.ndarray, *,
-                            interpret: bool | None = None) -> jnp.ndarray:
+                            interpret: bool | None = None,
+                            use_er_kernel: bool = True) -> jnp.ndarray:
     """Kernel v2 (packed staircase), original space: full EHYB SpMV/SpMM.
 
     m: core.spmv.EHYBPackedDevice. x: (n,) or (n, R)."""
     x_new, squeeze = _to_permuted(m, x)
-    y_new = ehyb_spmv_packed_pallas_permuted(m, x_new, interpret=interpret)
+    y_new = ehyb_spmv_packed_pallas_permuted(m, x_new, interpret=interpret,
+                                             use_er_kernel=use_er_kernel)
     return _from_permuted(m, y_new, squeeze)

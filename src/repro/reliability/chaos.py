@@ -1,0 +1,159 @@
+"""Deterministic fault injection for the reliability layer.
+
+``chaos(...)`` is a context manager that arms one module-global
+:class:`ChaosConfig`; instrumentation points inside the stack consult it
+at host-dispatch time:
+
+* ``check_kernel(name)`` — the guarded-apply chain resolution
+  (``reliability.guard``) and the autotuner's measured pass call this with
+  a site name (``"ehyb_packed:native"``, ``"tune:ehyb"``, ``"pallas:probe"``);
+  a matching ``kernel_failure`` fnmatch pattern raises :class:`ChaosFault`
+  there, simulating a Pallas lowering/compile failure on that level.
+* ``corrupt_output(y, level)`` — the guard wrapper passes every apply's
+  output through this; with ``nan_apply=True`` any non-``"reference"``
+  level returns all-NaN, simulating silent kernel corruption (the solver
+  guardrails + escalation must recover).
+* ``check_serve(sparse_active)`` — the engine's compiled-step wrapper;
+  ``serve_apply_failures=N`` raises on the first N calls (transient fault:
+  the retry path must absorb it), ``fail_sparse_apply=True`` raises on
+  every call made while the sparse head is active (persistent fault: the
+  engine must degrade to the dense head).
+* ``slow_apply_s`` — sleeps that long at each consulted site (latency
+  injection for deadline tests).
+
+Everything is deterministic — no randomness, budgets count down in call
+order — so every recovery-path test reproduces exactly.
+
+Cache hygiene: decisions derived while chaos is armed must not outlive it
+(and healthy cached programs must not mask it).  Entering/exiting bumps a
+module epoch — the guard re-resolves its fallback level whenever the epoch
+moved — and clears JAX's compilation caches, so programs traced under
+injection are re-traced clean afterwards.  Corollary: chaos contexts are
+for tests, not hot paths, and results computed *inside* compiled programs
+traced before entry are unaffected until re-trace.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from collections import Counter
+from fnmatch import fnmatch
+from typing import Optional, Tuple
+
+
+class ChaosFault(RuntimeError):
+    """The injected failure type (distinguishable from organic errors)."""
+
+
+@dataclasses.dataclass
+class ChaosConfig:
+    kernel_failure: Tuple[str, ...] = ()   # fnmatch patterns vs site names
+    nan_apply: bool = False                # non-reference applies emit NaN
+    slow_apply_s: float = 0.0              # sleep per consulted site
+    serve_apply_failures: int = 0          # first-N compiled serve calls fail
+    fail_sparse_apply: bool = False        # every sparse-head serve call fails
+    injected: Counter = dataclasses.field(default_factory=Counter)
+
+    def _sleep(self) -> None:
+        if self.slow_apply_s > 0:
+            self.injected["slow"] += 1
+            time.sleep(self.slow_apply_s)
+
+    def check_kernel(self, name: str) -> None:
+        self._sleep()
+        if any(fnmatch(name, pat) for pat in self.kernel_failure):
+            self.injected[f"kernel:{name}"] += 1
+            raise ChaosFault(f"chaos: injected kernel failure at {name!r}")
+
+    def corrupt_output(self, y, level: str):
+        self._sleep()
+        if self.nan_apply and level != "reference":
+            import jax.numpy as jnp
+
+            self.injected["nan"] += 1
+            return jnp.full(jnp.shape(y), jnp.nan, jnp.result_type(y))
+        return y
+
+    def check_serve(self, sparse_active: bool = True) -> None:
+        self._sleep()
+        if self.fail_sparse_apply and sparse_active:
+            self.injected["serve:sparse"] += 1
+            raise ChaosFault("chaos: injected sparse-head apply failure")
+        if self.serve_apply_failures > 0:
+            self.serve_apply_failures -= 1
+            self.injected["serve:transient"] += 1
+            raise ChaosFault("chaos: injected transient serve apply failure")
+
+
+_ACTIVE: Optional[ChaosConfig] = None
+_EPOCH: int = 0
+
+
+def active() -> Optional[ChaosConfig]:
+    """The armed config, or None outside any ``chaos(...)`` context."""
+    return _ACTIVE
+
+
+def epoch() -> int:
+    """Monotonic counter bumped on every chaos enter/exit — cache keys that
+    must not survive an injection boundary include this."""
+    return _EPOCH
+
+
+def check_kernel(name: str) -> None:
+    """Module-level convenience: no-op when chaos is unarmed."""
+    if _ACTIVE is not None:
+        _ACTIVE.check_kernel(name)
+
+
+def _clear_jax_caches() -> None:
+    try:
+        import jax
+
+        jax.clear_caches()
+    except Exception:
+        pass
+
+
+@contextlib.contextmanager
+def chaos(**kw):
+    """Arm a :class:`ChaosConfig` for the dynamic extent of the block.
+
+    Yields the config; its ``injected`` counter records every fault
+    actually delivered, so tests assert the injection fired (a recovery
+    test that never hits its fault proves nothing).  Contexts do not nest.
+    """
+    global _ACTIVE, _EPOCH
+    if _ACTIVE is not None:
+        raise RuntimeError("chaos contexts do not nest")
+    cfg = ChaosConfig(**kw)
+    _ACTIVE = cfg
+    _EPOCH += 1
+    _clear_jax_caches()
+    try:
+        yield cfg
+    finally:
+        _ACTIVE = None
+        _EPOCH += 1
+        _clear_jax_caches()
+
+
+def flood(engine, n: int, *, prompt=None, max_new_tokens: int = 4,
+          ttl_s: Optional[float] = None, uid_base: int = 10_000) -> list:
+    """Submit ``n`` requests at once (queue-flood helper for overload
+    tests).  Returns the Request objects — rejected ones come back with
+    ``done=True`` and a ``reject_reason``."""
+    import numpy as np
+
+    from ..serve.engine import Request
+
+    p = np.asarray([1, 2, 3] if prompt is None else prompt, np.int32)
+    reqs = []
+    for i in range(n):
+        r = Request(uid=uid_base + i, prompt=p,
+                    max_new_tokens=max_new_tokens, ttl_s=ttl_s)
+        engine.submit(r)
+        reqs.append(r)
+    return reqs

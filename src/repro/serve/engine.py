@@ -44,7 +44,9 @@ re-pruning, re-partitioning, or re-tracing.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+import time
+import warnings
+from collections import Counter, deque
 from functools import partial
 from typing import Callable, Optional
 
@@ -52,8 +54,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.counters import bump
 from ..models import decode_step, init_decode_state, prefill
 from ..models.layers import logits_fn
+from ..reliability.policy import EnginePolicy, ReliabilityWarning
 
 
 @dataclasses.dataclass
@@ -63,9 +67,13 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     eos_id: int = -1
+    ttl_s: Optional[float] = None      # per-request deadline (None = policy)
     # filled by the engine
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    reject_reason: Optional[str] = None   # "queue_full" | "deadline" | None
+    _submit_t: Optional[float] = None
+    _deadline: Optional[float] = None
 
 
 class ServeEngine:
@@ -73,9 +81,20 @@ class ServeEngine:
                  max_prompt: int = 64, state_dtype=jnp.float32, seed: int = 0,
                  sparse_head_density: Optional[float] = None,
                  sparse_head_format: str = "auto",
-                 sparse_head_mesh=None, sparse_head_axis: str = "data"):
+                 sparse_head_mesh=None, sparse_head_axis: str = "data",
+                 max_queue: Optional[int] = None,
+                 policy: Optional[EnginePolicy] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.params, self.cfg = params, cfg
         self.batch, self.max_len, self.max_prompt = batch, max_len, max_prompt
+        self.policy = policy or EnginePolicy()
+        if max_queue is not None:
+            self.policy = dataclasses.replace(self.policy,
+                                              max_queue=max_queue)
+        self._clock = clock or time.monotonic
+        self.stats: Counter = Counter()
+        self.degraded = False
+        self.degraded_reason: Optional[str] = None
         self.queue: deque[Request] = deque()
         self.slots: list[Optional[Request]] = [None] * batch
         self.positions = np.zeros(batch, np.int32)
@@ -85,10 +104,15 @@ class ServeEngine:
         self.sparse_head = self._build_sparse_head(
             sparse_head_density, sparse_head_format,
             sparse_head_mesh, sparse_head_axis)
-        self._decode = jax.jit(partial(self._decode_impl, cfg=cfg,
-                                       head=self.sparse_head))
-        self._prefill = jax.jit(partial(self._prefill_impl, cfg=cfg,
-                                        head=self.sparse_head))
+        self._rejit(self.sparse_head)
+
+    def _rejit(self, head):
+        """(Re)build the compiled step programs against ``head`` — the
+        sparse layer on the healthy path, None in degraded mode."""
+        self._decode = jax.jit(partial(self._decode_impl, cfg=self.cfg,
+                                       head=head))
+        self._prefill = jax.jit(partial(self._prefill_impl, cfg=self.cfg,
+                                        head=head))
 
     def _head_weights(self) -> np.ndarray:
         """The dense (V, d) LM-head weights under the current params."""
@@ -122,8 +146,11 @@ class ServeEngine:
     def _head_obj(self):
         """The sparse head's device container, passed to the compiled steps
         as a *traced* argument (not closure state): value refreshes flow
-        into already-compiled decode/prefill programs with no re-trace."""
-        return None if self.sparse_head is None else self.sparse_head.op.obj
+        into already-compiled decode/prefill programs with no re-trace.
+        Degraded mode serves the dense head — no container to pass."""
+        if self.sparse_head is None or self.degraded:
+            return None
+        return self.sparse_head.op.obj
 
     def refresh_sparse_head(self, params=None):
         """Value-refresh the served pruned head after a weight update.
@@ -197,8 +224,133 @@ class ServeEngine:
         return logits[:, 0], jax.tree.map(merge, state, st)
 
     # ---- request management -------------------------------------------------
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> bool:
+        """Admission control: returns True if queued, False if rejected.
+
+        A rejected request comes back ``done=True`` with
+        ``reject_reason="queue_full"`` — callers that ignore the return
+        value (the legacy contract) still see a terminal state rather than
+        a hang.  Deadlines are stamped here (``req.ttl_s`` falling back to
+        the policy's ``default_ttl_s``) and enforced at every step."""
+        now = self._clock()
+        req._submit_t = now
+        ttl = req.ttl_s if req.ttl_s is not None else self.policy.default_ttl_s
+        req._deadline = None if ttl is None else now + ttl
+        mq = self.policy.max_queue
+        if mq is not None and len(self.queue) >= mq:
+            req.done = True
+            req.reject_reason = "queue_full"
+            self.stats["rejected_queue_full"] += 1
+            bump("serve.rejected_queue_full")
+            return False
         self.queue.append(req)
+        self.stats["submitted"] += 1
+        return True
+
+    def _expire(self) -> list:
+        """Drop queued and active requests whose deadline has passed
+        (``reject_reason="deadline"``; an active slot frees immediately —
+        its partial ``generated`` tokens stay on the request)."""
+        now = self._clock()
+        finished = []
+        if any(r._deadline is not None and now >= r._deadline
+               for r in self.queue):
+            keep: deque[Request] = deque()
+            while self.queue:
+                r = self.queue.popleft()
+                if r._deadline is not None and now >= r._deadline:
+                    r.done = True
+                    r.reject_reason = "deadline"
+                    self.stats["expired_queued"] += 1
+                    bump("serve.expired")
+                    finished.append(r)
+                else:
+                    keep.append(r)
+            self.queue = keep
+        for i, r in enumerate(self.slots):
+            if (r is not None and r._deadline is not None
+                    and now >= r._deadline):
+                r.done = True
+                r.reject_reason = "deadline"
+                self.stats["expired_active"] += 1
+                bump("serve.expired")
+                finished.append(r)
+                self.slots[i] = None
+                self.positions[i] = 0
+        return finished
+
+    # ---- failure handling ---------------------------------------------------
+    def _enter_degraded(self, reason: str) -> None:
+        """Swap the sparse pruned head for the dense path: re-jit the step
+        programs with ``head=None`` and stop passing the sparse container.
+        The sparse layer object is kept — ``restore_sparse_head()`` swaps
+        back once the fault clears."""
+        self.degraded = True
+        self.degraded_reason = reason
+        self._rejit(None)
+        self.stats["degraded"] += 1
+        bump("serve.degraded")
+        warnings.warn(
+            f"ServeEngine degraded to the dense head after repeated "
+            f"sparse-apply failures ({reason})", ReliabilityWarning,
+            stacklevel=3)
+
+    def restore_sparse_head(self) -> None:
+        """Leave degraded mode (no-op when healthy)."""
+        if not self.degraded:
+            return
+        self.degraded = False
+        self.degraded_reason = None
+        self._rejit(self.sparse_head)
+
+    def _guarded_call(self, which: str, *args):
+        """Run a compiled step with retry/backoff and degraded-mode
+        escalation.  ``args`` end with ``head_obj`` by construction of both
+        call sites; non-finite logits count as a failure (a silently
+        corrupted step poisons every subsequent token)."""
+        from ..reliability.chaos import active as _chaos_active
+
+        pol = self.policy
+        last: Optional[BaseException] = None
+        for phase in range(2):
+            fn = self._decode if which == "decode" else self._prefill
+            for attempt in range(pol.max_retries + 1):
+                try:
+                    c = _chaos_active()
+                    if c is not None:
+                        c.check_serve(sparse_active=args[-1] is not None)
+                    out = fn(*args)
+                    if not np.isfinite(np.asarray(out[0])).all():
+                        raise FloatingPointError(
+                            f"{which} step produced non-finite logits")
+                    return out
+                except Exception as e:   # noqa: BLE001 — any step failure
+                    last = e
+                    self.stats["retries"] += 1
+                    bump("serve.retry")
+                    if attempt < pol.max_retries and pol.retry_backoff_s > 0:
+                        time.sleep(pol.retry_backoff_s * (2 ** attempt))
+            if (phase == 0 and self.sparse_head is not None
+                    and not self.degraded):
+                self._enter_degraded(f"{type(last).__name__}: {last}")
+                args = args[:-1] + (None,)
+                continue
+            break
+        raise last
+
+    def health(self) -> dict:
+        """Liveness/degradation snapshot (cheap host state, no device
+        sync) — what an ops probe or the bench harness scrapes."""
+        return {
+            "queue_depth": len(self.queue),
+            "active": sum(r is not None for r in self.slots),
+            "batch": self.batch,
+            "degraded": self.degraded,
+            "degraded_reason": self.degraded_reason,
+            "sparse_head": self.sparse_head is not None,
+            "max_queue": self.policy.max_queue,
+            "stats": dict(self.stats),
+        }
 
     def _free_slots(self):
         return [i for i, r in enumerate(self.slots) if r is None]
@@ -231,10 +383,9 @@ class ServeEngine:
                 batchd["enc_frames"] = jnp.zeros(
                     (self.batch, self.max_prompt, self.cfg.d_model),
                     jnp.dtype(self.cfg.dtype))
-            logits, self.state = self._prefill(self.params, batchd,
-                                               self.state,
-                                               jnp.asarray(mask),
-                                               self._head_obj())
+            logits, self.state = self._guarded_call(
+                "prefill", self.params, batchd, self.state,
+                jnp.asarray(mask), self._head_obj())
             logits = np.asarray(logits)
             for i, req in admitted:
                 self.slots[i] = req
@@ -244,6 +395,7 @@ class ServeEngine:
                 if (tok == req.eos_id
                         or len(req.generated) >= req.max_new_tokens):
                     req.done = True
+                    self.stats["completed"] += 1
                     finished.append(req)
                     self.slots[i] = None
                     self.positions[i] = 0
@@ -259,16 +411,18 @@ class ServeEngine:
 
     # ---- main loop -----------------------------------------------------------
     def step(self):
-        """Admit what fits, then advance every active slot one token."""
-        finished = self._admit()
+        """Expire what's past deadline, admit what fits, then advance every
+        active slot one token."""
+        finished = self._expire()
+        finished.extend(self._admit())
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return finished
         tokens = np.zeros((self.batch, 1), np.int32)
         for i in active:
             tokens[i, 0] = self.slots[i].generated[-1]
-        logits, self.state = self._decode(
-            self.params, jnp.asarray(tokens), self.state,
+        logits, self.state = self._guarded_call(
+            "decode", self.params, jnp.asarray(tokens), self.state,
             jnp.asarray(self.positions), self._head_obj())
         logits = np.asarray(logits)
         for i in active:
@@ -279,6 +433,7 @@ class ServeEngine:
             if (tok == req.eos_id or len(req.generated) >= req.max_new_tokens
                     or self.positions[i] >= self.max_len - 1):
                 req.done = True
+                self.stats["completed"] += 1
                 finished.append(req)
                 self.slots[i] = None
                 self.positions[i] = 0
