@@ -43,6 +43,9 @@ Usage:
   python -m benchmarks.run bytes_model          # one module, CSV only
   python -m benchmarks.run --json solver_bench  # one module + JSON
   python -m benchmarks.run --json-dir out/      # JSON location
+  python -m benchmarks.run --quick --verify     # + static verification of
+                                                #   every built container
+                                                #   (kind:"analysis" records)
 
 BENCH_*.json is written on default/--quick runs (no explicit module list) or
 when --json is passed; an explicit module list alone stays CSV-only so a
@@ -113,6 +116,47 @@ def collect_reliability_records() -> list:
     return [{"kind": "reliability", "counters": snap}]
 
 
+def collect_analysis_records(quick: bool = False) -> list:
+    """kind:"analysis" records: every benchmarked container statically
+    verified once, OFF the timed path (``--verify``).  One record per suite
+    matrix — per-format finding counts plus the halo plan's conservation
+    laws — so a corrupted build shows up in the BENCH artifact next to the
+    numbers it would have poisoned."""
+    from repro.analysis import verify, verify_plan
+    from repro.analysis.invariants import RULES, check_halo_plan
+    from repro.core import SUITE
+    from repro.dist.halo import build_halo_plan
+
+    from .common import get_ehyb, get_matrix
+
+    from repro import autotune as at
+
+    names = ("poisson3d_16",) if quick else tuple(SUITE)
+    records = []
+    for name in names:
+        m = get_matrix(name)
+        shared = {"ehyb": get_ehyb(name)}
+        per_format = {}
+        findings = []
+        for fmt in at.available_formats():
+            obj, _ = at.build_format(fmt, m, shared=shared)
+            fs = verify(obj)
+            per_format[fmt] = len(fs)
+            findings += [f"{fmt}: {f}" for f in fs]
+        e = shared["ehyb"]
+        hs = check_halo_plan(build_halo_plan(e, 4), e)
+        per_format["halo_plan"] = len(
+            [f for f in hs if f.severity != "info"])
+        findings += [f"halo_plan: {f}" for f in hs if f.severity != "info"]
+        records.append({
+            "kind": "analysis", "matrix": name, "n": m.n, "nnz": m.nnz,
+            "rules_run": list(RULES), "findings_per_format": per_format,
+            "findings": findings, "clean": not findings})
+        print(f"verify,{name},"
+              f"{'clean' if not findings else f'{len(findings)} findings'}")
+    return records
+
+
 def collect_spmv_records(quick: bool = False, rows=None) -> list:
     """Measured SpMV timings joined with the modeled-bytes table.
 
@@ -163,12 +207,19 @@ def main(argv=None) -> None:
                     help="write BENCH_*.json even with an explicit module list")
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing BENCH_*.json")
+    ap.add_argument("--verify", action="store_true",
+                    help="statically verify every built container once, "
+                         "off the timed path, and emit kind:\"analysis\" "
+                         "records into BENCH_spmv.json")
     args = ap.parse_args(argv)
 
     mods = args.modules or (QUICK_MODS if args.quick else DEFAULT_MODS)
     results = {name: _run_module(name, args.quick) for name in mods}
 
     if args.no_json or (args.modules and not args.json):
+        if args.verify:
+            print("# === verify ===")
+            collect_analysis_records(args.quick)
         return
     if args.json_dir is None:
         root = pathlib.Path(__file__).parent.parent
@@ -184,6 +235,9 @@ def main(argv=None) -> None:
     spmv_records += collect_preprocess_records(results, args.quick)
     spmv_records += collect_dist_records(results, args.quick)
     spmv_records += results.get("api_overhead") or []
+    if args.verify:
+        print("# === verify ===")
+        spmv_records += collect_analysis_records(args.quick)
     spmv_records += collect_reliability_records()
     solver_records = results.get("solver_bench")
     if solver_records is None:

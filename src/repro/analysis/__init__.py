@@ -1,0 +1,27 @@
+"""Static analysis: verify containers, sanitize jaxprs, lint the source.
+
+Three passes over three layers of the stack, one
+:class:`~repro.analysis.findings.Finding` record type:
+
+* :mod:`repro.analysis.invariants` — the declarative format-invariant
+  verifier: ``verify(obj)`` checks any built container or operator against
+  its format's structural invariants (via the ``FormatSpec.invariants``
+  registry hook); ``verify_plan(plan)`` checks the pattern-only planning
+  layer, including the halo plan's conservation laws.
+* :mod:`repro.analysis.jaxpr_lint` — traces every registered apply path
+  under abstract inputs and checks the jaxprs for dtype-promotion,
+  collective-axis, closure-constant and host-callback hazards.
+* :mod:`repro.analysis.source_lint` — AST lint of the repo source for
+  repo-specific rules (module-scope jnp work, untagged broad excepts,
+  deprecated shims inside ``src/``, wall-clock calls under ``jit``).
+
+``python -m repro.analysis`` runs all three and gates against the
+committed baseline (``analysis_baseline.json``) — the CI
+``static-analysis`` job.
+"""
+
+from .findings import Finding, errors, summarize
+from .invariants import format_invariants, verify, verify_plan
+
+__all__ = ["Finding", "errors", "summarize", "verify", "verify_plan",
+           "format_invariants"]

@@ -1,0 +1,124 @@
+"""``python -m repro.analysis`` — run the three passes, gate on a baseline.
+
+The committed baseline (``analysis_baseline.json`` at the repo root) stores
+per-pass, per-rule finding *counts*.  The gate is a ratchet: a run fails
+when any rule's count exceeds its baselined count — existing debt (the
+bf16-accum warnings of the einsum apply paths) is tolerated but frozen; new
+findings of any rule fail CI.  Shrinking debt is recorded by re-writing the
+baseline (``--write-baseline``).
+
+    python -m repro.analysis                          # all three passes
+    python -m repro.analysis --source                 # one pass
+    python -m repro.analysis --baseline analysis_baseline.json
+    python -m repro.analysis --write-baseline analysis_baseline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+from .findings import Finding, summarize
+
+PASSES = ("source", "jaxpr", "invariants")
+
+
+def run_invariants_pass() -> List[Finding]:
+    """Build every registered format (plus a halo plan) on the probe matrix
+    and verify each — the clean-suite leg of the corruption regression."""
+    from ..autotune.registry import available_formats, build_format
+    from ..dist.halo import build_halo_plan
+    from .invariants import check_halo_plan, verify
+    from .jaxpr_lint import _probe_matrix
+
+    m = _probe_matrix()
+    out: List[Finding] = []
+    for fmt in available_formats():
+        obj, _ = build_format(fmt, m, None, {})
+        out += verify(obj)
+    from ..core.ehyb import build_ehyb
+
+    e = build_ehyb(m)
+    out += check_halo_plan(build_halo_plan(e, 4), e)
+    return out
+
+
+def run_pass(name: str) -> List[Finding]:
+    if name == "source":
+        from .source_lint import run_source_lint
+
+        return run_source_lint()
+    if name == "jaxpr":
+        from .jaxpr_lint import run_jaxpr_lint
+
+        return run_jaxpr_lint()
+    return run_invariants_pass()
+
+
+def gate(results: Dict[str, List[Finding]],
+         baseline: Dict[str, Dict[str, int]]) -> List[str]:
+    """Ratchet: violations where a rule's count exceeds its baseline."""
+    violations = []
+    for pname, findings in results.items():
+        base = baseline.get(pname, {})
+        gated = [f for f in findings if f.severity != "info"]
+        for rule, count in summarize(gated).items():
+            if count > base.get(rule, 0):
+                violations.append(
+                    f"{pname}: rule {rule!r} has {count} finding(s), "
+                    f"baseline allows {base.get(rule, 0)}")
+    return violations
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis: source lint, jaxpr sanitizer, "
+                    "format-invariant verifier")
+    for p in PASSES:
+        ap.add_argument(f"--{p}", action="store_true",
+                        help=f"run only the {p} pass (default: all)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="gate against this per-rule count baseline")
+    ap.add_argument("--write-baseline", type=Path, default=None,
+                    help="write the observed counts as the new baseline")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="print only the summary and violations")
+    args = ap.parse_args(argv)
+
+    selected = [p for p in PASSES if getattr(args, p)] or list(PASSES)
+    results: Dict[str, List[Finding]] = {}
+    for pname in selected:
+        results[pname] = run_pass(pname)
+        if not args.quiet:
+            for f in results[pname]:
+                print(f"{pname}: {f}")
+        print(f"{pname}: {len(results[pname])} finding(s) "
+              f"{summarize(results[pname])}")
+
+    if args.write_baseline is not None:
+        payload = {p: summarize([f for f in fs if f.severity != "info"])
+                   for p, fs in results.items()}
+        args.write_baseline.write_text(json.dumps(payload, indent=2,
+                                                  sort_keys=True) + "\n")
+        print(f"baseline written: {args.write_baseline}")
+        return 0
+
+    baseline: Dict[str, Dict[str, int]] = {}
+    if args.baseline is not None:
+        baseline = json.loads(args.baseline.read_text())
+    violations = gate(results, baseline)
+    for v in violations:
+        print(f"VIOLATION {v}")
+    if violations:
+        return 1
+    print("static analysis: clean against baseline" if args.baseline
+          else "static analysis: done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

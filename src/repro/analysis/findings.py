@@ -1,0 +1,55 @@
+"""The structured finding record every analysis pass emits.
+
+All three passes — the format-invariant verifier (``invariants``), the
+jaxpr sanitizer (``jaxpr_lint``) and the repo source lint (``source_lint``)
+— report through one record type so callers (``Plan.bind(validate="full")``,
+``benchmarks/run.py --verify``, the CI ``static-analysis`` job) aggregate,
+filter and baseline them uniformly.
+
+Severities:
+
+* ``error``   — a violated invariant: the container/program WILL compute
+                wrong numbers (or crash) if executed.  ``verify``-gated
+                paths raise on these.
+* ``warning`` — a hazard that degrades performance or precision without
+                corrupting results (bf16 accumulation, oversized closure
+                constants).  CI ratchets these against the committed
+                baseline: existing ones are tolerated, new ones fail.
+* ``info``    — observations (rule coverage notes); never gated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+SEVERITIES = ("error", "warning", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    severity: str     # "error" | "warning" | "info"
+    site: str         # where: container/field, traced path, or path:line
+    rule: str         # stable kebab-case rule id (what CI baselines key on)
+    message: str      # human explanation, with the offending numbers
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"severity must be one of {SEVERITIES}, "
+                             f"got {self.severity!r}")
+
+    def __str__(self):
+        return f"[{self.severity}] {self.rule} @ {self.site}: {self.message}"
+
+
+def errors(findings: List[Finding]) -> List[Finding]:
+    """The gating subset: findings a verified path must refuse to run on."""
+    return [f for f in findings if f.severity == "error"]
+
+
+def summarize(findings: List[Finding]) -> dict:
+    """Per-rule counts — the shape the committed CI baseline stores."""
+    out: dict = {}
+    for f in findings:
+        out[f.rule] = out.get(f.rule, 0) + 1
+    return dict(sorted(out.items()))

@@ -1,0 +1,193 @@
+"""Jaxpr sanitizer (static analysis pass 2 of 3).
+
+Traces every registered apply / permuted / SpMM path under abstract inputs
+and walks the resulting jaxprs — including the inner jaxprs carried by
+``pjit`` / ``shard_map`` / ``pallas_call`` / control-flow params — checking
+program-level discipline no container inspection can see:
+
+  dtype-downcast    a float64 intermediate silently narrowed to f32/bf16
+                    (precision loss the caller never asked for) — error
+  bf16-accum        a dot/contraction over bf16 operands accumulating in
+                    bf16 instead of f32 (the §4 mixed-precision discipline:
+                    bf16 in, f32 accumulate) — warning, ratcheted against
+                    the committed baseline
+  collective-axis   a psum/all_to_all/all_gather/... with no axis name —
+                    such a program only works by accident of mesh context
+                    — error
+  oversized-const   a closure-captured constant above 128 KiB — every
+                    retrace re-hashes and re-uploads it; container tables
+                    must arrive as *arguments* — warning
+  host-callback     pure_callback/io_callback/debug_callback inside a hot
+                    apply path — a host round trip per call — error
+  trace-failure     the path failed to trace at all — error
+
+``run_jaxpr_lint()`` sweeps all registered formats; the CI
+``static-analysis`` job runs it (with a 2-device host mesh so the sharded
+path's collectives are traced too) and gates on the baseline.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List, Optional
+
+import numpy as np
+
+from .findings import Finding
+
+__all__ = ["lint_jaxpr", "run_jaxpr_lint", "trace_registered_paths"]
+
+_CONST_LIMIT = 128 * 1024          # bytes a closed-over constant may occupy
+
+_COLLECTIVES = {
+    "psum", "pmax", "pmin", "ppermute", "pbroadcast", "all_to_all",
+    "all_gather", "reduce_scatter", "psum_scatter", "axis_index",
+}
+_CALLBACKS = {"pure_callback", "io_callback", "debug_callback"}
+_FLOAT_WIDTH = {"float16": 2, "bfloat16": 2, "float32": 4, "float64": 8}
+
+
+def _dtype_name(aval) -> Optional[str]:
+    dt = getattr(aval, "dtype", None)
+    return None if dt is None else np.dtype(dt).name
+
+
+def _walk(jaxpr) -> Iterable:
+    """All eqns of ``jaxpr`` and of every inner jaxpr in eqn params."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _inner_jaxprs(v):
+                yield from _walk(sub)
+
+
+def _inner_jaxprs(v):
+    if hasattr(v, "eqns"):                    # a Jaxpr
+        yield v
+    elif hasattr(v, "jaxpr"):                 # a ClosedJaxpr
+        yield v.jaxpr
+    elif isinstance(v, (list, tuple)):
+        for item in v:
+            yield from _inner_jaxprs(item)
+
+
+def lint_jaxpr(closed, site: str) -> List[Finding]:
+    """Lint one ``ClosedJaxpr`` (as returned by ``jax.make_jaxpr``)."""
+    out: List[Finding] = []
+    for const in closed.consts:
+        nbytes = getattr(const, "nbytes", 0)
+        if nbytes and nbytes > _CONST_LIMIT:
+            out.append(Finding(
+                "warning", site, "oversized-const",
+                f"closure-captured constant of {nbytes} bytes "
+                f"(shape {getattr(const, 'shape', '?')}); pass container "
+                f"tables as arguments, not closed-over values"))
+    for eqn in _walk(closed.jaxpr):
+        name = eqn.primitive.name
+        if name in _CALLBACKS:
+            out.append(Finding(
+                "error", site, "host-callback",
+                f"{name} inside a hot apply path — each call is a host "
+                f"round trip and blocks async dispatch"))
+        elif name in _COLLECTIVES:
+            axes = eqn.params.get("axes", eqn.params.get(
+                "axis_name", eqn.params.get("axis", None)))
+            if axes is None or (isinstance(axes, (tuple, list))
+                                and len(axes) == 0):
+                out.append(Finding(
+                    "error", site, "collective-axis",
+                    f"{name} with no axis name — the collective binds to "
+                    f"whatever mesh context happens to surround it"))
+        elif name == "convert_element_type":
+            src = _dtype_name(eqn.invars[0].aval)
+            dst = _dtype_name(eqn.outvars[0].aval)
+            if (src == "float64" and dst in _FLOAT_WIDTH
+                    and _FLOAT_WIDTH[dst] < 8):
+                out.append(Finding(
+                    "error", site, "dtype-downcast",
+                    f"float64 intermediate silently narrowed to {dst}"))
+        elif name in ("dot_general", "scatter-add", "scatter_add"):
+            ins = {_dtype_name(v.aval) for v in eqn.invars}
+            acc = _dtype_name(eqn.outvars[0].aval)
+            if "bfloat16" in ins and acc == "bfloat16":
+                out.append(Finding(
+                    "warning", site, "bf16-accum",
+                    f"{name} over bf16 operands accumulates in bf16; "
+                    f"promote the accumulator to f32 (bf16 carries ~8 "
+                    f"significand bits)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sweep every registered apply path
+# ---------------------------------------------------------------------------
+
+def _probe_matrix(n: int = 64, density: float = 0.12, seed: int = 0):
+    from ..core.matrices import from_coo
+
+    rng = np.random.default_rng(seed)
+    dense = (rng.random((n, n)) < density) * rng.random((n, n))
+    np.fill_diagonal(dense, 1.0)
+    rows, cols = np.nonzero(dense)
+    return from_coo(n, rows, cols, dense[rows, cols])
+
+
+def trace_registered_paths(formats: Optional[List[str]] = None,
+                           dtypes=("float32", "bfloat16"),
+                           ks=(1, 8), with_sharded: bool = True):
+    """Yield ``(site, thunk)`` pairs; each thunk returns a ClosedJaxpr."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..autotune.registry import available_formats, build_format, \
+        get_format
+
+    m = _probe_matrix()
+    for fmt in (formats or available_formats()):
+        spec = get_format(fmt)
+        for dt_name in dtypes:
+            dt = jnp.dtype(dt_name)
+            shared: dict = {}
+            obj, apply = build_format(fmt, m, dt, shared)
+            for k in ks:
+                shape = (m.n,) if k == 1 else (m.n, k)
+                site = f"{fmt}:apply:{dt_name}:k{k}"
+                yield site, (lambda a=apply, o=obj, s=shape, d=dt:
+                             jax.make_jaxpr(lambda x: a(o, x))(
+                                 jnp.zeros(s, d)))
+            if spec.permuted is not None:
+                n_pad = obj.n_pad
+                site = f"{fmt}:permuted:{dt_name}:k1"
+                yield site, (lambda p=spec.permuted, o=obj, np_=n_pad,
+                             d=dt: jax.make_jaxpr(lambda x: p(o, x))(
+                                 jnp.zeros((np_,), d)))
+    if with_sharded and len(jax.devices()) >= 2:
+        import repro.api as api
+
+        nd = 2
+        mesh = jax.make_mesh((nd,), ("data",))
+        from ..api.config import ExecutionConfig
+
+        p = api.plan(m, mesh=mesh,
+                     execution=ExecutionConfig(format="ehyb"))
+        tpl = p._any_template()
+        site = "ehyb:sharded:float32:k1"
+        yield site, (lambda t=tpl, m_=m:
+                     jax.make_jaxpr(lambda x: t.apply(t.obj, x))(
+                         np.zeros((m_.n,), np.float32)))
+
+
+def run_jaxpr_lint(formats: Optional[List[str]] = None,
+                   with_sharded: bool = True) -> List[Finding]:
+    """Trace + lint every registered apply path; the CI entry point."""
+    out: List[Finding] = []
+    for site, thunk in trace_registered_paths(formats,
+                                              with_sharded=with_sharded):
+        try:
+            closed = thunk()
+        except Exception as e:  # noqa: BLE001 — any trace failure is itself
+            # the reportable defect; the finding carries the cause
+            out.append(Finding("error", site, "trace-failure",
+                               f"{type(e).__name__}: {e}"))
+            continue
+        out += lint_jaxpr(closed, site)
+    return out

@@ -1,0 +1,291 @@
+"""Repo source lint (static analysis pass 3 of 3) — AST-based.
+
+Repo-specific rules the generic linters don't know:
+
+  BLE001   ``except Exception`` without a ``# noqa: BLE001 — why`` tag on
+           the except line.  Broad handlers are sometimes right (capability
+           probes, best-effort cache clears) but each one must say why —
+           and because ``Exception`` excludes ``BaseException``, a tagged
+           handler still re-raises KeyboardInterrupt/SystemExit.
+  BLE002   bare ``except:`` or ``except BaseException`` — swallows
+           KeyboardInterrupt/SystemExit; never acceptable, no tag honored.
+  JNP001   module/class-scope ``jnp.*``/``jax.numpy`` computation — runs at
+           import, initializes a backend before the caller configures one,
+           and breaks ``XLA_FLAGS``-dependent tests.
+  DEP001   deprecated shim entry points referenced inside ``src/``
+           (``build_spmv``/``spmv``/``solve_cg`` wrappers, the
+           ``core.dist_spmv`` forwarding module, ``from_dense``) — new code
+           goes through the Operator API v2; shims exist for external
+           callers only.
+  PYT001   a pytree ``tree_flatten`` whose aux element is a list/dict/set
+           literal — aux data is hashed by jit cache keys; unhashable aux
+           raises at trace time, and mutable aux silently fractures caches.
+  JIT001   wall-clock calls (``time.time``/``perf_counter``/
+           ``datetime.now``) inside a ``@jax.jit``-decorated function — the
+           clock is read once at trace time and burned into the graph.
+
+A trailing ``# noqa: <RULE>`` comment on the offending line suppresses
+that rule (BLE002 excepted); the committed baseline ratchets the rest.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import List, Optional
+
+from .findings import Finding
+
+__all__ = ["lint_source", "lint_file", "run_source_lint"]
+
+_NOQA = re.compile(r"#\s*noqa:\s*([A-Z]+\d+)")
+
+# deprecated entry points (module path -> names it legitimately defines);
+# any OTHER src/ module referencing a name is flagged
+_DEPRECATED = {
+    "spmv": "repro.core.spmv",
+    "build_spmv": "repro.core.spmv",
+    "build_dist_spmv": "repro.core.dist_spmv",
+    "build_sharded_spmv": "repro.core.dist_spmv",
+    "build_allgather_spmv": "repro.core.dist_spmv",
+    "from_dense": "repro.core.sparse_linear",
+}
+_DEPRECATED_MODULES = {"repro.core.dist_spmv"}
+
+_CLOCK_CALLS = {
+    ("time", "time"), ("time", "perf_counter"), ("time", "monotonic"),
+    ("time", "process_time"), ("datetime", "now"), ("datetime", "utcnow"),
+}
+
+
+def _suppressed(lines: List[str], lineno: int, rule: str) -> bool:
+    if 1 <= lineno <= len(lines):
+        return rule in _NOQA.findall(lines[lineno - 1])
+    return False
+
+
+def _is_exception_name(node) -> Optional[str]:
+    """'Exception'/'BaseException' if the except clause catches one."""
+    targets = [node] if not isinstance(node, ast.Tuple) else list(node.elts)
+    for t in targets:
+        name = t.id if isinstance(t, ast.Name) else (
+            t.attr if isinstance(t, ast.Attribute) else None)
+        if name in ("Exception", "BaseException"):
+            return name
+    return None
+
+
+def _dotted(node) -> Optional[str]:
+    """'a.b.c' for an attribute/name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, site: str, lines: List[str], module: str):
+        self.site = site
+        self.lines = lines
+        self.module = module
+        self.out: List[Finding] = []
+        self._func_depth = 0
+        self._jit_depth = 0
+        self._jnp_names = {"jnp"}      # local aliases of jax.numpy
+
+    def _emit(self, node, rule: str, severity: str, msg: str,
+              taggable: bool = True) -> None:
+        if taggable and _suppressed(self.lines, node.lineno, rule):
+            return
+        self.out.append(Finding(severity, f"{self.site}:{node.lineno}",
+                                rule, msg))
+
+    # ---- imports: track jnp aliases, catch deprecated shims ---------------
+
+    def visit_Import(self, node):
+        for a in node.names:
+            if a.name == "jax.numpy":
+                self._jnp_names.add(a.asname or "jax")
+            if a.name in _DEPRECATED_MODULES \
+                    and self.module not in _DEPRECATED_MODULES:
+                self._emit(node, "DEP001", "error",
+                           f"import of deprecated module {a.name!r}; use "
+                           f"the Operator API v2 (repro.api / repro.dist)")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node):
+        mod = node.module or ""
+        abs_mod = self._absolutize(mod, node.level)
+        if abs_mod in _DEPRECATED_MODULES \
+                and self.module not in _DEPRECATED_MODULES:
+            self._emit(node, "DEP001", "error",
+                       f"import from deprecated module {abs_mod!r}; use "
+                       f"the Operator API v2 (repro.api / repro.dist)")
+        for a in node.names:
+            if mod == "jax" and a.name == "numpy":
+                self._jnp_names.add(a.asname or "numpy")
+            if f"{abs_mod}.{a.name}" in _DEPRECATED_MODULES \
+                    and self.module not in _DEPRECATED_MODULES:
+                self._emit(node, "DEP001", "error",
+                           f"import of deprecated module "
+                           f"{abs_mod}.{a.name!r}; use the Operator API "
+                           f"v2 (repro.api / repro.dist)")
+                continue
+            home = _DEPRECATED.get(a.name)
+            if home is not None and abs_mod == home \
+                    and self.module != home:
+                self._emit(node, "DEP001", "error",
+                           f"import of deprecated entry point "
+                           f"{a.name!r} from {home}; new src/ code goes "
+                           f"through the Operator API v2")
+        self.generic_visit(node)
+
+    def _absolutize(self, mod: str, level: int) -> str:
+        if level == 0:
+            return mod
+        parts = self.module.split(".")
+        base = parts[: len(parts) - level]
+        return ".".join(base + ([mod] if mod else [])).rstrip(".")
+
+    # ---- broad excepts ----------------------------------------------------
+
+    def visit_ExceptHandler(self, node):
+        if node.type is None:
+            self._emit(node, "BLE002", "error",
+                       "bare except: swallows KeyboardInterrupt/SystemExit"
+                       " — catch Exception (tagged) instead",
+                       taggable=False)
+        else:
+            which = _is_exception_name(node.type)
+            if which == "BaseException":
+                self._emit(node, "BLE002", "error",
+                           "except BaseException swallows "
+                           "KeyboardInterrupt/SystemExit — catch "
+                           "Exception (tagged) instead", taggable=False)
+            elif which == "Exception":
+                self._emit(node, "BLE001", "error",
+                           "broad `except Exception` without a "
+                           "`# noqa: BLE001 — why` justification tag")
+        self.generic_visit(node)
+
+    # ---- module-scope jnp computation ------------------------------------
+
+    def visit_Call(self, node):
+        dotted = _dotted(node.func)
+        if dotted is not None:
+            root = dotted.split(".")[0]
+            if self._func_depth == 0 and (
+                    root in self._jnp_names or
+                    dotted.startswith("jax.numpy.")):
+                self._emit(node, "JNP001", "error",
+                           f"module-scope jnp computation "
+                           f"({dotted}(...)) runs at import and pins the "
+                           f"backend before callers configure it")
+            if self._jit_depth > 0:
+                tail = tuple(dotted.split(".")[-2:])
+                if tail in _CLOCK_CALLS:
+                    self._emit(node, "JIT001", "error",
+                               f"wall-clock call {dotted}() inside a "
+                               f"jitted function is read once at trace "
+                               f"time and burned into the graph")
+        self.generic_visit(node)
+
+    # ---- function context -------------------------------------------------
+
+    def _visit_func(self, node):
+        jitted = any("jit" in (_dotted(d) or _dotted(getattr(d, "func", d))
+                               or "")
+                     for d in node.decorator_list)
+        self._func_depth += 1
+        self._jit_depth += 1 if jitted else 0
+        if node.name == "tree_flatten":
+            self._check_tree_flatten(node)
+        self.generic_visit(node)
+        self._jit_depth -= 1 if jitted else 0
+        self._func_depth -= 1
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_Lambda(self, node):
+        self._func_depth += 1
+        self.generic_visit(node)
+        self._func_depth -= 1
+
+    # ---- pytree aux hashability ------------------------------------------
+
+    def _check_tree_flatten(self, node):
+        assigned = {}
+        for stmt in ast.walk(node):
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                assigned[stmt.targets[0].id] = stmt.value
+        for stmt in ast.walk(node):
+            if not isinstance(stmt, ast.Return) or stmt.value is None:
+                continue
+            val = stmt.value
+            if not (isinstance(val, ast.Tuple) and len(val.elts) == 2):
+                continue
+            aux = val.elts[1]
+            if isinstance(aux, ast.Name):
+                aux = assigned.get(aux.id, aux)
+            elts = aux.elts if isinstance(aux, ast.Tuple) else [aux]
+            for e in elts:
+                if isinstance(e, (ast.List, ast.Dict, ast.Set,
+                                  ast.ListComp, ast.DictComp, ast.SetComp)):
+                    self._emit(e, "PYT001", "error",
+                               "pytree aux element is an unhashable "
+                               "list/dict/set literal — jit cache keys "
+                               "hash aux data; use tuples")
+
+
+def lint_source(src: str, site: str,
+                module: str = "") -> List[Finding]:
+    """Lint one source string (``site`` labels findings, ``module`` is the
+    dotted module path used by the DEP001 defining-module exemption)."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding("error", f"{site}:{e.lineno or 0}", "syntax",
+                        f"unparsable source: {e.msg}")]
+    v = _Visitor(site, src.splitlines(), module)
+    v.visit(tree)
+    return v.out
+
+
+def lint_file(path, rel_to=None, module: Optional[str] = None
+              ) -> List[Finding]:
+    path = Path(path)
+    site = str(path.relative_to(rel_to)) if rel_to else str(path)
+    if module is None:
+        parts = list(path.with_suffix("").parts)
+        if "repro" in parts:
+            module = ".".join(parts[parts.index("repro"):])
+            if module.endswith(".__init__"):
+                module = module[: -len(".__init__")]
+        else:
+            module = path.stem
+    return lint_source(path.read_text(), site, module)
+
+
+def _repo_root() -> Path:
+    return Path(__file__).resolve().parents[3]
+
+
+def run_source_lint(root=None) -> List[Finding]:
+    """Lint every Python file under ``src/`` (plus ``benchmarks/``); the CI
+    entry point."""
+    root = Path(root) if root else _repo_root()
+    out: List[Finding] = []
+    for sub in ("src", "benchmarks"):
+        base = root / sub
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            out += lint_file(path, rel_to=root)
+    return out

@@ -308,7 +308,7 @@ class Plan:
                 f"(pass validate=False to bind anyway)")
 
     def bind(self, values, *, dtype=None,
-             validate: bool = True) -> "LinearOperator":
+             validate=True) -> "LinearOperator":
         """Bind entry values to the planned structure -> LinearOperator.
 
         ``values`` is a :class:`SparseCSR` on this plan's pattern or a
@@ -321,7 +321,11 @@ class Plan:
         ``validate=True`` (default) rejects non-finite values and
         out-of-range column indices at the boundary (concrete binds only —
         traced values cannot be host-inspected); ``validate=False`` opts
-        out for callers that stage NaN payloads deliberately.
+        out for callers that stage NaN payloads deliberately;
+        ``validate="full"`` additionally runs the format's complete static
+        verifier (``repro.analysis.verify``) on the bound operator —
+        permutation bijectivity, staircase/padding discipline, fill-plan
+        and halo conservation laws — and raises on any error finding.
         """
         from .operator import LinearOperator
 
@@ -339,6 +343,16 @@ class Plan:
         op._dtype = jnp.dtype(dtype)
         op._csr = csr
         op._values = data
+        if validate == "full":
+            from ..analysis import errors, verify
+
+            bad = errors(verify(op))
+            if bad:
+                detail = "; ".join(str(f) for f in bad[:4])
+                raise ValueError(
+                    f"bind(validate='full'): {len(bad)} invariant "
+                    f"violation(s) in the bound {self.format!r} container: "
+                    f"{detail}")
         return op
 
     def _template_for(self, dtype, csr: Optional[SparseCSR] = None):

@@ -72,6 +72,14 @@ class FormatSpec:
     # megakernel.  None = the chain goes native -> reference directly.
     fallback: Optional[Callable] = None
     fallback_permuted: Optional[Callable] = None
+    # static verification hook (analysis.invariants): ``invariants(obj) ->
+    # list[Finding]`` checks the format's structural invariants on a built
+    # device container — index bounds, permutation bijectivity, staircase
+    # monotonicity, padding discipline.  ``repro.analysis.verify`` routes
+    # operators through it, so a format registered with a hook is covered
+    # by ``Plan.bind(validate="full")``, ``benchmarks/run.py --verify`` and
+    # the corruption regression suite without touching the verifier.
+    invariants: Optional[Callable] = None
 
 
 FORMATS: Dict[str, FormatSpec] = {}
@@ -409,18 +417,29 @@ def _model_dense(m, stats, vb, shared, context: str = "spmv",
     return stats.n * stats.n * vb + k * 2 * stats.n * vb
 
 
+def _invariants_hook(name: str) -> Callable:
+    """Default ``invariants`` hook: delegate to the built-in per-format
+    checkers in ``repro.analysis.invariants`` (lazy import — the registry
+    stays importable without pulling the analysis subsystem)."""
+    def run(obj):
+        from ..analysis.invariants import format_invariants
+
+        return format_invariants(name, obj)
+    return run
+
+
 register_format(FormatSpec(
     "csr", _build_csr, _model_csr,
     description="COO/CSR gather + segment-sum stream (paper's baseline)",
-    refill=_refill_csr))
+    refill=_refill_csr, invariants=_invariants_hook("csr")))
 register_format(FormatSpec(
     "ell", _build_ell, _model_ell,
     description="ELLPACK padded to the global max row width",
-    refill=_refill_ell))
+    refill=_refill_ell, invariants=_invariants_hook("ell")))
 register_format(FormatSpec(
     "hyb", _build_hyb, _model_hyb,
     description="classic HYB (Bell & Garland): ELL to 90th pct + COO spill",
-    refill=_refill_hyb))
+    refill=_refill_hyb, invariants=_invariants_hook("hyb")))
 def _shard_ehyb(op, mesh, axis, csr=None):
     """The EHYB family's ``shard`` hook: lift onto a mesh via the halo-plan
     subsystem (lazy import — the registry stays importable without jax
@@ -436,20 +455,22 @@ def _shard_ehyb(op, mesh, axis, csr=None):
 register_format(FormatSpec(
     "ehyb", _build_ehyb, _model_ehyb,
     description="EHYB uniform tiles, uint16 local cols, explicit x cache",
-    permuted=ehyb_spmv_permuted, refill=_refill_ehyb, shard=_shard_ehyb))
+    permuted=ehyb_spmv_permuted, refill=_refill_ehyb, shard=_shard_ehyb,
+    invariants=_invariants_hook("ehyb")))
 register_format(FormatSpec(
     "ehyb_bucketed", _build_ehyb_bucketed, _model_ehyb_bucketed,
     description="EHYB with width-bucketed partition tiles",
     permuted=ehyb_buckets_spmv_permuted, refill=_refill_ehyb_bucketed,
-    shard=_shard_ehyb))
+    shard=_shard_ehyb, invariants=_invariants_hook("ehyb_bucketed")))
 register_format(FormatSpec(
     "ehyb_packed", _build_ehyb_packed, _model_ehyb_packed,
     kernel="pallas-interpret",
     description="EHYB packed staircase (fused Pallas megakernel v2)",
     permuted=_packed_permuted, refill=_refill_ehyb_packed,
     shard=_shard_ehyb,
-    fallback=_packed_unfused, fallback_permuted=_packed_unfused_permuted))
+    fallback=_packed_unfused, fallback_permuted=_packed_unfused_permuted,
+    invariants=_invariants_hook("ehyb_packed")))
 register_format(FormatSpec(
     "dense", _build_dense, _model_dense,
     description="dense matmul (wins only on tiny/near-dense matrices)",
-    refill=_refill_dense))
+    refill=_refill_dense, invariants=_invariants_hook("dense")))

@@ -1,0 +1,456 @@
+"""Static-analysis subsystem tests (repro.analysis).
+
+Three legs:
+
+* corruption-detection regressions — seed one structural corruption per
+  format container (OOB uint16 col, non-bijective perm, stale fill_plan,
+  duplicate y-push row, ...) and assert ``verify``/``verify_plan`` reports
+  the *exact* rule;
+* clean-pass sweep — all registered formats × a representative slice of
+  the standard matrix suite produce zero findings (no false positives);
+* the jaxpr sanitizer and source lint on synthetic programs/snippets, plus
+  the repo's own source as a self-check.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis import Finding, errors, summarize, verify, verify_plan
+from repro.analysis.invariants import check_halo_plan
+from repro.analysis.jaxpr_lint import _probe_matrix, lint_jaxpr
+from repro.analysis.source_lint import lint_source, run_source_lint
+from repro.core import SUITE, build_ehyb
+from repro.core.ehyb import build_buckets, pack_staircase
+from repro.core.matrices import from_coo
+from repro.dist.halo import build_halo_plan
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+@pytest.fixture(scope="module")
+def m():
+    return _probe_matrix()
+
+
+@pytest.fixture(scope="module")
+def e(m):
+    return build_ehyb(m, n_parts=4, vec_size=16)
+
+
+# ---------------------------------------------------------------------------
+# findings record
+# ---------------------------------------------------------------------------
+
+def test_finding_record():
+    f = Finding("error", "EHYB.ell_cols", "index-bound.ell-local", "boom")
+    assert "index-bound.ell-local" in str(f) and "[error]" in str(f)
+    with pytest.raises(ValueError):
+        Finding("fatal", "x", "r", "m")
+    fs = [f, Finding("warning", "y", "bf16-accum", "w"),
+          Finding("info", "z", "note", "n")]
+    assert errors(fs) == [f]
+    assert summarize(fs) == {"bf16-accum": 1, "index-bound.ell-local": 1,
+                             "note": 1}
+
+
+# ---------------------------------------------------------------------------
+# corruption regressions: host EHYB family
+# ---------------------------------------------------------------------------
+
+def test_detects_oob_uint16_col(e):
+    bad = dataclasses.replace(e, ell_cols=e.ell_cols.copy())
+    bad.ell_cols[0, 0, 0] = e.vec_size          # one past the tile edge
+    assert "index-bound.ell-local" in rules_of(verify(bad))
+
+
+def test_detects_oob_er_global_col(e):
+    bad = dataclasses.replace(e, er_cols=e.er_cols.copy())
+    assert bad.er_cols.size, "probe matrix must have ER rows"
+    bad.er_cols.reshape(-1)[0] = e.n_pad
+    assert "index-bound.er-global" in rules_of(verify(bad))
+
+
+def test_detects_non_bijective_perm(e):
+    p = e.perm.copy()
+    p[1] = p[0]
+    assert "perm-bijection" in rules_of(verify(dataclasses.replace(e,
+                                                                   perm=p)))
+
+
+def test_detects_swapped_inverse(e):
+    # both are bijections but not mutual inverses
+    q = np.roll(e.inv_perm, 1)
+    assert "perm-bijection" in rules_of(
+        verify(dataclasses.replace(e, inv_perm=q)))
+
+
+def test_detects_stale_fill_plan(e):
+    fp = dict(e.fill_plan)
+    fp["ell_src"] = fp["ell_src"].copy()
+    fp["ell_src"][0] = fp["ell_src"][1]         # entry duplicated, one lost
+    assert "fill-plan-bijection" in rules_of(
+        verify(dataclasses.replace(e, fill_plan=fp)))
+
+
+def test_detects_duplicate_fill_dst(e):
+    fp = dict(e.fill_plan)
+    fp["ell_dst"] = fp["ell_dst"].copy()
+    fp["ell_dst"][0] = fp["ell_dst"][1]
+    assert "fill-plan-bijection" in rules_of(
+        verify(dataclasses.replace(e, fill_plan=fp)))
+
+
+def test_detects_padding_violation(e):
+    ev = e.ell_vals.copy()
+    ev[-1, -1, -1] = 7.0                        # dead slot made nonzero
+    assert "padding-sentinel" in rules_of(
+        verify(dataclasses.replace(e, ell_vals=ev)))
+
+
+def test_detects_width_tampering(e):
+    pw = e.part_widths.copy()
+    pw[0] += 1
+    assert "width-consistency" in rules_of(
+        verify(dataclasses.replace(e, part_widths=pw)))
+
+
+def test_detects_nonfinite_values(e):
+    ev = e.ell_vals.copy()
+    live = np.argwhere(ev != 0)[0]
+    ev[tuple(live)] = np.nan
+    assert "value-finite" in rules_of(
+        verify(dataclasses.replace(e, ell_vals=ev)))
+
+
+def test_detects_broken_staircase(e):
+    pk = pack_staircase(e)
+    cr = pk.col_rows.copy()
+    p = int(np.argmax(cr[:, 0] >= 2))
+    cr[p, 0], cr[p, 1] = cr[p, 1], cr[p, 0] + 1  # widths increase in k
+    cs = np.zeros_like(pk.col_starts)
+    cs[:, 1:] = np.cumsum(cr, axis=1)            # keep starts consistent
+    bad = dataclasses.replace(pk, col_rows=cr, col_starts=cs)
+    assert "staircase-monotone" in rules_of(verify(bad))
+
+
+def test_detects_bucket_cover_violation(e):
+    b = build_buckets(e)
+    ids = [c.copy() for c in b.part_ids]
+    donor = next(i for i, c in enumerate(ids) if len(c))
+    ids[donor][0] = ids[donor][-1] if len(ids[donor]) > 1 else \
+        (ids[donor][0] + 1) % e.n_parts
+    bad = dataclasses.replace(b, part_ids=ids)
+    assert "bucket-cover" in rules_of(verify(bad))
+
+
+# ---------------------------------------------------------------------------
+# corruption regressions: device containers (all 7 registered formats)
+# ---------------------------------------------------------------------------
+
+def _built(fmt, m):
+    from repro.autotune import build_format
+
+    obj, _ = build_format(fmt, m, shared={})
+    return obj
+
+
+def test_detects_stream_oob_csr(m):
+    import jax.numpy as jnp
+
+    d = _built("csr", m)
+    bad = dataclasses.replace(d, cols=jnp.asarray(d.cols).at[0].set(m.n))
+    assert "index-bound.stream" in rules_of(verify(bad))
+
+
+def test_detects_stream_oob_ell(m):
+    import jax.numpy as jnp
+
+    d = _built("ell", m)
+    bad = dataclasses.replace(d, cols=jnp.asarray(d.cols).at[0, 0].set(-1))
+    assert "index-bound.stream" in rules_of(verify(bad))
+
+
+def test_detects_stream_oob_hyb(m):
+    import jax.numpy as jnp
+
+    d = _built("hyb", m)
+    bad = dataclasses.replace(
+        d, coo_rows=jnp.asarray(d.coo_rows).at[0].set(m.n))
+    assert "index-bound.stream" in rules_of(verify(bad))
+
+
+def test_detects_device_ehyb_oob(m):
+    import jax.numpy as jnp
+
+    d = _built("ehyb", m)
+    bad = dataclasses.replace(
+        d, ell_cols=jnp.asarray(d.ell_cols).at[0, 0, 0].set(d.vec_size))
+    assert "index-bound.ell-local" in rules_of(verify(bad))
+    bad2 = dataclasses.replace(
+        d, er_p_rows=jnp.asarray(d.er_p_rows).at[0, 0].set(d.vec_size))
+    assert "index-bound.er-global" in rules_of(verify(bad2))
+
+
+def test_detects_device_packed_corruption(m):
+    import jax.numpy as jnp
+
+    d = _built("ehyb_packed", m)
+    bad = dataclasses.replace(
+        d, packed_cols=jnp.asarray(d.packed_cols).at[0, 0].set(d.vec_size))
+    assert "index-bound.ell-local" in rules_of(verify(bad))
+
+
+def test_detects_device_buckets_corruption(m):
+    import jax.numpy as jnp
+
+    d = _built("ehyb_bucketed", m)
+    ids = tuple(jnp.asarray(c) for c in d.part_ids)
+    donor = next(i for i, c in enumerate(ids) if c.size)
+    repl = ids[donor].at[0].set(int(ids[donor][-1]) if ids[donor].size > 1
+                                else (int(ids[donor][0]) + 1) % d.n_parts)
+    bad = dataclasses.replace(
+        d, part_ids=ids[:donor] + (repl,) + ids[donor + 1:])
+    assert "bucket-cover" in rules_of(verify(bad))
+
+
+def test_detects_dense_corruption(m):
+    import jax.numpy as jnp
+
+    d = _built("dense", m)
+    assert "value-finite" in rules_of(
+        verify(d.at[0, 0].set(jnp.nan)))
+    assert "width-consistency" in rules_of(verify(d[:, :-1]))
+
+
+# ---------------------------------------------------------------------------
+# corruption regressions: halo plan conservation laws
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def hp(e):
+    return build_halo_plan(e, 4)
+
+
+def test_halo_plan_clean(hp, e):
+    assert check_halo_plan(hp, e) == []
+
+
+def test_detects_duplicate_push_row(hp, e):
+    d = next(d for d in range(hp.n_dev) if hp.counts_push[d].sum() >= 2)
+    rr = hp.rp_rows.copy()
+    rr[d, 1] = rr[d, 0]                 # two scatter-adds on one row
+    bad = dataclasses.replace(hp, rp_rows=rr)
+    assert "halo-push-race" in rules_of(check_halo_plan(bad, e))
+
+
+def test_detects_word_accounting_drift(hp, e):
+    bad = dataclasses.replace(hp, halo_words=hp.halo_words + 1)
+    assert rules_of(check_halo_plan(bad, e)) == {"halo-accounting"}
+
+
+def test_detects_dropped_coverage(hp, e):
+    assert len(hp.fer_src), "probe matrix must have fetch-side entries"
+    bad = dataclasses.replace(hp, fer_src=hp.fer_src[:-1],
+                              fer_dst=hp.fer_dst[:-1])
+    assert "halo-coverage" in rules_of(check_halo_plan(bad, e))
+
+
+def test_detects_tampered_send_schedule(hp, e):
+    pair = np.argwhere((np.asarray(hp.direction) == 1)
+                       & (np.asarray(hp.counts_fetch) > 0))
+    assert len(pair), "probe matrix must have fetch pairs"
+    d, s = pair[0]
+    si = hp.send_idx.copy()
+    si[s, d, 0] += 1                    # fetch the wrong column
+    bad = dataclasses.replace(hp, send_idx=si)
+    assert "halo-coverage" in rules_of(check_halo_plan(bad, e))
+
+
+def test_halo_plan_without_source_is_info_only(hp):
+    fs = check_halo_plan(hp)
+    assert errors(fs) == []
+    assert any(f.severity == "info" for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# clean-pass sweep: zero false positives over formats × suite
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["poisson3d_16", "unstruct_4k",
+                                  "powerlaw_4k"])
+def test_clean_sweep_suite(name):
+    from repro.autotune import available_formats, build_format
+
+    from repro.autotune.registry import shared_ehyb
+
+    mat = SUITE[name]()
+    shared = {}
+    e = shared_ehyb(mat, shared)    # one family-wide host build
+    for fmt in available_formats():
+        obj, _ = build_format(fmt, mat, shared=shared)
+        assert verify(obj) == [], f"false positive: {fmt} on {name}"
+    for n_dev in (2, 4):
+        assert check_halo_plan(build_halo_plan(e, n_dev), e) == []
+
+
+def test_operator_and_plan_verify_clean(m):
+    import repro.api as api
+    from repro.api.config import ExecutionConfig
+    from repro.autotune import available_formats
+
+    for fmt in available_formats():
+        p = api.plan(m, execution=ExecutionConfig(format=fmt))
+        op = p.bind(m.data, validate="full")    # raises on error findings
+        assert verify(op) == []
+        assert verify_plan(p) == []
+
+
+def test_bind_full_rejects_corrupt_container(m, monkeypatch):
+    import repro.api as api
+    from repro.api.config import ExecutionConfig
+    from repro.autotune import FORMATS
+
+    p = api.plan(m, execution=ExecutionConfig(format="ehyb"))
+    spec = FORMATS["ehyb"]          # frozen: swap the registry entry
+    monkeypatch.setitem(
+        FORMATS, "ehyb", dataclasses.replace(
+            spec, invariants=lambda obj: [
+                Finding("error", "EHYBDevice", "perm-bijection",
+                        "seeded")]))
+    with pytest.raises(ValueError, match="perm-bijection"):
+        p.bind(m.data, validate="full")
+    # default bind keeps only the cheap checks — unaffected by the hook
+    p.bind(m.data)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr sanitizer
+# ---------------------------------------------------------------------------
+
+def test_jaxpr_flags_host_callback():
+    import jax
+    import jax.numpy as jnp
+
+    def f(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v), jax.ShapeDtypeStruct(x.shape, x.dtype),
+            x)
+
+    closed = jax.make_jaxpr(f)(jnp.zeros(4))
+    assert "host-callback" in rules_of(lint_jaxpr(closed, "t"))
+
+
+def test_jaxpr_flags_bf16_accumulation():
+    import jax
+    import jax.numpy as jnp
+
+    closed = jax.make_jaxpr(lambda a, b: a @ b)(
+        jnp.zeros((4, 4), jnp.bfloat16), jnp.zeros((4, 4), jnp.bfloat16))
+    fs = lint_jaxpr(closed, "t")
+    assert "bf16-accum" in rules_of(fs)
+    assert all(f.severity == "warning" for f in fs)
+
+
+def test_jaxpr_accepts_f32_accumulation():
+    import jax
+    import jax.numpy as jnp
+
+    def f(a, b):
+        return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    closed = jax.make_jaxpr(f)(jnp.zeros((4, 4), jnp.bfloat16),
+                               jnp.zeros((4, 4), jnp.bfloat16))
+    assert lint_jaxpr(closed, "t") == []
+
+
+def test_jaxpr_flags_oversized_const():
+    import jax
+    import jax.numpy as jnp
+
+    big = jnp.zeros((64, 1024))                 # 256 KiB closure constant
+    closed = jax.make_jaxpr(lambda x: x + big)(jnp.zeros((64, 1024)))
+    assert "oversized-const" in rules_of(lint_jaxpr(closed, "t"))
+
+
+def test_jaxpr_sweep_registered_formats_has_no_errors():
+    from repro.analysis.jaxpr_lint import run_jaxpr_lint
+
+    fs = run_jaxpr_lint(formats=["ehyb", "ehyb_packed"],
+                        with_sharded=False)
+    assert errors(fs) == []                     # warnings ride the baseline
+
+
+# ---------------------------------------------------------------------------
+# source lint
+# ---------------------------------------------------------------------------
+
+def test_lint_broad_except():
+    src = ("try:\n    pass\n"
+           "except Exception:\n    pass\n")
+    assert rules_of(lint_source(src, "t.py")) == {"BLE001"}
+    tagged = ("try:\n    pass\n"
+              "except Exception:  # noqa: BLE001 — probe\n    pass\n")
+    assert lint_source(tagged, "t.py") == []
+
+
+def test_lint_bare_except_never_taggable():
+    src = ("try:\n    pass\n"
+           "except:  # noqa: BLE002\n    pass\n")
+    assert rules_of(lint_source(src, "t.py")) == {"BLE002"}
+    src2 = ("try:\n    pass\n"
+            "except BaseException:\n    raise\n")
+    assert rules_of(lint_source(src2, "t.py")) == {"BLE002"}
+
+
+def test_lint_module_scope_jnp():
+    src = ("import jax.numpy as jnp\n"
+           "TABLE = jnp.arange(8)\n")
+    assert rules_of(lint_source(src, "t.py")) == {"JNP001"}
+    ok = ("import jax.numpy as jnp\n"
+          "def f():\n    return jnp.arange(8)\n")
+    assert lint_source(ok, "t.py") == []
+
+
+def test_lint_deprecated_shims():
+    src = "from repro.core.spmv import build_spmv\n"
+    assert rules_of(lint_source(src, "t.py", "repro.other")) == {"DEP001"}
+    src2 = "from repro.core import dist_spmv\n"
+    assert rules_of(lint_source(src2, "t.py", "repro.other")) == {"DEP001"}
+    # the defining module itself is exempt
+    assert lint_source(src, "t.py", "repro.core.spmv") == []
+
+
+def test_lint_unhashable_pytree_aux():
+    src = ("class C:\n"
+           "    def tree_flatten(self):\n"
+           "        return (self.x,), [self.n]\n")
+    assert rules_of(lint_source(src, "t.py")) == {"PYT001"}
+    ok = ("class C:\n"
+          "    def tree_flatten(self):\n"
+          "        aux = (self.n, self.widths)\n"
+          "        return (self.x,), aux\n")
+    assert lint_source(ok, "t.py") == []
+
+
+def test_lint_wallclock_under_jit():
+    src = ("import time\nimport jax\n"
+           "@jax.jit\n"
+           "def f(x):\n"
+           "    t = time.perf_counter()\n"
+           "    return x + t\n")
+    assert rules_of(lint_source(src, "t.py")) == {"JIT001"}
+    ok = ("import time\n"
+          "def g(x):\n"
+          "    return time.perf_counter()\n")
+    assert lint_source(ok, "t.py") == []
+
+
+def test_repo_source_is_lint_clean():
+    """The committed source baseline is empty: src/ + benchmarks/ carry no
+    untagged broad excepts, module-scope jnp work, deprecated-shim use,
+    unhashable pytree aux, or wall-clock-under-jit."""
+    assert run_source_lint() == []

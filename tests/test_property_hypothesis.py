@@ -68,6 +68,25 @@ def test_partition_is_a_bijection(m):
     assert np.array_equal(np.sort(p.inv_perm), np.arange(p.n_pad))
 
 
+@given(sparse_matrix(max_n=80))
+@settings(max_examples=15, deadline=None)
+def test_random_build_verifies_clean(m):
+    """∀ sparse A: the built containers satisfy every static invariant and
+    the halo plan's conservation laws hold (repro.analysis)."""
+    from repro.analysis import errors, verify, verify_plan
+    from repro.core.ehyb import build_buckets, pack_staircase
+    from repro.dist.halo import build_halo_plan
+
+    e = build_ehyb(m, n_parts=4, vec_size=-(-m.n // 4 // 8) * 8)
+    assert verify(e) == []
+    assert verify(pack_staircase(e)) == []
+    assert verify(build_buckets(e)) == []
+    assert verify(EHYBDevice.from_ehyb(e)) == []
+    for n_dev in (2, 4):
+        hp = build_halo_plan(e, n_dev)
+        assert errors(verify_plan(hp, e)) == []
+
+
 @given(st.integers(0, 2**31 - 1))
 @settings(max_examples=10, deadline=None)
 def test_cg_solves_spd_system(seed):
