@@ -1,0 +1,113 @@
+"""Partition-strategy quality sweep (kind:"partition").
+
+For every suite matrix × registered partition strategy this module records
+the pattern-level locality numbers the autotuner prices:
+
+* ``in_part_fraction``   — share of x-reads served from the explicit VMEM
+                           cache (the paper's primary locality metric);
+* ``ell_width`` / ``er_*`` — the sliced-ELL width and ER spill shape the
+                           partition induces (tile padding vs scatter);
+* ``modeled_bytes_solver`` — ``partition_cost`` total for one permuted-space
+                           hot-loop iteration (the local selection ranking);
+* ``halo_words_{4,8}``   — scheduled exchange payload over 4/8 virtual
+                           devices (``partition_halo_words``, the dist
+                           selection's interconnect term);
+* ``partition_seconds``  — host partitioning time (preprocessing budget).
+
+On top of the per-strategy table it runs ``autotune_partition`` in both the
+local (solver) and distributed contexts, marks the winners in the records,
+and **gates** the selection: the chosen strategy's in-partition fraction
+must never fall below ``natural``'s — the tuner's cached-read-share floor —
+and must beat ``bfs``'s on at least one suite matrix (the point of growing
+the registry).  A violation raises, failing the bench-smoke CI job.
+
+``main()`` returns the records ``benchmarks/run.py`` commits to
+``BENCH_spmv.json``.  Pure host-side numpy — no device work.
+"""
+
+from __future__ import annotations
+
+DEFAULT_MATRICES = ("poisson3d_16", "poisson27_12", "elasticity_8",
+                    "unstruct_4k", "unstruct_8k", "powerlaw_4k",
+                    "powerlaw_8k", "rmat_4k", "rmat_8k", "circuit_4k")
+QUICK_MATRICES = ("poisson3d_16", "unstruct_4k", "powerlaw_4k", "rmat_4k",
+                  "circuit_4k")
+DEFAULT_NDEV = (4, 8)
+QUICK_NDEV = (4,)
+
+
+def main(quick: bool = False) -> list:
+    from repro.autotune import autotune_partition, partition_cost
+    from repro.core import SUITE
+    from repro.core.partition import (available_strategies, choose_vec_size,
+                                      make_partition)
+    from repro.dist.halo import partition_halo_words
+
+    from .emit_util import emit_kv
+
+    matrices = QUICK_MATRICES if quick else DEFAULT_MATRICES
+    n_devs = QUICK_NDEV if quick else DEFAULT_NDEV
+    records = []
+    gate_failures = []
+    beats_bfs = 0
+    for name in matrices:
+        m = SUITE[name]()
+        n_parts, vec_size = choose_vec_size(m.n)
+        local = autotune_partition(m, context="solver")
+        dist = autotune_partition(m, context="dist", n_dev=min(n_devs))
+        for strat in available_strategies():
+            part = make_partition(m, method=strat, n_parts=n_parts,
+                                  vec_size=vec_size)
+            stats = part.stats(m)
+            cost = partition_cost(m, part, 4, context="solver")
+            halos = {nd: partition_halo_words(m, part, nd) for nd in n_devs}
+            rec = {
+                "kind": "partition", "matrix": name, "n": m.n,
+                "nnz": m.nnz, "strategy": strat, "n_parts": part.n_parts,
+                "vec_size": part.vec_size,
+                "modeled_bytes_solver": cost["total"],
+                "partition_seconds": part.seconds,
+                "selected_local": strat == local.strategy,
+                "selected_dist": strat == dist.strategy,
+            }
+            rec.update(stats)
+            rec.update({f"halo_words_{nd}": w for nd, w in halos.items()})
+            records.append(rec)
+            emit_kv(f"partition/{name}/{strat}",
+                    f"ipf={stats['in_part_fraction']:.3f};"
+                    f"ell_w={stats['ell_width']};"
+                    f"er_entries={stats['er_entries']};"
+                    f"bytes={cost['total']};"
+                    f"halo{min(n_devs)}={halos[min(n_devs)]}"
+                    + (";selected" if strat == local.strategy else ""),
+                    us=part.seconds * 1e6)
+        # selection gate: the winner may not cache a smaller share of
+        # x-reads than the trivial natural ordering (tuner floor; see
+        # autotune_partition) — checked here against freshly built
+        # partitions so a tuner-cache bug cannot mask a violation
+        fr = local.in_part_fraction
+        for tag, sel in (("local", local.strategy), ("dist", dist.strategy)):
+            if fr[sel] < fr.get("natural", 0.0) - 1e-9:
+                gate_failures.append(
+                    f"{name}/{tag}: selected {sel} ipf={fr[sel]:.3f} < "
+                    f"natural ipf={fr['natural']:.3f}")
+        if fr[local.strategy] > fr.get("bfs", 0.0) + 1e-9:
+            beats_bfs += 1
+        emit_kv(f"partition/{name}/selected",
+                f"local={local.strategy};dist={dist.strategy};"
+                f"ipf={fr[local.strategy]:.3f};"
+                f"ipf_bfs={fr.get('bfs', 0.0):.3f}")
+    if gate_failures:
+        raise AssertionError(
+            "partition selection gate: selected strategy's in-partition "
+            "fraction fell below natural's on: " + "; ".join(gate_failures))
+    if beats_bfs == 0:
+        raise AssertionError(
+            "partition selection gate: no suite matrix where the selected "
+            "strategy's in-partition fraction beats bfs's — the expanded "
+            "registry is not earning its keep")
+    return records
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,8 @@
   framework      -> dist_halo         (sharded halo exchange vs all-gather
                                        words + distributed solve timings)
   framework      -> autotune_table    (per-matrix chosen format + bytes/nnz)
+  framework      -> partition_quality (per-strategy locality/halo table +
+                                       cost-priced selection gate)
   framework      -> api_overhead      (Operator API v2 dispatch vs direct
                                        engine apply; asserts < 5% overhead)
   framework      -> lm_step_bench     (smoke train/decode step times)
@@ -31,7 +33,12 @@ machine-readable perf trajectory:
                        size): scheduled halo words vs the all-gather words
                        the replaced dist path moved, HLO-measured
                        collective bytes for both, and distributed-vs-local
-                       solve time/residual;
+                       solve time/residual; plus ``kind: "partition"``
+                       records per (matrix × partition strategy): cached
+                       x-read share, ELL/ER shape, modeled solver bytes,
+                       scheduled halo words at 4/8 devices, and which
+                       strategy the cost model selected (gated: the
+                       selection never caches fewer reads than natural);
   BENCH_solver.json  — per (matrix × format × execution space): CG seconds,
                        iters-to-converge, residual, modeled bytes/iteration
                        (the permuted-space records show the
@@ -62,9 +69,10 @@ import sys
 
 DEFAULT_MODS = ["bytes_model", "preprocessing_time", "speedup_table",
                 "spmm_throughput", "solver_bench", "dist_halo",
-                "autotune_table", "api_overhead", "lm_step_bench"]
+                "partition_quality", "autotune_table", "api_overhead",
+                "lm_step_bench"]
 QUICK_MODS = ["solver_bench", "preprocessing_time", "dist_halo",
-              "api_overhead", "spmm_throughput"]
+              "partition_quality", "api_overhead", "spmm_throughput"]
 
 
 def collect_spmm_records(results: dict, quick: bool = False) -> list:
@@ -84,6 +92,16 @@ def collect_dist_records(results: dict, quick: bool = False) -> list:
         from . import dist_halo
 
         rows = dist_halo.main(quick=quick)
+    return rows
+
+
+def collect_partition_records(results: dict, quick: bool = False) -> list:
+    """kind:"partition" strategy-quality records for the BENCH trajectory."""
+    rows = results.get("partition_quality")
+    if rows is None:
+        from . import partition_quality
+
+        rows = partition_quality.main(quick=quick)
     return rows
 
 
@@ -234,6 +252,7 @@ def main(argv=None) -> None:
     spmv_records += collect_spmm_records(results, args.quick)
     spmv_records += collect_preprocess_records(results, args.quick)
     spmv_records += collect_dist_records(results, args.quick)
+    spmv_records += collect_partition_records(results, args.quick)
     spmv_records += results.get("api_overhead") or []
     if args.verify:
         print("# === verify ===")

@@ -29,6 +29,10 @@ Rule ids (stable — CI baselines and tests key on them):
   index-bound.stream       COO/ELL/HYB global indices inside [0, n)
   perm-bijection           perm & inv_perm bijections of [0, n_pad), mutual
                            inverses (Algorithm 1)
+  partition-capacity       part_vec inside [0, n_parts), no partition over
+                           vec_size vertices, perm slots agree with
+                           part_vec, padding only at partition tails (the
+                           contract every registered strategy must meet)
   width-consistency        part_widths / slice_widths / bucket widths match
                            the pattern row widths; nothing truncated
   staircase-monotone       row widths non-increasing inside each partition
@@ -67,9 +71,10 @@ __all__ = ["verify", "verify_plan", "format_invariants", "Finding",
 # the README rule table enumerate these)
 RULES = (
     "index-bound.ell-local", "index-bound.er-global", "index-bound.stream",
-    "perm-bijection", "width-consistency", "staircase-monotone",
-    "padding-sentinel", "fill-plan-bijection", "value-finite",
-    "bucket-cover", "halo-coverage", "halo-push-race", "halo-accounting",
+    "perm-bijection", "partition-capacity", "width-consistency",
+    "staircase-monotone", "padding-sentinel", "fill-plan-bijection",
+    "value-finite", "bucket-cover", "halo-coverage", "halo-push-race",
+    "halo-accounting",
 )
 
 
@@ -112,6 +117,55 @@ def _check_perm_pair(out: List[Finding], site: str, perm, inv_perm,
     elif not np.array_equal(p[q], ar):
         out.append(_f("error", site, "perm-bijection",
                       "perm and inv_perm are not mutual inverses"))
+
+
+# ---------------------------------------------------------------------------
+# raw partitions (the strategy-registry contract)
+# ---------------------------------------------------------------------------
+
+def check_partition(p) -> List[Finding]:
+    """Invariants of a raw :class:`repro.core.partition.Partition`.
+
+    Every registered strategy must produce a clean one — this is the
+    contract ``build_ehyb`` assumes when it reorders by ``perm`` and sizes
+    the per-partition x-cache by ``vec_size`` (the conformance sweep in
+    tests/test_partition_strategies.py runs this per strategy × matrix)."""
+    site = f"Partition[{p.method or '?'}]"
+    out: List[Finding] = []
+    if p.n_parts * p.vec_size != p.n_pad:
+        out.append(_f("error", site, "partition-capacity",
+                      f"n_parts*vec_size = {p.n_parts * p.vec_size} != "
+                      f"n_pad = {p.n_pad}"))
+        return out
+    pv = np.asarray(p.part_vec)
+    if pv.shape != (p.n,):
+        out.append(_f("error", f"{site}.part_vec", "partition-capacity",
+                      f"part_vec shape {pv.shape} != ({p.n},)"))
+        return out
+    _bound(out, site, "part_vec", pv, p.n_parts, "partition-capacity")
+    counts = np.bincount(pv, minlength=p.n_parts) if pv.size else \
+        np.zeros(p.n_parts, dtype=np.int64)
+    if pv.size and int(counts.max()) > p.vec_size:
+        over = int((counts > p.vec_size).sum())
+        out.append(_f("error", f"{site}.part_vec", "partition-capacity",
+                      f"{over} partition(s) hold more than vec_size = "
+                      f"{p.vec_size} vertices (max {int(counts.max())})"))
+    _check_perm_pair(out, site, p.perm, p.inv_perm, p.n_pad)
+    perm = np.asarray(p.perm)
+    if perm.shape == (p.n_pad,) and not out:
+        live = perm < p.n
+        slot_part = np.arange(p.n_pad) // p.vec_size
+        if not np.array_equal(slot_part[live], pv[perm[live]]):
+            bad = int((slot_part[live] != pv[perm[live]]).sum())
+            out.append(_f("error", f"{site}.perm", "partition-capacity",
+                          f"{bad} live slot(s) placed outside the "
+                          f"partition part_vec assigns"))
+        lv = live.reshape(p.n_parts, p.vec_size)
+        if bool((lv[:, 1:] & ~lv[:, :-1]).any()):
+            out.append(_f("error", f"{site}.perm", "partition-capacity",
+                          "padding slots interleaved with live vertices "
+                          "(must sit at each partition's tail)"))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -708,18 +762,23 @@ def _check_pattern(m) -> List[Finding]:
 def verify(obj) -> List[Finding]:
     """Statically verify a container/operator; [] means every rule passed.
 
-    Accepts host builds (``EHYB``, ``PackedEHYB``, ``EHYBBuckets``), any
-    registered device container, ``SparseCSR`` patterns, and the operator
-    wrappers (``LinearOperator``, ``SpMVOperator``, ``ShardedOperator``) —
-    operators dispatch through their format's ``FormatSpec.invariants``
-    registry hook, so formats registered after this PR are covered by
-    whatever hook they ship.
+    Accepts host builds (``EHYB``, ``PackedEHYB``, ``EHYBBuckets``), raw
+    :class:`~repro.core.partition.Partition` objects (any strategy's output
+    checked against the registry contract), any registered device
+    container, ``SparseCSR`` patterns, and the operator wrappers
+    (``LinearOperator``, ``SpMVOperator``, ``ShardedOperator``) — operators
+    dispatch through their format's ``FormatSpec.invariants`` registry
+    hook, so formats registered after this PR are covered by whatever hook
+    they ship.
     """
     from ..core.ehyb import EHYB, EHYBBuckets, PackedEHYB
     from ..core.matrices import SparseCSR
+    from ..core.partition import Partition
 
     if isinstance(obj, SparseCSR):
         return _check_pattern(obj)
+    if isinstance(obj, Partition):
+        return check_partition(obj)
     if isinstance(obj, PackedEHYB):
         return check_packed_host(obj)
     if isinstance(obj, EHYBBuckets):

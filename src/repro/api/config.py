@@ -55,8 +55,15 @@ class ExecutionConfig:
                         and "spmv" locally; ``solve()`` shims plan with
                         "solver".
     dtype             — default value dtype for ``Plan.bind`` (None = f32).
-    partition_method  — non-default EHYB partitioner ("bfs", "natural", ...)
-                        for the family's shared host build.
+    partition_method  — EHYB partition strategy for the family's shared
+                        host build — any registered name
+                        (``repro.core.available_strategies()``: "natural",
+                        "bfs", "mincut", "hub", ...).  None (default) lets
+                        ``plan()`` autotune the strategy with the
+                        partition-level bytes-moved model in the plan's
+                        workload context (``autotune_partition``); pinning a
+                        name skips that pass.  Either way the resolved
+                        strategy is part of the plan identity.
     candidates        — restrict the autotuner's candidate set.
     k                 — expected rhs batch width of the applies (SpMM).
                         The cost model scales its x/y-sided traffic ×k while

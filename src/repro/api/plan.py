@@ -110,21 +110,30 @@ class PlanCache:
 
     # ---- shared host EHYB build (one partitioning pass per pattern) --------
 
-    def host_ehyb(self, m: SparseCSR):
+    def host_ehyb(self, m: SparseCSR, method: str = "bfs", part=None):
+        """Host EHYB build memo, keyed by (matrix, partition strategy).
+
+        ``part`` (a prebuilt :class:`~repro.core.Partition`, e.g. the
+        ``autotune_partition`` winner) seeds a cold build so the strategy's
+        partitioning pass is never repeated; pattern-level hits under the
+        same strategy refill the cached build's value tables instead of
+        re-partitioning."""
         from ..autotune.cost import matrix_key, pattern_hash
         from ..core.ehyb import build_ehyb
 
         pkey = pattern_hash(m)
-        key = matrix_key(m, pkey)
+        key = (matrix_key(m, pkey), method)
         e = self._host.get(key)
         if e is None:
-            prev = self._host_pattern.get(pkey)
+            prev = self._host_pattern.get((pkey, method))
             if prev is not None and prev.fill_plan is not None:
                 e = prev.refill(m.data)
+            elif part is not None:
+                e = build_ehyb(m, part=part)
             else:
-                e = build_ehyb(m)
+                e = build_ehyb(m, method=method)
             self._host[key] = e
-            self._host_pattern[pkey] = e
+            self._host_pattern[(pkey, method)] = e
         return e
 
     # ---- bookkeeping -------------------------------------------------------
@@ -183,6 +192,8 @@ class Plan:
     mesh: Any = None
     axis: str = "data"
     tuning: Any = None              # TuneResult | None
+    partition_strategy: Optional[str] = None  # strategy behind the host EHYB
+    partition_tuning: Any = None    # PartitionTuneResult | None
     pattern: SparseCSR = None       # pattern holder (values = plan seed)
     cache: Any = None               # owning PlanCache (host-build memo)
     # ---- lazy value-bound state -------------------------------------------
@@ -207,11 +218,6 @@ class Plan:
         from .. import autotune as at
 
         shared: dict = {}
-        if execution.partition_method is not None:
-            from ..core.ehyb import build_ehyb
-
-            shared["ehyb"] = build_ehyb(pattern,
-                                        method=execution.partition_method)
         n_dev = mesh.shape[axis] if mesh is not None else 1
         if mesh is not None and n_dev > 1:
             if execution.workload not in ("auto", "dist"):
@@ -241,6 +247,35 @@ class Plan:
                 raise ValueError(
                     f"format {fmt!r} carries no partition structure to "
                     f"shard; pick one of {sorted(shardable)}")
+        # ---- partition strategy (joins the autotune decision) -------------
+        # An unset partition_method autotunes the strategy whenever an
+        # EHYB-family format may be selected: every registered strategy is
+        # priced with the partition-level bytes-moved model in this plan's
+        # context (dist pricing includes the scheduled halo words), and the
+        # winner's Partition seeds the shared host build.  The choice rides
+        # the plan-cache token via ExecutionConfig.token(), so plans pinned
+        # to different strategies coexist and rebinds stay refill-only.
+        method = execution.partition_method
+        ptuning = None
+        if method is None:
+            needs_part = (any(at.get_format(f).shard is not None
+                              for f in (execution.candidates
+                                        or at.available_formats()))
+                          if fmt == "auto"
+                          else at.get_format(fmt).shard is not None)
+            if needs_part:
+                import jax.numpy as jnp
+
+                kw = {"n_dev": n_dev} if context == "dist" else {}
+                ptuning = at.autotune_partition(
+                    pattern, context=context,
+                    val_bytes=jnp.dtype(execution.dtype
+                                        or jnp.float32).itemsize, **kw)
+                method = ptuning.strategy
+        if method is not None:
+            shared["ehyb"] = cache.host_ehyb(
+                pattern, method=method,
+                part=ptuning.partition if ptuning is not None else None)
         if fmt == "auto":
             cand = execution.candidates
             if mesh is not None:
@@ -255,7 +290,8 @@ class Plan:
             at.get_format(fmt)          # validate the name early
         return cls(key=key, n=pattern.n, nnz=pattern.nnz, format=fmt,
                    context=context, execution=execution, mesh=mesh,
-                   axis=axis, tuning=tuning, pattern=pattern, cache=cache,
+                   axis=axis, tuning=tuning, partition_strategy=method,
+                   partition_tuning=ptuning, pattern=pattern, cache=cache,
                    _shared=shared)
 
     # ---- binding -----------------------------------------------------------
@@ -621,5 +657,7 @@ class Plan:
 
     def __repr__(self):
         where = f", mesh[{self.axis}]" if self.mesh is not None else ""
+        part = (f", partition={self.partition_strategy!r}"
+                if self.partition_strategy else "")
         return (f"Plan(n={self.n}, nnz={self.nnz}, format={self.format!r}, "
-                f"context={self.context!r}{where}, key={self.key})")
+                f"context={self.context!r}{part}{where}, key={self.key})")

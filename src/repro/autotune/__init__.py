@@ -20,14 +20,16 @@ from .registry import (FORMATS, FormatSpec, available_formats, build_format,
                        get_format, register_format)
 from .cost import (CONTEXTS, MatrixStats, allgather_penalty_bytes,
                    estimate_bytes, matrix_key, matrix_stats, model_table,
-                   pattern_hash, rank_formats)
-from .tuner import TuneResult, autotune, clear_cache, tune_cache_info
+                   partition_cost, pattern_hash, rank_formats)
+from .tuner import (PartitionTuneResult, TuneResult, autotune,
+                    autotune_partition, clear_cache, tune_cache_info)
 
 __all__ = [
     "FORMATS", "FormatSpec", "available_formats", "build_format",
     "get_format", "register_format",
     "CONTEXTS", "MatrixStats", "allgather_penalty_bytes", "estimate_bytes",
-    "matrix_key", "matrix_stats", "model_table", "pattern_hash",
-    "rank_formats",
-    "TuneResult", "autotune", "clear_cache", "tune_cache_info",
+    "matrix_key", "matrix_stats", "model_table", "partition_cost",
+    "pattern_hash", "rank_formats",
+    "PartitionTuneResult", "TuneResult", "autotune", "autotune_partition",
+    "clear_cache", "tune_cache_info",
 ]

@@ -185,3 +185,62 @@ def rank_formats(m: SparseCSR, val_bytes: int = 4, candidates=None,
     rankings are deterministic)."""
     table = model_table(m, val_bytes, candidates, shared, context, k)
     return sorted(table.items(), key=lambda kv: (kv[1], kv[0]))
+
+
+def partition_cost(m: SparseCSR, part, val_bytes: int = 4,
+                   context: str = "spmv", n_dev: int = 1, k: int = 1,
+                   col_bytes: int = 2, sublane: int = 8) -> Dict[str, int]:
+    """Modeled bytes of one EHYB SpMV under ``part`` — priced from the
+    pattern + partition alone, before any tables are built.
+
+    Reproduces ``EHYB.bytes_moved(layout="tile", fused_er=True,
+    space=permuted-for-solver/dist)`` on the container ``build_ehyb(m,
+    part=part)`` would produce (no ``max_width`` cap), term for term —
+    pinned by tests — so ``autotune_partition`` can rank every registered
+    strategy without building P EHYBs.  Locally the ranking is exactly
+    ELL-width padding + ER spill + the in-partition fraction's x/perm
+    traffic; ``context="dist"`` adds the scheduled halo words
+    (:func:`repro.dist.halo.partition_halo_words`) over ``n_dev`` devices.
+
+    One value-dependence caveat: the built container's ER term vanishes
+    when every ER *value* is an explicit zero (``er_vals.any()``); this
+    pattern-level pricer keeps the term whenever ER *entries* exist.
+    """
+    if context not in CONTEXTS:
+        raise ValueError(f"unknown context {context!r}; have {CONTEXTS}")
+    if context == "dist" and n_dev < 2:
+        raise ValueError("context='dist' needs n_dev >= 2")
+    n, n_pad = m.n, part.n_pad
+    P, V = part.n_parts, part.vec_size
+    rows = np.repeat(np.arange(n, dtype=np.int64), m.row_lengths())
+    cols = m.indices.astype(np.int64)
+    pv = part.part_vec
+    same = pv[rows] == pv[cols]
+    widths = np.bincount(rows[same], minlength=n)
+    ell = P * V * max(int(widths.max()), 1) * (val_bytes + col_bytes)
+    x_cache = n_pad * val_bytes * k
+    out_counts = np.bincount(rows[~same], minlength=n)
+    live = np.flatnonzero(out_counts)
+    if len(live):
+        er_width = int(out_counts.max())
+        er_rows = max(sublane, -(-len(live) // sublane) * sublane)
+        # grouped-ER tile height: max live ER rows owned by one partition,
+        # sublane-aligned (group_er_by_partition's E)
+        ep = max(sublane,
+                 -(-int(np.bincount(pv[live], minlength=P).max())
+                   // sublane) * sublane)
+        er = (P * ep * er_width * (val_bytes + 4)
+              + min(er_rows * er_width, n_pad) * val_bytes * k
+              + P * ep * 4)
+    else:
+        er = 0
+    y = n_pad * val_bytes * k
+    perm = 2 * n_pad * val_bytes * k if context == "spmv" else 0
+    ic = 0
+    if context == "dist":
+        from ..dist.halo import partition_halo_words
+
+        ic = partition_halo_words(m, part, n_dev) * val_bytes * k
+    return {"ell": ell, "x_cache": x_cache, "er": er, "y": y, "perm": perm,
+            "interconnect": ic,
+            "total": ell + x_cache + er + y + perm + ic}

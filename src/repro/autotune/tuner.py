@@ -37,11 +37,29 @@ class TuneResult:
     context: str = "spmv"             # workload the model ranked for
 
 
+@dataclasses.dataclass(eq=False)
+class PartitionTuneResult:
+    """``autotune_partition`` outcome: the priced strategy table plus the
+    winning :class:`~repro.core.Partition` itself (so the caller builds the
+    selected EHYB without re-partitioning)."""
+
+    strategy: str                        # the winner
+    key: str                             # sparsity-pattern hash
+    context: str                         # workload the model priced for
+    n_dev: int                           # mesh size (1 = local)
+    modeled_bytes: Dict[str, int]        # per-strategy modeled bytes/SpMV
+    in_part_fraction: Dict[str, float]   # per-strategy cached-read share
+    halo_words: Dict[str, int]           # per-strategy (dist context only)
+    partition: object = dataclasses.field(repr=False, default=None)
+
+
 _CACHE = BoundedCache(maxsize=128)    # TuneResults are small host dicts
+_PART_CACHE = BoundedCache(maxsize=64)  # winners keep their Partition arrays
 
 
 def clear_cache() -> None:
     _CACHE.clear()
+    _PART_CACHE.clear()
 
 
 def tune_cache_info() -> dict:
@@ -187,4 +205,77 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
                         context=context)
     if use_cache:
         _CACHE[cache_key] = result
+    return result
+
+
+def autotune_partition(m: SparseCSR, *, candidates=None,
+                       context: str = "spmv", n_dev: int = 1,
+                       val_bytes: int = 4,
+                       use_cache: bool = True) -> PartitionTuneResult:
+    """Pick the partition strategy the bytes-moved model prefers for ``m``.
+
+    Builds every registered strategy's partition (at the standard
+    ``choose_vec_size`` geometry, the one ``build_ehyb`` uses) and prices
+    each with :func:`~repro.autotune.cost.partition_cost` in the requested
+    workload context — locally that ranking is exactly ELL-width padding +
+    ER spill + in-partition fraction, for ``context="dist"`` it adds the
+    scheduled halo words over ``n_dev`` devices.  Ties break toward the
+    higher in-partition fraction, then the name, so selection is
+    deterministic.
+
+    One guardrail sits on top of the byte ranking: whenever ``natural`` is
+    among the candidates, the winner must serve at least as large a share of
+    x-reads from the explicit cache as ``natural`` does (the paper's primary
+    locality metric).  Tile padding can make the byte model elect a
+    partition that caches *fewer* reads than no reordering at all — e.g. a
+    hub extraction whose narrow ELL tile wins on modeled bytes while its
+    cached-read share collapses — and that floor strikes such candidates
+    (``natural`` itself always clears it, so the eligible set is never
+    empty).  Decisions are cached under the sparsity-pattern hash the
+    same way format autotuning is; ``plan()`` runs this when the execution
+    config leaves ``partition_method`` unset.
+    """
+    from ..core.partition import (available_strategies, choose_vec_size,
+                                  make_partition)
+    from .cost import CONTEXTS, partition_cost
+
+    if context not in CONTEXTS:
+        raise ValueError(f"unknown context {context!r}; have {CONTEXTS}")
+    if context == "dist" and n_dev < 2:
+        raise ValueError("context='dist' needs n_dev >= 2")
+    cand = tuple(candidates) if candidates else available_strategies()
+    key = pattern_hash(m)
+    cache_key = (key, cand, context, n_dev if context == "dist" else 1,
+                 val_bytes)
+    if use_cache and cache_key in _PART_CACHE:
+        return _PART_CACHE[cache_key]
+
+    # partition geometry is the build-time default (dtype_bytes=4) so the
+    # winner drops straight into build_ehyb; val_bytes only weights pricing
+    n_parts, vec_size = choose_vec_size(m.n)
+    modeled: Dict[str, int] = {}
+    fracs: Dict[str, float] = {}
+    halos: Dict[str, int] = {}
+    parts = {}
+    for name in cand:
+        part = make_partition(m, method=name, n_parts=n_parts,
+                              vec_size=vec_size)
+        cost = partition_cost(m, part, val_bytes, context=context,
+                              n_dev=n_dev)
+        modeled[name] = cost["total"]
+        fracs[name] = part.in_partition_fraction(m)
+        if context == "dist":
+            halos[name] = cost["interconnect"] // (val_bytes or 1)
+        parts[name] = part
+    # cached-read-share floor (see docstring): rank by modeled bytes, but
+    # never regress the in-partition fraction below the natural baseline
+    floor = fracs.get("natural", float("-inf")) - 1e-12
+    eligible = [s for s in cand if fracs[s] >= floor] or list(cand)
+    winner = min(eligible, key=lambda s: (modeled[s], -fracs[s], s))
+    result = PartitionTuneResult(strategy=winner, key=key, context=context,
+                                 n_dev=n_dev, modeled_bytes=modeled,
+                                 in_part_fraction=fracs, halo_words=halos,
+                                 partition=parts[winner])
+    if use_cache:
+        _PART_CACHE[cache_key] = result
     return result

@@ -8,10 +8,12 @@ CPU/METIS preprocessing; all compute paths are JAX):
 """
 
 from . import counters
-from .matrices import (SUITE, SparseCSR, elasticity3d, from_coo, poisson3d,
-                       poisson3d27, powerlaw, unstructured)
-from .partition import (Partition, bfs_partition, choose_vec_size,
-                        make_partition, natural_partition)
+from .matrices import (SUITE, SparseCSR, circuit, elasticity3d, from_coo,
+                       poisson3d, poisson3d27, powerlaw, rmat, unstructured)
+from .partition import (Partition, PartitionStrategy, available_strategies,
+                        bfs_partition, choose_vec_size, get_strategy,
+                        hub_partition, make_partition, mincut_partition,
+                        natural_partition, register_strategy)
 from .ehyb import (EHYB, EHYBBuckets, PackedEHYB, build_buckets,
                    build_ehyb, group_er_by_partition, pack_staircase)
 from .spmv import (COODevice, EHYBBucketsDevice, EHYBDevice,
@@ -24,10 +26,12 @@ from .solver import (PRECONDITIONERS, SolveResult, bicgstab, cg,
                      precond_for, precond_inv_diag, solve)
 
 __all__ = [
-    "SUITE", "SparseCSR", "elasticity3d", "from_coo", "poisson3d",
-    "poisson3d27", "powerlaw", "unstructured",
-    "Partition", "bfs_partition", "choose_vec_size", "make_partition",
-    "natural_partition",
+    "SUITE", "SparseCSR", "circuit", "elasticity3d", "from_coo", "poisson3d",
+    "poisson3d27", "powerlaw", "rmat", "unstructured",
+    "Partition", "PartitionStrategy", "available_strategies",
+    "bfs_partition", "choose_vec_size", "get_strategy", "hub_partition",
+    "make_partition", "mincut_partition", "natural_partition",
+    "register_strategy",
     "EHYB", "EHYBBuckets", "PackedEHYB", "build_buckets", "build_ehyb",
     "group_er_by_partition", "pack_staircase", "EHYBPackedDevice",
     "COODevice", "EHYBBucketsDevice", "EHYBDevice", "ELLDevice", "HYBDevice",

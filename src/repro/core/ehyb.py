@@ -72,6 +72,9 @@ class EHYB:
     # value buffer on the same pattern replays the scatter with no
     # partitioning, reordering or sorting.
     fill_plan: Optional[dict] = None
+    # registry name of the partition strategy that produced ``perm``
+    # (provenance; carried through ``refill`` via dataclasses.replace)
+    partition_method: str = "bfs"
 
     # .....................................................................
     @property
@@ -259,7 +262,8 @@ def build_ehyb(m: SparseCSR, part: Optional[Partition] = None,
     if part is None:
         part = make_partition(m, method=method, dtype_bytes=dtype_bytes,
                               **part_kw)
-    t_part = time.perf_counter() - t0
+    # a prebuilt `part` (e.g. the autotuned winner) carries its own timing
+    t_part = max(time.perf_counter() - t0, getattr(part, "seconds", 0.0))
 
     t0 = time.perf_counter()
     n, n_parts, V = m.n, part.n_parts, part.vec_size
@@ -382,7 +386,8 @@ def build_ehyb(m: SparseCSR, part: Optional[Partition] = None,
                 preprocess_seconds={"partition": t_part, "metadata": t_meta,
                                     "reorder": t_reorder,
                                     "total": t_part + t_meta + t_reorder},
-                fill_plan=fill_plan)
+                fill_plan=fill_plan,
+                partition_method=getattr(part, "method", "") or method)
 
 
 # ---------------------------------------------------------------------------

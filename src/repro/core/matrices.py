@@ -16,6 +16,12 @@ generate matrices with the same structural character:
 * ``powerlaw``       — heavy-tailed degree distribution (circuit-simulation
                        style: memchip/Freescale1-like imbalance; stresses the
                        ER path and load balancing).
+* ``rmat``           — R-MAT / stochastic-Kronecker web/social graph: heavy
+                       tails on both axes plus a dense hub core (the target
+                       of the ``hub`` partition strategy).
+* ``circuit``        — series chains + short couplings + a few near-global
+                       rail nets (power/ground/clock columns with huge
+                       fan-in), the classic circuit-matrix shape.
 
 All generators return CSR (`SparseCSR`) with float64 values; SpMV paths cast
 as requested.  Everything is numpy — this is host-side preprocessing, exactly
@@ -222,6 +228,58 @@ def powerlaw(n: int = 4096, avg_degree: int = 8, alpha: float = 2.1,
     return from_coo(n, rows, cols, vals, sum_duplicates=True)
 
 
+def rmat(n: int = 4096, avg_degree: int = 8, a: float = 0.57,
+         b: float = 0.19, c: float = 0.19, seed: int = 5) -> SparseCSR:
+    """R-MAT / stochastic-Kronecker web/social graph (Chakrabarti et al.).
+
+    Each edge picks a quadrant per bit level with probabilities (a, b, c, d);
+    the skew (default a=0.57) yields heavy-tailed degrees on BOTH axes, a
+    dense hub↔hub core, and self-similar block structure — the pattern
+    family degree-sorted hub extraction targets.  Bit sampling is fully
+    vectorized: one (nnz, scale) uniform draw, one searchsorted.  ``n`` that
+    is not a power of two is generated in the enclosing 2^⌈log2 n⌉ space and
+    folded back with a modulo.  Symmetrized with a dominant diagonal so the
+    matrix also serves the solver paths.
+    """
+    rng = np.random.default_rng(seed)
+    scale = max(int(np.ceil(np.log2(max(n, 2)))), 1)
+    nnz = n * avg_degree
+    probs = np.array([a, b, c, max(1.0 - (a + b + c), 0.0)])
+    edges = np.searchsorted(np.cumsum(probs / probs.sum()),
+                            rng.random((nnz, scale)))
+    weights = (1 << np.arange(scale - 1, -1, -1)).astype(np.int64)
+    er = ((edges >> 1) @ weights) % n
+    ec = ((edges & 1) @ weights) % n
+    rows = np.concatenate([er, ec, np.arange(n)])
+    cols = np.concatenate([ec, er, np.arange(n)])
+    vals = np.where(rows == cols, 4.0 * avg_degree,
+                    -1.0 + 0.05 * rng.standard_normal(len(rows)))
+    return from_coo(n, rows, cols.astype(np.int32), vals)
+
+
+def circuit(n: int = 4096, rail_count: int = 4, avg_local: int = 6,
+            seed: int = 6) -> SparseCSR:
+    """Circuit-simulation pattern: local couplings + near-global rail nets.
+
+    A series chain plus short-range random couplings form the locally banded
+    core (almost every row is tiny and spatially local); every node also
+    hangs off one of ``rail_count`` power/ground/clock rails — columns with
+    in-degree ≈ n/rail_count, the memchip/Freescale-style dense columns that
+    wreck contiguous partitionings and reward routing the rails' vertices to
+    a shared hub partition.  Symmetrized with a dominant diagonal.
+    """
+    rng = np.random.default_rng(seed)
+    i = np.arange(n)
+    src = rng.integers(0, n, n * max(avg_local - 2, 1) // 2)
+    dst = np.clip(src + rng.geometric(0.15, len(src)), 0, n - 1)
+    rail = rng.integers(0, rail_count, n)
+    rows = np.concatenate([i[1:], i[:-1], src, dst, i, rail, i])
+    cols = np.concatenate([i[:-1], i[1:], dst, src, rail, i, i])
+    vals = np.where(rows == cols, 4.0 * (avg_local + 4),
+                    -1.0 + 0.05 * rng.standard_normal(len(rows)))
+    return from_coo(n, rows, cols.astype(np.int32), vals)
+
+
 # The benchmark suite: name → constructor, scaled to CPU-tractable sizes but
 # structurally matched to the paper's categories (Table 3).
 SUITE: Dict[str, Callable[[], SparseCSR]] = {
@@ -240,4 +298,9 @@ SUITE: Dict[str, Callable[[], SparseCSR]] = {
     # circuit style (stress ER/balance — the hard case for EHYB)
     "powerlaw_4k": lambda: powerlaw(4096, 8),
     "powerlaw_8k": lambda: powerlaw(8192, 6),
+    # web/social graph (R-MAT Kronecker: hub core + self-similar blocks)
+    "rmat_4k": lambda: rmat(4096, 8),
+    "rmat_8k": lambda: rmat(8192, 6),
+    # circuit pattern proper (near-global rail nets over a banded core)
+    "circuit_4k": lambda: circuit(4096),
 }

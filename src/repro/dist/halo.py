@@ -163,6 +163,30 @@ def ehyb_halo_words(e: EHYB, n_dev: int) -> int:
     return cache[n_dev]
 
 
+def partition_halo_words(m, part, n_dev: int) -> int:
+    """Scheduled exchange words a :class:`~repro.core.Partition` would cost
+    over ``n_dev`` devices — priced from the pattern + partition alone,
+    before any EHYB build.
+
+    Device ownership follows the halo plan's round-robin partition blocks
+    (``part_id // ceil(n_parts/n_dev)``); the cross-device entries are
+    exactly the out-of-partition (ER) entries whose endpoints land on
+    different devices, and each ordered pair exchanges
+    min(unique columns, unique rows) — identical to
+    :func:`ehyb_halo_words` on the built container (pinned by tests), which
+    is how ``autotune_partition`` ranks strategies for ``context="dist"``.
+    """
+    rows = np.repeat(np.arange(m.n, dtype=np.int64), m.row_lengths())
+    cols = m.indices.astype(np.int64)
+    pv = part.part_vec.astype(np.int64)
+    er = pv[rows] != pv[cols]
+    rows, cols = rows[er], cols[er]
+    ppd = -(-part.n_parts // n_dev)
+    u_cols, u_rows = _pair_unique_counts(rows, cols, pv[rows] // ppd,
+                                         pv[cols] // ppd, n_dev, part.n_pad)
+    return int(np.minimum(u_cols, u_rows).sum())
+
+
 def build_halo_plan(e: EHYB, n_dev: int, sublane: int = 8) -> HaloPlan:
     """Compute the :class:`HaloPlan` for ``e`` over ``n_dev`` devices.
 

@@ -7,7 +7,7 @@ from repro.core import (SUITE, choose_vec_size, make_partition, poisson3d,
                         unstructured)
 
 
-@pytest.mark.parametrize("method", ["natural", "bfs"])
+@pytest.mark.parametrize("method", ["natural", "bfs", "mincut", "hub"])
 @pytest.mark.parametrize("gen", [lambda: poisson3d(8),
                                  lambda: unstructured(1024, 10)])
 def test_partition_invariants(method, gen):

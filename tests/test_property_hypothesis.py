@@ -68,6 +68,20 @@ def test_partition_is_a_bijection(m):
     assert np.array_equal(np.sort(p.inv_perm), np.arange(p.n_pad))
 
 
+@given(sparse_matrix(max_n=64))
+@settings(max_examples=10, deadline=None)
+def test_every_strategy_verifies_clean(m):
+    """∀ sparse A, ∀ registered strategy: the produced Partition satisfies
+    the registry contract (partition-capacity + perm-bijection rules)."""
+    from repro.analysis import verify
+    from repro.core import available_strategies
+
+    for method in available_strategies():
+        p = make_partition(m, method=method, n_parts=4,
+                           vec_size=-(-m.n // 4 // 8) * 8)
+        assert verify(p) == [], (method, [str(f) for f in verify(p)])
+
+
 @given(sparse_matrix(max_n=80))
 @settings(max_examples=15, deadline=None)
 def test_random_build_verifies_clean(m):
