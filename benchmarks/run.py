@@ -53,6 +53,10 @@ Usage:
   python -m benchmarks.run --quick --verify     # + static verification of
                                                 #   every built container
                                                 #   (kind:"analysis" records)
+  python -m benchmarks.run --calibrate          # fit + gate the calibrated
+                                                #   cost model, write
+                                                #   BENCH_calibration.json
+                                                #   (kind:"calibration")
 
 BENCH_*.json is written on default/--quick runs (no explicit module list) or
 when --json is passed; an explicit module list alone stays CSV-only so a
@@ -175,6 +179,61 @@ def collect_analysis_records(quick: bool = False) -> list:
     return records
 
 
+def collect_calibration_records(quick: bool = False) -> list:
+    """kind:"calibration" records (``--calibrate``): fit the measurement
+    cost model over the suite, then gate it.
+
+    One record per (matrix × format) sample — measured seconds next to the
+    raw modeled bytes and the calibrated prediction — plus one summary
+    record with the fitted coefficients and the two gates the subsystem
+    promises:
+
+    * **agreement** — over matrices where ≥2 formats were timed, the
+      calibrated ranking must pick the measured-fastest format at least as
+      often as raw bytes-moved does (hard assert; the fitted dispatch
+      intercepts are what raw bytes cannot see);
+    * **ratio band** — the geomean of calibrated-predicted / measured
+      seconds must stay inside ``RATIO_BAND`` (in-sample fit, so a drift
+      out of the band means the linear model stopped describing the
+      machine, not that the machine got slower).
+
+    The fitted model is persisted to the active tune store (if any), so a
+    fleet pointed at the same ``REPRO_TUNE_CACHE`` ranks in calibrated
+    seconds from its first plan.
+    """
+    from repro.tuning import calibration as cal
+
+    RATIO_BAND = (0.2, 5.0)
+    names = ("poisson3d_16", "powerlaw_4k") if quick \
+        else cal.DEFAULT_SUITE
+    res = cal.calibrate(names)
+    model = cal.CalibrationModel.from_dict(res["model"])
+    samples, ev = res["samples"], res["evaluation"]
+    records = [{"kind": "calibration", "matrix": s["matrix"],
+                "format": s["format"], "measured_s": s["measured_s"],
+                "modeled_bytes": s["modeled_bytes"],
+                "hlo_bytes": s["hlo_bytes"],
+                "calibrated_s": model.predict(s["terms"], s["format"])}
+               for s in samples]
+    summary = {"kind": "calibration", "matrix": None, "format": None,
+               "backend": model.backend, "coef": model.coef,
+               "intercept": model.intercept,
+               "fingerprint": model.fingerprint(),
+               "persisted": bool(res.get("persisted")), **ev}
+    records.append(summary)
+    print(f"calibration,agree_calibrated,{ev['agree_calibrated']}"
+          f"/{ev['contested']}")
+    print(f"calibration,agree_raw,{ev['agree_raw']}/{ev['contested']}")
+    print(f"calibration,ratio_geomean,{ev['ratio_geomean']:.3f}")
+    assert ev["agree_calibrated"] >= ev["agree_raw"], (
+        f"calibrated ranking ({ev['agree_calibrated']}/{ev['contested']}) "
+        f"lost to raw bytes ({ev['agree_raw']}/{ev['contested']})")
+    assert RATIO_BAND[0] <= ev["ratio_geomean"] <= RATIO_BAND[1], (
+        f"modeled-vs-measured geomean {ev['ratio_geomean']:.3f} outside "
+        f"{RATIO_BAND}")
+    return records
+
+
 def collect_spmv_records(quick: bool = False, rows=None) -> list:
     """Measured SpMV timings joined with the modeled-bytes table.
 
@@ -229,7 +288,27 @@ def main(argv=None) -> None:
                     help="statically verify every built container once, "
                          "off the timed path, and emit kind:\"analysis\" "
                          "records into BENCH_spmv.json")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit the measurement cost model over the suite, "
+                         "gate agreement + modeled-vs-measured ratio, and "
+                         "emit kind:\"calibration\" records into "
+                         "BENCH_spmv.json (persists to REPRO_TUNE_CACHE "
+                         "when set)")
     args = ap.parse_args(argv)
+
+    if args.calibrate and not args.modules:
+        # calibration is its own measured pass — don't drag the full
+        # benchmark module list along unless explicitly asked for
+        print("# === calibrate ===")
+        cal_records = collect_calibration_records(args.quick)
+        if not args.no_json:
+            out = pathlib.Path(args.json_dir or "bench-out")
+            out.mkdir(parents=True, exist_ok=True)
+            path = out / "BENCH_calibration.json"
+            path.write_text(json.dumps(cal_records, indent=1,
+                                       sort_keys=True) + "\n")
+            print(f"wrote {path} ({len(cal_records)} records)")
+        return
 
     mods = args.modules or (QUICK_MODS if args.quick else DEFAULT_MODS)
     results = {name: _run_module(name, args.quick) for name in mods}
@@ -238,6 +317,9 @@ def main(argv=None) -> None:
         if args.verify:
             print("# === verify ===")
             collect_analysis_records(args.quick)
+        if args.calibrate:
+            print("# === calibrate ===")
+            collect_calibration_records(args.quick)
         return
     if args.json_dir is None:
         root = pathlib.Path(__file__).parent.parent
@@ -257,6 +339,9 @@ def main(argv=None) -> None:
     if args.verify:
         print("# === verify ===")
         spmv_records += collect_analysis_records(args.quick)
+    if args.calibrate:
+        print("# === calibrate ===")
+        spmv_records += collect_calibration_records(args.quick)
     spmv_records += collect_reliability_records()
     solver_records = results.get("solver_bench")
     if solver_records is None:

@@ -17,6 +17,9 @@ train     — optimizer, train step, checkpointing, fault tolerance.
 serve     — decode state, prefill/decode steps, batching.
 launch    — production mesh, sharding rules, dry-run / train / serve drivers.
 roofline  — compiled-artifact roofline analysis.
+tuning    — calibrated autotuning: measurement-fit cost model, tunable
+            kernel parameters, persistent on-disk tune/plan store
+            (``REPRO_TUNE_CACHE``).
 """
 
 __version__ = "0.1.0"

@@ -70,6 +70,16 @@ class ExecutionConfig:
                         A-sided streams stay fixed, so format selection can
                         flip at the SpMM crossover; applies still accept any
                         rhs width at run time — ``k`` only steers planning.
+    tuned             — pinned tunable kernel parameters
+                        (:class:`repro.tuning.TunedParams`, or a plain dict
+                        of knob names; validated against the declared
+                        bounds).  None (default) lets ``plan()`` resolve
+                        them: from the persistent tune store when one is
+                        active, from the measured sweep under
+                        ``mode="measure"``, else the library defaults.  A
+                        pinned assignment is part of the plan identity —
+                        changing a tuned value changes the execution token,
+                        the plan-cache slot, and the compiled program.
     """
 
     format: str = "auto"
@@ -79,6 +89,7 @@ class ExecutionConfig:
     partition_method: Optional[str] = None
     candidates: Optional[Tuple[str, ...]] = None
     k: int = 1
+    tuned: Optional[Any] = None
 
     def __post_init__(self):
         if self.workload not in WORKLOADS:
@@ -92,6 +103,15 @@ class ExecutionConfig:
             object.__setattr__(self, "candidates", tuple(self.candidates))
         if not isinstance(self.k, int) or self.k < 1:
             raise ValueError(f"k must be a positive int, got {self.k!r}")
+        if self.tuned is not None:
+            from ..tuning.params import TunedParams
+
+            if isinstance(self.tuned, dict):
+                object.__setattr__(self, "tuned",
+                                   TunedParams.from_dict(self.tuned))
+            elif not isinstance(self.tuned, TunedParams):
+                raise TypeError("tuned must be a repro.tuning.TunedParams "
+                                f"or a dict, got {type(self.tuned).__name__}")
 
     def token(self) -> tuple:
         """Hashable identity for the plan cache (dtype name-normalized)."""
@@ -99,4 +119,5 @@ class ExecutionConfig:
 
         dt = None if self.dtype is None else jnp.dtype(self.dtype).name
         return (self.format, self.mode, self.workload, dt,
-                self.partition_method, self.candidates, self.k)
+                self.partition_method, self.candidates, self.k,
+                None if self.tuned is None else self.tuned.token())

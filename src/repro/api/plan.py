@@ -73,6 +73,23 @@ def _run_untraced(fn):
 _UNTRACED_POOL = None
 
 
+def _partition_of(e):
+    """Reconstruct the :class:`~repro.core.Partition` behind a host EHYB
+    build (for persisting a cold plan's partitioning work).  ``perm`` /
+    ``inv_perm`` are carried verbatim; ``part_vec`` falls out of the slot
+    layout (vertices of partition p occupy slots [p*V, (p+1)*V))."""
+    if e is None:
+        return None
+    from ..core.partition import Partition
+
+    inv = np.asarray(e.inv_perm)
+    return Partition(
+        n=e.n, n_pad=e.n_pad, n_parts=e.n_parts, vec_size=e.vec_size,
+        part_vec=(inv[:e.n] // e.vec_size).astype(np.int32),
+        perm=np.asarray(e.perm, np.int64), inv_perm=inv.astype(np.int64),
+        method=getattr(e, "partition_method", "bfs"), seconds=0.0)
+
+
 # ---------------------------------------------------------------------------
 # the plan cache (the one visible memo replacing the old module globals)
 # ---------------------------------------------------------------------------
@@ -136,6 +153,64 @@ class PlanCache:
             self._host_pattern[(pkey, method)] = e
         return e
 
+    # ---- persistent tune/plan store (repro.tuning.store) -------------------
+
+    @staticmethod
+    def store():
+        """The active on-disk tune store, or None (in-memory only)."""
+        from ..tuning.store import get_store
+
+        return get_store()
+
+    def load(self, key: str, context: str, *, dtype=None, k: int = 1,
+             n_dev: int = 1):
+        """Stored ``(TuneEntry, Partition)`` for a pattern-hash/config, or
+        ``(None, None)`` — corruption is quarantined, stale versions are
+        evicted, and the store's hit/miss counters record the outcome."""
+        st = self.store()
+        if st is None:
+            return None, None
+        import jax
+        import jax.numpy as jnp
+
+        res = st.load(key, jax.default_backend(),
+                      jnp.dtype(dtype or jnp.float32).name, context,
+                      k, n_dev)
+        return (None, None) if res is None else res
+
+    def save(self, plan: "Plan") -> bool:
+        """Persist a plan's tuned decisions (format, partition strategy +
+        arrays, tuned kernel parameters) into the active store.  No-op
+        without a store; refused while fault injection is active."""
+        st = self.store()
+        if st is None:
+            return False
+        import jax
+        import jax.numpy as jnp
+
+        from ..tuning.store import TuneEntry
+
+        part = (plan.partition_tuning.partition
+                if plan.partition_tuning is not None else None)
+        if part is None:
+            part = _partition_of(plan._shared.get("ehyb"))
+        n_dev = plan.mesh.shape[plan.axis] if plan.mesh is not None else 1
+        entry = TuneEntry(
+            pattern=plan.key, backend=jax.default_backend(),
+            dtype=jnp.dtype(plan.execution.dtype or jnp.float32).name,
+            context=plan.context, k=plan.execution.k, n_dev=n_dev,
+            format=plan.format, partition_method=plan.partition_strategy,
+            tuned=plan.tuned.to_dict() if plan.tuned is not None else {},
+            meta={"n": plan.n, "nnz": plan.nnz,
+                  "mode": plan.execution.mode})
+        return st.save(entry, part)
+
+    def evict(self, pattern: Optional[str] = None) -> int:
+        """Evict persisted entries (all, or one pattern hash) from the
+        active store; returns the number of entries removed."""
+        st = self.store()
+        return 0 if st is None else st.evict(pattern)
+
     # ---- bookkeeping -------------------------------------------------------
 
     def __len__(self) -> int:
@@ -147,8 +222,14 @@ class PlanCache:
         self._host_pattern.clear()
 
     def stats(self) -> dict:
+        """In-memory plan/host-build counts plus the tune layer: the
+        autotuner's decision memo and, when a persistent store is active,
+        its disk hit/miss/stale/quarantine counters."""
+        from ..autotune.tuner import tune_cache_info
+
         return {"plans": len(self._plans), "host_builds": len(self._host),
-                "host_patterns": len(self._host_pattern)}
+                "host_patterns": len(self._host_pattern),
+                "tune": tune_cache_info()}
 
 
 PLAN_CACHE = PlanCache()
@@ -194,6 +275,8 @@ class Plan:
     tuning: Any = None              # TuneResult | None
     partition_strategy: Optional[str] = None  # strategy behind the host EHYB
     partition_tuning: Any = None    # PartitionTuneResult | None
+    tuned: Any = None               # resolved TunedParams (never None after
+    #                                 _create: pin > store > sweep > defaults)
     pattern: SparseCSR = None       # pattern holder (values = plan seed)
     cache: Any = None               # owning PlanCache (host-build memo)
     # ---- lazy value-bound state -------------------------------------------
@@ -240,6 +323,7 @@ class Plan:
                        else execution.workload)
         tuning = None
         fmt = execution.format
+        shardable = ()
         if mesh is not None:
             shardable = tuple(f for f in at.available_formats()
                               if at.get_format(f).shard is not None)
@@ -247,6 +331,23 @@ class Plan:
                 raise ValueError(
                     f"format {fmt!r} carries no partition structure to "
                     f"shard; pick one of {sorted(shardable)}")
+        # ---- persistent tune store consult --------------------------------
+        # A stored entry for this (pattern, backend, dtype, context, k,
+        # n_dev) warm-starts the whole decision stack: format, partition
+        # strategy + the Partition arrays themselves, and the tuned kernel
+        # parameters — a fresh process reaches a bound operator with zero
+        # re-partitioning and zero tuner measurements.  Explicit config pins
+        # always win over the store; an entry whose format a pinned
+        # candidate set (or mesh shardability) rules out is ignored.
+        from ..tuning.params import resolve as _resolve_params
+
+        entry, part_loaded = cache.load(key, context, dtype=execution.dtype,
+                                        k=execution.k, n_dev=n_dev)
+        if entry is not None:
+            allowed = execution.candidates or at.available_formats()
+            if fmt == "auto" and (entry.format not in allowed or (
+                    mesh is not None and entry.format not in shardable)):
+                entry, part_loaded = None, None
         # ---- partition strategy (joins the autotune decision) -------------
         # An unset partition_method autotunes the strategy whenever an
         # EHYB-family format may be selected: every registered strategy is
@@ -257,7 +358,10 @@ class Plan:
         # to different strategies coexist and rebinds stay refill-only.
         method = execution.partition_method
         ptuning = None
-        if method is None:
+        if (method is None and entry is not None
+                and entry.partition_method is not None):
+            method = entry.partition_method
+        elif method is None:
             needs_part = (any(at.get_format(f).shard is not None
                               for f in (execution.candidates
                                         or at.available_formats()))
@@ -273,10 +377,21 @@ class Plan:
                                         or jnp.float32).itemsize, **kw)
                 method = ptuning.strategy
         if method is not None:
-            shared["ehyb"] = cache.host_ehyb(
-                pattern, method=method,
-                part=ptuning.partition if ptuning is not None else None)
-        if fmt == "auto":
+            part_seed = (ptuning.partition if ptuning is not None
+                         else part_loaded)
+            shared["ehyb"] = cache.host_ehyb(pattern, method=method,
+                                             part=part_seed)
+        # ---- tuned kernel parameters + format ------------------------------
+        tuned = execution.tuned
+        if tuned is None and entry is not None:
+            tuned = entry.tuned_params()
+        if entry is not None and fmt == "auto":
+            # full warm start: the stored decision replaces the autotune
+            # pass entirely (its counters stay untouched — asserted by the
+            # persistence tests)
+            fmt = entry.format
+            at.get_format(fmt)
+        elif fmt == "auto":
             cand = execution.candidates
             if mesh is not None:
                 cand = tuple(f for f in (cand or shardable) if f in shardable)
@@ -284,15 +399,24 @@ class Plan:
             tuning = at.autotune(pattern, execution.dtype,
                                  mode=execution.mode, candidates=cand,
                                  shared=shared, context=context,
-                                 k=execution.k, **kw)
+                                 k=execution.k, tuned=tuned, **kw)
             fmt = tuning.format
+            if tuned is None and tuning.tuned is not None:
+                from ..tuning.params import TunedParams
+
+                tuned = TunedParams.from_dict(tuning.tuned)
         else:
             at.get_format(fmt)          # validate the name early
-        return cls(key=key, n=pattern.n, nnz=pattern.nnz, format=fmt,
-                   context=context, execution=execution, mesh=mesh,
-                   axis=axis, tuning=tuning, partition_strategy=method,
-                   partition_tuning=ptuning, pattern=pattern, cache=cache,
-                   _shared=shared)
+        tuned = _resolve_params(tuned)
+        shared["tuned"] = tuned
+        p = cls(key=key, n=pattern.n, nnz=pattern.nnz, format=fmt,
+                context=context, execution=execution, mesh=mesh,
+                axis=axis, tuning=tuning, partition_strategy=method,
+                partition_tuning=ptuning, tuned=tuned, pattern=pattern,
+                cache=cache, _shared=shared)
+        if entry is None:
+            cache.save(p)        # no-op without an active store
+        return p
 
     # ---- binding -----------------------------------------------------------
 
@@ -645,6 +769,15 @@ class Plan:
         return cache.plan_for(tp, self.mesh, self.axis, self.execution)
 
     # ---- properties --------------------------------------------------------
+
+    def identity(self) -> tuple:
+        """The plan's complete decision tuple: pattern hash, chosen format,
+        context, partition strategy, execution token, tuned-parameter token.
+        A warm (store-served) plan must be bit-identical here to the cold
+        plan that persisted it — pinned by the persistence tests."""
+        return (self.key, self.format, self.context, self.partition_strategy,
+                self.execution.token(),
+                None if self.tuned is None else self.tuned.token())
 
     @property
     def is_sharded(self) -> bool:

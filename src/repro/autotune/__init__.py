@@ -18,18 +18,18 @@ The user-facing entry point is ``repro.core.spmv.spmv(A, x)`` /
 
 from .registry import (FORMATS, FormatSpec, available_formats, build_format,
                        get_format, register_format)
-from .cost import (CONTEXTS, MatrixStats, allgather_penalty_bytes,
-                   estimate_bytes, matrix_key, matrix_stats, model_table,
-                   partition_cost, pattern_hash, rank_formats)
+from .cost import (CONTEXTS, TERMS, MatrixStats, allgather_penalty_bytes,
+                   estimate_bytes, estimate_terms, matrix_key, matrix_stats,
+                   model_table, partition_cost, pattern_hash, rank_formats)
 from .tuner import (PartitionTuneResult, TuneResult, autotune,
                     autotune_partition, clear_cache, tune_cache_info)
 
 __all__ = [
     "FORMATS", "FormatSpec", "available_formats", "build_format",
     "get_format", "register_format",
-    "CONTEXTS", "MatrixStats", "allgather_penalty_bytes", "estimate_bytes",
-    "matrix_key", "matrix_stats", "model_table", "partition_cost",
-    "pattern_hash", "rank_formats",
+    "CONTEXTS", "TERMS", "MatrixStats", "allgather_penalty_bytes",
+    "estimate_bytes", "estimate_terms", "matrix_key", "matrix_stats",
+    "model_table", "partition_cost", "pattern_hash", "rank_formats",
     "PartitionTuneResult", "TuneResult", "autotune", "autotune_partition",
     "clear_cache", "tune_cache_info",
 ]

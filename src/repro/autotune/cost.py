@@ -114,6 +114,16 @@ def matrix_key(m: SparseCSR, pattern: Optional[str] = None) -> str:
 
 CONTEXTS = ("spmv", "solver", "dist")
 
+#: Canonical byte-term axes of the cost model (the calibration features).
+#: ``ell``  — the sequential A-stream (values + column metadata);
+#: ``x_cache`` — x reads served by the explicit cache (EHYB) or full reuse
+#:           (dense);
+#: ``er``   — random-gather traffic: ER tiles plus any *uncached* x stream;
+#: ``y``    — the output store;
+#: ``perm`` — the original-space permutation round trip (EHYB, "spmv" only);
+#: ``interconnect`` — scheduled halo / all-gather words ("dist" only).
+TERMS = ("ell", "x_cache", "er", "y", "perm", "interconnect")
+
 
 def allgather_penalty_bytes(n: int, n_dev: int, val_bytes: int,
                             k: int = 1) -> int:
@@ -164,6 +174,43 @@ def estimate_bytes(m: SparseCSR, fmt: str, val_bytes: int = 4,
                               k=k)
                    + allgather_penalty_bytes(stats.n, n_dev, val_bytes, k))
     return int(spec.model(m, stats, val_bytes, shared, context=context, k=k))
+
+
+def estimate_terms(m: SparseCSR, fmt: str, val_bytes: int = 4,
+                   shared: Optional[dict] = None,
+                   stats: Optional[MatrixStats] = None,
+                   context: str = "spmv", k: int = 1) -> Dict[str, int]:
+    """Per-term byte breakdown of one SpMV of ``m`` in format ``fmt``.
+
+    The same accounting as :func:`estimate_bytes` — ``sum(terms.values())
+    == estimate_bytes(...)`` is pinned by tests — but split along the
+    canonical :data:`TERMS` axes so the calibration layer
+    (:mod:`repro.tuning.calibration`) can fit one seconds-per-byte
+    coefficient per *traffic kind* (sequential stream vs cached read vs
+    random gather) instead of one effective bandwidth for everything.
+    Formats registered without a ``terms`` hook collapse their whole model
+    into the sequential-stream term."""
+    from .registry import get_format
+
+    if context not in CONTEXTS:
+        raise ValueError(f"unknown context {context!r}; have {CONTEXTS}")
+    shared = {} if shared is None else shared
+    stats = stats or matrix_stats(m)
+    spec = get_format(fmt)
+    if context == "dist" and "n_dev" not in shared:
+        raise ValueError("context='dist' needs the mesh size: pass "
+                         "shared={'n_dev': ...}")
+    if context == "dist" and spec.shard is None:
+        base = estimate_terms(m, fmt, val_bytes, shared, stats, "solver", k)
+        base["interconnect"] = allgather_penalty_bytes(
+            stats.n, int(shared["n_dev"]), val_bytes, k)
+        return base
+    if spec.terms is not None:
+        raw = spec.terms(m, stats, val_bytes, shared, context=context, k=k)
+    else:
+        raw = {"ell": spec.model(m, stats, val_bytes, shared,
+                                 context=context, k=k)}
+    return {t: int(raw.get(t, 0)) for t in TERMS}
 
 
 def model_table(m: SparseCSR, val_bytes: int = 4,

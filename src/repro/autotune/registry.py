@@ -72,6 +72,10 @@ class FormatSpec:
     # megakernel.  None = the chain goes native -> reference directly.
     fallback: Optional[Callable] = None
     fallback_permuted: Optional[Callable] = None
+    # per-term byte breakdown along cost.TERMS (same accounting as ``model``,
+    # split by traffic kind) — the calibration layer's feature vector.  None
+    # = the whole model collapses into the sequential-stream term.
+    terms: Optional[Callable] = None
     # static verification hook (analysis.invariants): ``invariants(obj) ->
     # list[Finding]`` checks the format's structural invariants on a built
     # device container — index bounds, permutation bijectivity, staircase
@@ -135,16 +139,42 @@ def shared_ehyb(m: SparseCSR, shared: dict) -> EHYB:
     return shared["ehyb"]
 
 
+def _tuned_n_buckets(shared: dict) -> int:
+    """The bucketed format's width-class count for this build: the tuned
+    value when the caller planned one (``shared["tuned"]``), else the
+    ``build_buckets`` default."""
+    tuned = shared.get("tuned")
+    return tuned.n_buckets if tuned is not None else 4
+
+
+def memo_buckets(e: EHYB, n_buckets: int = 4):
+    """Bucketed view of a host EHYB build, memoized per bucket count.
+
+    The default count lives in the ``_buckets`` slot (the one
+    ``EHYB.refill`` carries across value refreshes); tuned non-default
+    counts memoize in the sibling ``_buckets_nb`` dict, also refill-
+    propagated, so a tuned plan's rebinds never re-bucket either."""
+    if n_buckets == 4:
+        b = getattr(e, "_buckets", None)
+        if b is None:
+            b = e._buckets = build_buckets(e)
+        return b
+    memo = getattr(e, "_buckets_nb", None)
+    if memo is None:
+        memo = e._buckets_nb = {}
+    b = memo.get(n_buckets)
+    if b is None:
+        b = memo[n_buckets] = build_buckets(e, n_buckets=n_buckets)
+    return b
+
+
 def shared_buckets(m: SparseCSR, shared: dict):
     """Width-bucketed view of the shared EHYB build, memoized on the host
     EHYB instance — the cost model and the device builder reuse one
     bucketing pass (it copies every ELL tile, so rebuilding per model
-    evaluation is measurable on large matrices)."""
-    e = shared_ehyb(m, shared)
-    b = getattr(e, "_buckets", None)
-    if b is None:
-        b = e._buckets = build_buckets(e)
-    return b
+    evaluation is measurable on large matrices).  The bucket count follows
+    ``shared["tuned"]`` (a :class:`repro.tuning.TunedParams`) when set."""
+    return memo_buckets(shared_ehyb(m, shared), _tuned_n_buckets(shared))
 
 
 def shared_packed(m: SparseCSR, shared: dict):
@@ -190,7 +220,9 @@ def _build_ehyb_packed(m, dtype, shared):
     from ..kernels.ops import ehyb_spmv_packed_pallas
 
     pk = shared_packed(m, shared)
-    obj = EHYBPackedDevice.from_packed(pk, dtype)
+    tuned = shared.get("tuned")
+    obj = EHYBPackedDevice.from_packed(
+        pk, dtype, kparams=tuned.token() if tuned is not None else ())
     obj.host_packed = pk              # refill provenance (not pytree state)
     return obj, ehyb_spmv_packed_pallas
 
@@ -304,9 +336,11 @@ def _refill_ehyb_bucketed(obj, m, dtype, shared):
 
     b_old = obj.host
     e = _refilled_host(m, shared, b_old.base if b_old is not None else None)
-    b = getattr(e, "_buckets", None)
-    if b is None:
-        b = e._buckets = build_buckets(e)
+    # rebuild at the container's own bucket count (it may be a tuned,
+    # non-default value) — EHYB.refill propagates both memo slots, so this
+    # is a dict hit on the refill path, not a re-bucketing pass
+    b = memo_buckets(e, len(b_old.vals) if b_old is not None
+                     else _tuned_n_buckets(shared))
     g = group_er_by_partition(e)
     return dataclasses.replace(
         obj, vals=tuple(jnp.asarray(v, dtype=dtype) for v in b.vals),
@@ -417,6 +451,63 @@ def _model_dense(m, stats, vb, shared, context: str = "spmv",
     return stats.n * stats.n * vb + k * 2 * stats.n * vb
 
 
+# ---------------------------------------------------------------------------
+# per-term breakdowns (cost.TERMS axes) — same totals as the models above,
+# split by traffic kind so calibration can price sequential streams, cached
+# reads, and random gathers separately.  For the unpartitioned formats the
+# split is: A-stream -> "ell", uncached x gather -> "er", output -> "y".
+# ---------------------------------------------------------------------------
+
+def _terms_csr(m, stats, vb, shared, context="spmv", k=1):
+    return {"ell": (8 + vb) * stats.nnz,
+            "er": k * _x_stream_bytes(stats, vb),
+            "y": k * vb * stats.n}
+
+
+def _terms_ell(m, stats, vb, shared, context="spmv", k=1):
+    return {"ell": stats.n * stats.max_row * (vb + 4),
+            "er": k * _x_stream_bytes(stats, vb),
+            "y": k * vb * stats.n}
+
+
+def _terms_hyb(m, stats, vb, shared, context="spmv", k=1):
+    lens = m.row_lengths()
+    kq = max(int(np.quantile(lens, 0.9)) if stats.n else 1, 1)
+    spill = int(np.maximum(lens - kq, 0).sum())
+    return {"ell": stats.n * kq * (vb + 4),
+            "er": spill * (vb + 8) + k * _x_stream_bytes(stats, vb),
+            "y": k * vb * stats.n}
+
+
+def _terms_dense(m, stats, vb, shared, context="spmv", k=1):
+    return {"ell": stats.n * stats.n * vb, "x_cache": k * stats.n * vb,
+            "y": k * stats.n * vb}
+
+
+def _split_bytes_moved(d: dict) -> dict:
+    return {t: v for t, v in d.items() if t != "total"}
+
+
+def _terms_ehyb(m, stats, vb, shared, context="spmv", k=1):
+    return _split_bytes_moved(shared_ehyb(m, shared).bytes_moved(
+        vb, layout="tile", space=_ehyb_space(context), fused_er=True, k=k,
+        **_ehyb_dist_kw(m, shared, context)))
+
+
+def _terms_ehyb_bucketed(m, stats, vb, shared, context="spmv", k=1):
+    if context == "dist":
+        return _terms_ehyb(m, stats, vb, shared, context, k)  # see model
+    return _split_bytes_moved(shared_buckets(m, shared).bytes_moved(
+        vb, space=_ehyb_space(context), fused_er=True, k=k))
+
+
+def _terms_ehyb_packed(m, stats, vb, shared, context="spmv", k=1):
+    if context == "dist":
+        return _terms_ehyb(m, stats, vb, shared, context, k)  # see model
+    return _split_bytes_moved(shared_ehyb(m, shared).bytes_moved(
+        vb, layout="packed", space=_ehyb_space(context), fused_er=True, k=k))
+
+
 def _invariants_hook(name: str) -> Callable:
     """Default ``invariants`` hook: delegate to the built-in per-format
     checkers in ``repro.analysis.invariants`` (lazy import — the registry
@@ -429,15 +520,15 @@ def _invariants_hook(name: str) -> Callable:
 
 
 register_format(FormatSpec(
-    "csr", _build_csr, _model_csr,
+    "csr", _build_csr, _model_csr, terms=_terms_csr,
     description="COO/CSR gather + segment-sum stream (paper's baseline)",
     refill=_refill_csr, invariants=_invariants_hook("csr")))
 register_format(FormatSpec(
-    "ell", _build_ell, _model_ell,
+    "ell", _build_ell, _model_ell, terms=_terms_ell,
     description="ELLPACK padded to the global max row width",
     refill=_refill_ell, invariants=_invariants_hook("ell")))
 register_format(FormatSpec(
-    "hyb", _build_hyb, _model_hyb,
+    "hyb", _build_hyb, _model_hyb, terms=_terms_hyb,
     description="classic HYB (Bell & Garland): ELL to 90th pct + COO spill",
     refill=_refill_hyb, invariants=_invariants_hook("hyb")))
 def _shard_ehyb(op, mesh, axis, csr=None):
@@ -453,17 +544,19 @@ def _shard_ehyb(op, mesh, axis, csr=None):
 
 
 register_format(FormatSpec(
-    "ehyb", _build_ehyb, _model_ehyb,
+    "ehyb", _build_ehyb, _model_ehyb, terms=_terms_ehyb,
     description="EHYB uniform tiles, uint16 local cols, explicit x cache",
     permuted=ehyb_spmv_permuted, refill=_refill_ehyb, shard=_shard_ehyb,
     invariants=_invariants_hook("ehyb")))
 register_format(FormatSpec(
     "ehyb_bucketed", _build_ehyb_bucketed, _model_ehyb_bucketed,
+    terms=_terms_ehyb_bucketed,
     description="EHYB with width-bucketed partition tiles",
     permuted=ehyb_buckets_spmv_permuted, refill=_refill_ehyb_bucketed,
     shard=_shard_ehyb, invariants=_invariants_hook("ehyb_bucketed")))
 register_format(FormatSpec(
     "ehyb_packed", _build_ehyb_packed, _model_ehyb_packed,
+    terms=_terms_ehyb_packed,
     kernel="pallas-interpret",
     description="EHYB packed staircase (fused Pallas megakernel v2)",
     permuted=_packed_permuted, refill=_refill_ehyb_packed,
@@ -471,6 +564,6 @@ register_format(FormatSpec(
     fallback=_packed_unfused, fallback_permuted=_packed_unfused_permuted,
     invariants=_invariants_hook("ehyb_packed")))
 register_format(FormatSpec(
-    "dense", _build_dense, _model_dense,
+    "dense", _build_dense, _model_dense, terms=_terms_dense,
     description="dense matmul (wins only on tiny/near-dense matrices)",
     refill=_refill_dense, invariants=_invariants_hook("dense")))

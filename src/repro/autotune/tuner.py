@@ -35,6 +35,15 @@ class TuneResult:
     modeled_bytes: Dict[str, int]     # per-candidate modeled HBM bytes
     measured_s: Optional[Dict[str, float]]  # per-timed-candidate seconds
     context: str = "spmv"             # workload the model ranked for
+    # calibrated predicted seconds per candidate (None when no calibration
+    # model is installed for the current backend — ranking fell back to raw
+    # modeled bytes)
+    calibrated_s: Optional[Dict[str, float]] = None
+    # winning tunable-kernel-parameter assignment (TunedParams payload) from
+    # the measured sweep, or None when no sweep ran for the winner
+    tuned: Optional[Dict[str, int]] = None
+    # measured seconds per swept assignment, keyed by TunedParams.token()
+    sweep_s: Optional[Dict[tuple, float]] = None
 
 
 @dataclasses.dataclass(eq=False)
@@ -63,19 +72,48 @@ def clear_cache() -> None:
 
 
 def tune_cache_info() -> dict:
-    return {"entries": len(_CACHE), "keys": sorted(k[0] for k in _CACHE.keys())}
+    """In-memory tune-cache contents plus the persistent store's counters
+    (``disk`` is None when no store is active) — surfaced through
+    ``repro.api.PLAN_CACHE.stats()``."""
+    from ..tuning.store import get_store
+
+    st = get_store()
+    return {"entries": len(_CACHE),
+            "keys": sorted(k[0] for k in _CACHE.keys()),
+            "disk": None if st is None else st.stats()}
 
 
-def _time_spmv(apply, obj, x, repeats: int = 3, warmup: int = 1) -> float:
+def _time_spmv(apply, obj, x, repeats: int = 5, warmup: int = 1,
+               min_duration_s: float = 1e-3, max_inner: int = 512) -> float:
+    """Median seconds of one ``apply(obj, x)``.
+
+    Every repeat is explicitly ``block_until_ready``-synced (dispatch alone
+    is not a measurement), and each repeat runs an inner loop sized so it
+    spans at least ``min_duration_s`` — a sub-millisecond apply timed as a
+    single call sits at the clock/dispatch noise floor, which is exactly
+    where format rankings flip run to run.  Bumps the ``tune.measured``
+    counter once per call: warm-start paths assert that count stays zero.
+    """
+    import math
+
     import jax
 
+    from ..core.counters import bump
+
+    bump("tune.measured")
     for _ in range(warmup):
         jax.block_until_ready(apply(obj, x))
+    t0 = time.perf_counter()
+    jax.block_until_ready(apply(obj, x))
+    probe = time.perf_counter() - t0          # also one more warmup rep
+    inner = min(max(1, math.ceil(min_duration_s / max(probe, 1e-9))),
+                max_inner)
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        jax.block_until_ready(apply(obj, x))
-        ts.append(time.perf_counter() - t0)
+        for _ in range(inner):
+            jax.block_until_ready(apply(obj, x))
+        ts.append((time.perf_counter() - t0) / inner)
     return float(np.median(ts))
 
 
@@ -83,7 +121,8 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
              candidates=None, top_k: int = 3, use_cache: bool = True,
              shared: Optional[dict] = None,
              context: str = "spmv", n_dev: int = 1,
-             k: int = 1) -> TuneResult:
+             k: int = 1, tuned=None,
+             sweep_params: Optional[bool] = None) -> TuneResult:
     """Select the SpMV format for ``m``; see module docstring for the passes.
 
     ``shared`` (optional dict) carries the host EHYB build across the cost
@@ -108,10 +147,29 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
     model scales its x/y-sided terms ×k while A-sided streams stay fixed,
     so the ranking can flip as k grows — the SpMM crossover; the measured
     pass times an (n, k) rhs to match.  Decisions are cached per k.
+
+    ``tuned`` (a :class:`repro.tuning.TunedParams`) pins the tunable kernel
+    parameters for every candidate build; ``None`` leaves them to the
+    measured sweep.  ``sweep_params`` controls that sweep — after the
+    measured pass picks a winner, its declared parameter grid
+    (:func:`repro.tuning.sweep_grid`) is built and timed and the fastest
+    assignment is recorded in ``TuneResult.tuned``.  Default: sweep exactly
+    when ``mode="measure"``, the context is measurable (not "dist"), and no
+    ``tuned`` pin was given.
+
+    When a calibration model is installed for the current backend
+    (:func:`repro.tuning.calibration.get_model`), candidates are ranked by
+    **calibrated predicted seconds** (per-term bandwidth coefficients +
+    per-format dispatch intercepts) instead of raw modeled bytes; the
+    prediction table lands in ``TuneResult.calibrated_s`` and the model's
+    fingerprint joins the cache key, so installing or refreshing a
+    calibration never serves stale decisions.
     """
     import jax
     import jax.numpy as jnp
 
+    from ..tuning import calibration as _calibration
+    from ..tuning.params import TunedParams, sweep_grid
     from .cost import CONTEXTS
     from .registry import available_formats, get_format
 
@@ -129,8 +187,13 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
     dtype = dtype or jnp.float32
     cand = tuple(candidates or available_formats())
     key = pattern_hash(m)
+    cal = _calibration.get_model()
+    sweep = ((mode == "measure" and context != "dist" and tuned is None)
+             if sweep_params is None else bool(sweep_params))
     cache_key = (key, jnp.dtype(dtype).name, mode, cand, context,
-                 n_dev if context == "dist" else None, k)
+                 n_dev if context == "dist" else None, k,
+                 None if tuned is None else tuned.token(), sweep,
+                 None if cal is None else cal.fingerprint())
     # rankings decided under fault injection must not outlive it (nor may a
     # clean cached ranking mask an injected failure a test wants to observe)
     from ..reliability.chaos import active as _chaos_active
@@ -143,9 +206,20 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
     shared = {} if shared is None else shared
     if context == "dist":
         shared["n_dev"] = n_dev
+    if tuned is not None:
+        shared["tuned"] = tuned
     val_bytes = jnp.dtype(dtype).itemsize
     ranked = rank_formats(m, val_bytes, cand, shared, context, k)
     modeled = dict(ranked)
+    calibrated = None
+    if cal is not None:
+        from .cost import estimate_terms, matrix_stats
+
+        stats = matrix_stats(m)
+        calibrated = {f: cal.predict(
+            estimate_terms(m, f, val_bytes, shared, stats, context, k), f)
+            for f in cand}
+        ranked = sorted(calibrated.items(), key=lambda kv: (kv[1], kv[0]))
     # the winner must be executable efficiently on the current backend:
     # interpreter-backed kernels are ranked (their modeled bytes are the TPU
     # story) but never *selected* on CPU, where they would run in Python
@@ -200,9 +274,55 @@ def autotune(m: SparseCSR, dtype=None, *, mode: str = "model",
             if measured:
                 winner = min(sorted(measured), key=measured.get)
 
+    # ---- tunable-kernel-parameter sweep for the winner --------------------
+    # (measured contexts only: parameter choice is a timing decision, and a
+    # "dist" plan has no single-device timing worth listening to)
+    best = tuned
+    sweep_s = None
+    if sweep and mode == "measure" and context != "dist":
+        spec = get_format(winner)
+        grid = list(sweep_grid(winner, k=k))
+        if len(grid) > 1 and not (on_cpu and spec.kernel != "xla"):
+            rng0 = np.random.default_rng(1)
+            shape = (m.n,) if k == 1 else (m.n, k)
+            x = jnp.asarray(rng0.standard_normal(shape), dtype=dtype)
+            sweep_s = {}
+            for params in grid:
+                try:
+                    _chaos_check(f"tune:{winner}:sweep")
+                    sh = dict(shared)
+                    sh["tuned"] = params
+                    obj, apply = spec.build(m, dtype, sh)
+                    if context == "solver" and spec.permuted is not None:
+                        pshape = (obj.n_pad,) if k == 1 else (obj.n_pad, k)
+                        xp = jnp.asarray(rng0.standard_normal(pshape),
+                                         dtype=dtype)
+                        sweep_s[params.token()] = _time_spmv(spec.permuted,
+                                                             obj, xp)
+                    else:
+                        sweep_s[params.token()] = _time_spmv(apply, obj, x)
+                except Exception as e:    # noqa: BLE001 — same rule as the
+                    # candidate loop above: a swept assignment that fails to
+                    # build/compile/run is skipped, never fatal
+                    import warnings
+
+                    from ..core.counters import bump
+                    from ..reliability.policy import ReliabilityWarning
+
+                    bump("tune.candidate_failed")
+                    warnings.warn(
+                        f"autotune: swept params {params.to_dict()} for "
+                        f"{winner!r} failed ({type(e).__name__}: {e}); "
+                        f"skipping", ReliabilityWarning, stacklevel=2)
+            if sweep_s:
+                best_tok = min(sorted(sweep_s), key=sweep_s.get)
+                best = TunedParams(**dict(best_tok))
+
     result = TuneResult(format=winner, key=key, mode=mode,
                         modeled_bytes=modeled, measured_s=measured,
-                        context=context)
+                        context=context, calibrated_s=calibrated,
+                        tuned=None if best is None else best.to_dict(),
+                        sweep_s=sweep_s)
     if use_cache:
         _CACHE[cache_key] = result
     return result

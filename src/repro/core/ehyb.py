@@ -230,13 +230,23 @@ class EHYB:
             gp = np.zeros_like(g["er_p_vals"])
             gp[g["own"], g["slot"]] = er[g["src"]]
             new._er_grouped = {**g, "er_p_vals": gp}
-        b = getattr(self, "_buckets", None)
-        if b is not None:
-            new._buckets = EHYBBuckets(
+        def _refill_buckets(b):
+            return EHYBBuckets(
                 base=new, part_ids=b.part_ids,
                 vals=[np.ascontiguousarray(ell[ch, :, : v.shape[2]])
                       for ch, v in zip(b.part_ids, b.vals)],
                 cols=b.cols, widths=b.widths)
+
+        b = getattr(self, "_buckets", None)
+        if b is not None:
+            new._buckets = _refill_buckets(b)
+        # non-default bucket counts (tuned n_buckets) memoize separately —
+        # refill them through the same value-only path so a tuned bucketed
+        # operator never silently re-buckets
+        nb = getattr(self, "_buckets_nb", None)
+        if nb is not None:
+            new._buckets_nb = {count: _refill_buckets(bb)
+                               for count, bb in nb.items()}
         pk = getattr(self, "_packed", None)
         if pk is not None:
             new._packed = pk.refill(new)

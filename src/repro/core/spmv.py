@@ -194,6 +194,13 @@ class EHYBPackedDevice:
     er_p_rows: jnp.ndarray
     perm: jnp.ndarray
     inv_perm: jnp.ndarray
+    # tuned kernel parameters (repro.tuning.TunedParams.token(): sorted
+    # (name, value) pairs, or () for library defaults).  Static aux, not a
+    # leaf: the kernel wrappers read it at trace time, so two operators
+    # tuned differently have different treedefs and can never share a jit
+    # cache entry — while refill-style rebinds (same tuning, new values)
+    # keep the treedef and stay retrace-free.
+    kparams: tuple = ()
 
     def tree_flatten(self):
         leaves = (self.packed_vals, self.packed_cols, self.col_starts,
@@ -201,14 +208,15 @@ class EHYBPackedDevice:
                   self.er_p_vals, self.er_p_cols, self.er_p_rows,
                   self.perm, self.inv_perm)
         return leaves, (self.n, self.n_pad, self.n_parts, self.vec_size,
-                        self.has_er)
+                        self.has_er, self.kparams)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(*aux, *leaves)
+        *head, kparams = aux
+        return cls(*head, *leaves, kparams=kparams)
 
     @classmethod
-    def from_packed(cls, pk, dtype=jnp.float32):
+    def from_packed(cls, pk, dtype=jnp.float32, kparams: tuple = ()):
         e = pk.base
         t = e.as_jax(dtype=dtype)
         g = group_er_by_partition(e)
@@ -220,7 +228,7 @@ class EHYBPackedDevice:
                    jnp.asarray(g["er_p_vals"], dtype=dtype),
                    jnp.asarray(g["er_p_cols"]),
                    jnp.asarray(g["er_p_rows"]),
-                   t["perm"], t["inv_perm"])
+                   t["perm"], t["inv_perm"], kparams=kparams)
 
 
 # ---------------------------------------------------------------------------

@@ -30,12 +30,14 @@ from .ehyb_spmv import _er_stage, _w_chunk
 
 # rhs columns per accumulator chunk.  Small enough that the (V, Wc, Kc)
 # gather chunk keeps Wc large (the W sweep stays shallow); large enough to
-# amortize each column-index widen/gather across many rhs.
+# amortize each column-index widen/gather across many rhs.  Tunable
+# (repro.tuning SEARCH_SPACE "rhs_chunk") via the wrappers' ``rhs_chunk``
+# kwarg.
 _RHS_CHUNK = 16
 
 
-def _k_chunk(k: int) -> int:
-    return max(1, min(k, _RHS_CHUNK))
+def _k_chunk(k: int, rhs_chunk: int | None = None) -> int:
+    return max(1, min(k, _RHS_CHUNK if rhs_chunk is None else rhs_chunk))
 
 
 def _ell_sweep(x, vals, cols, *, w_chunk: int):
@@ -67,16 +69,17 @@ def _ehyb_ell_spmm_kernel(x_ref, vals_ref, cols_ref, y_ref, *, k_chunk: int,
 
 
 def ehyb_ell_spmm_pallas(x_parts: jnp.ndarray, ell_vals: jnp.ndarray,
-                         ell_cols: jnp.ndarray, *, interpret: bool = True
-                         ) -> jnp.ndarray:
+                         ell_cols: jnp.ndarray, *, interpret: bool = True,
+                         rhs_chunk: int | None = None,
+                         gather_budget: int | None = None) -> jnp.ndarray:
     """Cached (sliced-ELL) part, multi-rhs: y_parts (P, V, K).
 
     Same BlockSpecs as the SpMV version — R just widens to K; the per-step
     A-tile DMA is unchanged while each byte feeds K dot products."""
     p, v, k = x_parts.shape
     _, _, w = ell_vals.shape
-    kc = _k_chunk(k)
-    w_chunk = _w_chunk(v, w, kc, x_parts.dtype.itemsize)
+    kc = _k_chunk(k, rhs_chunk)
+    w_chunk = _w_chunk(v, w, kc, x_parts.dtype.itemsize, gather_budget)
     kernel = functools.partial(_ehyb_ell_spmm_kernel, k_chunk=kc,
                                w_chunk=w_chunk)
     return pl.pallas_call(
@@ -116,15 +119,17 @@ def _ehyb_fused_spmm_kernel(x_ref, xfull_ref, vals_ref, cols_ref, erv_ref,
 def ehyb_fused_spmm_pallas(x_new: jnp.ndarray, ell_vals: jnp.ndarray,
                            ell_cols: jnp.ndarray, er_p_vals: jnp.ndarray,
                            er_p_cols: jnp.ndarray, er_p_rows: jnp.ndarray,
-                           *, interpret: bool = True) -> jnp.ndarray:
+                           *, interpret: bool = True,
+                           rhs_chunk: int | None = None,
+                           gather_budget: int | None = None) -> jnp.ndarray:
     """Fused EHYB SpMM in the permuted space: y_new (n_pad, K)."""
     n_pad, k = x_new.shape
     p, v, w = ell_vals.shape
     _, e, we = er_p_vals.shape
     x_parts = x_new.reshape(p, v, k)
-    kc = _k_chunk(k)
-    w_chunk = _w_chunk(v, w, kc, x_new.dtype.itemsize)
-    e_chunk = _w_chunk(e, we, kc, x_new.dtype.itemsize)
+    kc = _k_chunk(k, rhs_chunk)
+    w_chunk = _w_chunk(v, w, kc, x_new.dtype.itemsize, gather_budget)
+    e_chunk = _w_chunk(e, we, kc, x_new.dtype.itemsize, gather_budget)
     kernel = functools.partial(_ehyb_fused_spmm_kernel, k_chunk=kc,
                                w_chunk=w_chunk, e_chunk=e_chunk)
     return pl.pallas_call(
@@ -182,13 +187,14 @@ def ehyb_ell_packed_spmm_pallas(x_parts: jnp.ndarray,
                                 packed_cols: jnp.ndarray,
                                 col_starts: jnp.ndarray,
                                 col_rows: jnp.ndarray, *,
-                                interpret: bool = True) -> jnp.ndarray:
+                                interpret: bool = True,
+                                rhs_chunk: int | None = None) -> jnp.ndarray:
     """Cached part, packed layout, multi-rhs: y_parts (P, V, K)."""
     p, v, k = x_parts.shape
     l = packed_vals.shape[1]
     w = col_rows.shape[1]
     kernel = functools.partial(_ehyb_packed_spmm_kernel, w=w, v=v,
-                               k_chunk=_k_chunk(k))
+                               k_chunk=_k_chunk(k, rhs_chunk))
     return pl.pallas_call(
         kernel,
         grid=(p,),
@@ -230,7 +236,10 @@ def ehyb_packed_fused_spmm_pallas(x_new: jnp.ndarray,
                                   er_p_vals: jnp.ndarray,
                                   er_p_cols: jnp.ndarray,
                                   er_p_rows: jnp.ndarray, *, vec_size: int,
-                                  interpret: bool = True) -> jnp.ndarray:
+                                  interpret: bool = True,
+                                  rhs_chunk: int | None = None,
+                                  gather_budget: int | None = None
+                                  ) -> jnp.ndarray:
     """Fused packed EHYB SpMM in the permuted space: y_new (n_pad, K)."""
     n_pad, k = x_new.shape
     p, l = packed_vals.shape
@@ -238,8 +247,8 @@ def ehyb_packed_fused_spmm_pallas(x_new: jnp.ndarray,
     v = vec_size
     _, e, we = er_p_vals.shape
     x_parts = x_new.reshape(p, v, k)
-    kc = _k_chunk(k)
-    e_chunk = _w_chunk(e, we, kc, x_new.dtype.itemsize)
+    kc = _k_chunk(k, rhs_chunk)
+    e_chunk = _w_chunk(e, we, kc, x_new.dtype.itemsize, gather_budget)
     kernel = functools.partial(_ehyb_packed_fused_spmm_kernel, w=w, v=v,
                                k_chunk=kc, e_chunk=e_chunk)
     return pl.pallas_call(

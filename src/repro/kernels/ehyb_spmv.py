@@ -36,13 +36,17 @@ from jax.experimental import pallas as pl
 
 # VMEM working-set budget for the gathered intermediate (bytes).  v5e VMEM is
 # ~128 MiB; we keep the scratch tile well under it so the x-slice block, the
-# val/col blocks and double-buffering all fit comfortably.
+# val/col blocks and double-buffering all fit comfortably.  This default is a
+# *tunable* parameter (repro.tuning SEARCH_SPACE "gather_budget"): plan-level
+# tuned values arrive via each wrapper's ``gather_budget`` kwarg.
 _GATHER_BUDGET = 4 * 1024 * 1024
 
 
-def _w_chunk(v: int, w: int, r: int, itemsize: int) -> int:
+def _w_chunk(v: int, w: int, r: int, itemsize: int,
+             budget: int | None = None) -> int:
     per_col = v * r * itemsize
-    return max(1, min(w, _GATHER_BUDGET // max(per_col, 1)))
+    b = _GATHER_BUDGET if budget is None else budget
+    return max(1, min(w, b // max(per_col, 1)))
 
 
 def _ehyb_ell_kernel(x_ref, vals_ref, cols_ref, y_ref, *, w_chunk: int):
@@ -63,8 +67,8 @@ def _ehyb_ell_kernel(x_ref, vals_ref, cols_ref, y_ref, *, w_chunk: int):
 
 
 def ehyb_ell_pallas(x_parts: jnp.ndarray, ell_vals: jnp.ndarray,
-                    ell_cols: jnp.ndarray, *, interpret: bool = True
-                    ) -> jnp.ndarray:
+                    ell_cols: jnp.ndarray, *, interpret: bool = True,
+                    gather_budget: int | None = None) -> jnp.ndarray:
     """Cached (sliced-ELL) part: y_parts (P, V, R) = EHYB_ELL(x_parts).
 
     x_parts:  (P, V, R) reordered input, partition-major
@@ -73,7 +77,7 @@ def ehyb_ell_pallas(x_parts: jnp.ndarray, ell_vals: jnp.ndarray,
     """
     p, v, r = x_parts.shape
     _, _, w = ell_vals.shape
-    w_chunk = _w_chunk(v, w, r, x_parts.dtype.itemsize)
+    w_chunk = _w_chunk(v, w, r, x_parts.dtype.itemsize, gather_budget)
     kernel = functools.partial(_ehyb_ell_kernel, w_chunk=w_chunk)
     return pl.pallas_call(
         kernel,
@@ -191,7 +195,8 @@ def _ehyb_fused_kernel(x_ref, xfull_ref, vals_ref, cols_ref, erv_ref,
 def ehyb_fused_pallas(x_new: jnp.ndarray, ell_vals: jnp.ndarray,
                       ell_cols: jnp.ndarray, er_p_vals: jnp.ndarray,
                       er_p_cols: jnp.ndarray, er_p_rows: jnp.ndarray,
-                      *, interpret: bool = True) -> jnp.ndarray:
+                      *, interpret: bool = True,
+                      gather_budget: int | None = None) -> jnp.ndarray:
     """Fused EHYB SpMV in the permuted space: y_new (n_pad, R).
 
     x_new:              (n_pad, R) permuted input (viewed both as per-
@@ -205,8 +210,8 @@ def ehyb_fused_pallas(x_new: jnp.ndarray, ell_vals: jnp.ndarray,
     p, v, w = ell_vals.shape
     _, e, we = er_p_vals.shape
     x_parts = x_new.reshape(p, v, r)
-    w_chunk = _w_chunk(v, w, r, x_new.dtype.itemsize)
-    e_chunk = _w_chunk(e, we, r, x_new.dtype.itemsize)
+    w_chunk = _w_chunk(v, w, r, x_new.dtype.itemsize, gather_budget)
+    e_chunk = _w_chunk(e, we, r, x_new.dtype.itemsize, gather_budget)
     kernel = functools.partial(_ehyb_fused_kernel, w_chunk=w_chunk,
                                e_chunk=e_chunk)
     return pl.pallas_call(
@@ -258,7 +263,8 @@ def ehyb_packed_fused_pallas(x_new: jnp.ndarray, packed_vals: jnp.ndarray,
                              col_starts: jnp.ndarray, col_rows: jnp.ndarray,
                              er_p_vals: jnp.ndarray, er_p_cols: jnp.ndarray,
                              er_p_rows: jnp.ndarray, *, vec_size: int,
-                             interpret: bool = True) -> jnp.ndarray:
+                             interpret: bool = True,
+                             gather_budget: int | None = None) -> jnp.ndarray:
     """Fused packed EHYB SpMV in the permuted space: y_new (n_pad, R)."""
     n_pad, r = x_new.shape
     p, l = packed_vals.shape
@@ -266,7 +272,7 @@ def ehyb_packed_fused_pallas(x_new: jnp.ndarray, packed_vals: jnp.ndarray,
     v = vec_size
     _, e, we = er_p_vals.shape
     x_parts = x_new.reshape(p, v, r)
-    e_chunk = _w_chunk(e, we, r, x_new.dtype.itemsize)
+    e_chunk = _w_chunk(e, we, r, x_new.dtype.itemsize, gather_budget)
     kernel = functools.partial(_ehyb_packed_fused_kernel, w=w, v=v,
                                e_chunk=e_chunk)
     return pl.pallas_call(
@@ -309,7 +315,8 @@ def _er_kernel(x_ref, vals_ref, cols_ref, y_ref, *, w_chunk: int):
 
 
 def er_pallas(x_new: jnp.ndarray, er_vals: jnp.ndarray, er_cols: jnp.ndarray,
-              *, row_tile: int = 256, interpret: bool = True) -> jnp.ndarray:
+              *, row_tile: int = 256, interpret: bool = True,
+              gather_budget: int | None = None) -> jnp.ndarray:
     """ER rows → per-slot partial sums (Rr, R); caller scatter-adds."""
     n_pad, r = x_new.shape
     rr, w = er_vals.shape
@@ -318,7 +325,7 @@ def er_pallas(x_new: jnp.ndarray, er_vals: jnp.ndarray, er_cols: jnp.ndarray,
         row_tile //= 2
     row_tile = max(row_tile, 1)
     grid = (rr // row_tile,)
-    w_chunk = _w_chunk(row_tile, w, r, x_new.dtype.itemsize)
+    w_chunk = _w_chunk(row_tile, w, r, x_new.dtype.itemsize, gather_budget)
     kernel = functools.partial(_er_kernel, w_chunk=w_chunk)
     return pl.pallas_call(
         kernel,

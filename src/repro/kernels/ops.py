@@ -152,24 +152,39 @@ def ehyb_spmv_packed_pallas_permuted(m, x_new: jnp.ndarray, *,
     ``use_er_kernel=False`` is the unfused degraded level of the guarded
     apply's fallback chain: the packed ELL kernel alone plus the jnp
     per-partition ER path — one fewer fused Pallas stage to lower when a
-    backend rejects the megakernel."""
+    backend rejects the megakernel.
+
+    Tuned kernel parameters ride the container's static ``kparams`` aux
+    (``repro.tuning.TunedParams.token()``): read here at trace time, they
+    specialize the compiled program — and because they are part of the
+    pytree treedef, a differently-tuned operator can never hit this jit
+    cache entry."""
     interpret = _resolve_interpret(interpret)
+    kp = dict(getattr(m, "kparams", ()) or ())
+    gb, rc = kp.get("gather_budget"), kp.get("rhs_chunk")
     x2, squeeze = _as_2d(x_new)
     spmm = x2.shape[1] >= _SPMM_MIN_RHS
     if m.has_er and use_er_kernel:
-        fused = (_km.ehyb_packed_fused_spmm_pallas if spmm
-                 else _k.ehyb_packed_fused_pallas)
-        y_new = fused(
-            x2, m.packed_vals, m.packed_cols, m.col_starts, m.col_rows,
-            m.er_p_vals, m.er_p_cols, m.er_p_rows, vec_size=m.vec_size,
-            interpret=interpret)
+        if spmm:
+            y_new = _km.ehyb_packed_fused_spmm_pallas(
+                x2, m.packed_vals, m.packed_cols, m.col_starts, m.col_rows,
+                m.er_p_vals, m.er_p_cols, m.er_p_rows, vec_size=m.vec_size,
+                interpret=interpret, rhs_chunk=rc, gather_budget=gb)
+        else:
+            y_new = _k.ehyb_packed_fused_pallas(
+                x2, m.packed_vals, m.packed_cols, m.col_starts, m.col_rows,
+                m.er_p_vals, m.er_p_cols, m.er_p_rows, vec_size=m.vec_size,
+                interpret=interpret, gather_budget=gb)
     else:
         x_parts = x2.reshape(m.n_parts, m.vec_size, x2.shape[1])
-        ell = (_km.ehyb_ell_packed_spmm_pallas if spmm
-               else _k.ehyb_ell_packed_pallas)
-        y_parts = ell(
-            x_parts, m.packed_vals, m.packed_cols, m.col_starts, m.col_rows,
-            interpret=interpret)
+        if spmm:
+            y_parts = _km.ehyb_ell_packed_spmm_pallas(
+                x_parts, m.packed_vals, m.packed_cols, m.col_starts,
+                m.col_rows, interpret=interpret, rhs_chunk=rc)
+        else:
+            y_parts = _k.ehyb_ell_packed_pallas(
+                x_parts, m.packed_vals, m.packed_cols, m.col_starts,
+                m.col_rows, interpret=interpret)
         if m.has_er:
             y_parts = y_parts + _fused_er_parts(
                 x2, m.er_p_vals, m.er_p_cols, m.er_p_rows,

@@ -340,7 +340,13 @@ class ServeEngine:
 
     def health(self) -> dict:
         """Liveness/degradation snapshot (cheap host state, no device
-        sync) — what an ops probe or the bench harness scrapes."""
+        sync) — what an ops probe or the bench harness scrapes.  Includes
+        the plan/tune cache picture (``plan_cache``): when a persistent
+        tune store is active, its disk hit/miss counters show whether this
+        engine's pruned-head plan warm-started from disk or paid a cold
+        partitioning + tuning pass at startup."""
+        from ..api import PLAN_CACHE
+
         return {
             "queue_depth": len(self.queue),
             "active": sum(r is not None for r in self.slots),
@@ -350,6 +356,7 @@ class ServeEngine:
             "sparse_head": self.sparse_head is not None,
             "max_queue": self.policy.max_queue,
             "stats": dict(self.stats),
+            "plan_cache": PLAN_CACHE.stats(),
         }
 
     def _free_slots(self):

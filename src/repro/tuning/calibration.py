@@ -1,0 +1,428 @@
+"""Measurement-fit calibration: from modeled bytes to predicted seconds.
+
+The autotuner's cost model (``autotune/cost.py``) ranks formats by *modeled
+HBM bytes* — a machine-independent quantity.  That is the right currency for
+asymptotic comparisons, but it prices every byte the same: an ELL value
+stream, a gathered x-cache read, and a permutation round trip all cost
+"one byte", and a format's fixed dispatch overhead (kernel launches,
+scatter setup) costs nothing.  On a real machine those weights differ, and
+for small matrices the dispatch floor — not bandwidth — decides the race.
+
+This module closes the loop, OSKI-style (measure once per machine, amortize
+forever):
+
+1. **measure** (:func:`measure_suite`) — time every eligible format on a
+   calibration suite with the hardened ``tuner._time_spmv``; alongside each
+   timing, record the cost model's per-term byte breakdown
+   (``cost.estimate_terms``) and, when available, the compiled program's
+   HLO-counted bytes (``roofline.hlo_cost.analyze_hlo``) as a cross-check;
+2. **fit** (:func:`fit`) — least-squares a per-term *effective time per
+   byte* plus a per-format *dispatch intercept* (seconds) against the
+   measurements, clamped non-negative so a sparse design can never produce
+   a negative bandwidth;
+3. **predict** (:meth:`CalibrationModel.predict`) — modeled term bytes ->
+   calibrated seconds.  When a model is installed (:func:`set_model`, or
+   loaded from the persistent store), ``autotune`` re-ranks candidates by
+   these predicted seconds and folds the model's fingerprint into its cache
+   key;
+4. **evaluate** (:func:`evaluate`) — per-matrix agreement of the
+   raw-bytes argmin and the calibrated argmin against the measured-fastest
+   format, plus the modeled-vs-measured ratio spread — the quantities the
+   calibration benchmark gates.
+
+Like the tune store, the active model is process-global tri-state: an
+explicit :func:`set_model` wins, else the persistent store's saved
+calibration for the current backend, else ``None`` (raw-bytes ranking).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+CALIBRATION_VERSION = 1
+
+#: Default calibration suite: one representative per structural category of
+#: ``core.matrices.SUITE``, sized so a full measure+fit pass stays
+#: CI-tractable (the full suite is available via ``names=...``).
+DEFAULT_SUITE: Tuple[str, ...] = (
+    "poisson3d_16", "poisson27_12", "elasticity_8",
+    "unstruct_4k", "powerlaw_4k", "rmat_4k", "circuit_4k",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationModel:
+    """A fitted bytes->seconds model for one backend.
+
+    ``coef`` maps each ``cost.TERMS`` entry to an effective *seconds per
+    byte* for that traffic kind; ``intercept`` maps each format name to its
+    fixed per-call overhead in seconds (dispatch, launch, scatter setup).
+    Both are non-negative by construction (:func:`fit` clamps).
+    """
+
+    backend: str
+    coef: Dict[str, float]               # term -> s/byte
+    intercept: Dict[str, float]          # format -> s (dispatch floor)
+    stats: Dict[str, float] = dataclasses.field(default_factory=dict)
+    n_samples: int = 0
+    version: int = CALIBRATION_VERSION
+
+    def predict(self, terms: Dict[str, int], fmt: str) -> float:
+        """Calibrated seconds for one apply given its per-term byte split."""
+        base = self.intercept.get(fmt, self._default_intercept())
+        return base + sum(self.coef.get(t, 0.0) * float(b)
+                          for t, b in terms.items())
+
+    def _default_intercept(self) -> float:
+        """Formats unseen at fit time get the median dispatch floor — a
+        neutral guess that neither hands them a free win nor buries them."""
+        vals = sorted(self.intercept.values())
+        return float(np.median(vals)) if vals else 0.0
+
+    def fingerprint(self) -> str:
+        """Short stable hash of the fitted payload — joins the autotune
+        cache key so refreshing a calibration invalidates prior rankings."""
+        blob = json.dumps(self.to_dict(), sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:12]
+
+    # -- persistence ---------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {"backend": self.backend,
+                "coef": {k: float(v) for k, v in sorted(self.coef.items())},
+                "intercept": {k: float(v)
+                              for k, v in sorted(self.intercept.items())},
+                "stats": {k: float(v) for k, v in sorted(self.stats.items())},
+                "n_samples": int(self.n_samples),
+                "version": int(self.version)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CalibrationModel":
+        if int(d.get("version", -1)) != CALIBRATION_VERSION:
+            raise ValueError(
+                f"calibration payload version {d.get('version')!r} != "
+                f"{CALIBRATION_VERSION}")
+        return cls(backend=str(d["backend"]),
+                   coef={str(k): float(v) for k, v in d["coef"].items()},
+                   intercept={str(k): float(v)
+                              for k, v in d["intercept"].items()},
+                   stats={str(k): float(v)
+                          for k, v in d.get("stats", {}).items()},
+                   n_samples=int(d.get("n_samples", 0)),
+                   version=CALIBRATION_VERSION)
+
+
+# ---------------------------------------------------------------------------
+# active-model registry (tri-state, mirrors tuning.store.get_store)
+# ---------------------------------------------------------------------------
+
+_UNSET = object()
+_EXPLICIT = _UNSET                      # set_model() override, if any
+_STORE_MODELS: Dict[tuple, Optional[CalibrationModel]] = {}
+
+
+def set_model(model: Optional[CalibrationModel]) -> None:
+    """Install ``model`` as the active calibration (``None`` disables
+    calibrated ranking even if the store holds one)."""
+    global _EXPLICIT
+    _EXPLICIT = model
+
+
+def clear_model() -> None:
+    """Forget the explicit override and the per-store memo — the next
+    :func:`get_model` re-resolves from the persistent store."""
+    global _EXPLICIT
+    _EXPLICIT = _UNSET
+    _STORE_MODELS.clear()
+
+
+def get_model(backend: Optional[str] = None) -> Optional[CalibrationModel]:
+    """The active calibration model for ``backend`` (default: the current
+    JAX backend), or ``None`` when ranking should stay raw-bytes."""
+    if _EXPLICIT is not _UNSET:
+        return _EXPLICIT
+    from .store import get_store
+
+    st = get_store()
+    if st is None:
+        return None
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    memo_key = (str(st.root), backend)
+    if memo_key not in _STORE_MODELS:
+        payload = st.load_calibration(backend)
+        model = None
+        if payload is not None:
+            try:
+                model = CalibrationModel.from_dict(payload)
+            except Exception:    # noqa: BLE001 — a malformed stored payload
+                # degrades to raw-bytes ranking; the store already
+                # quarantined/evicted what it could
+                model = None
+        _STORE_MODELS[memo_key] = model
+    return _STORE_MODELS[memo_key]
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+def _hlo_bytes(apply, obj, x) -> Optional[float]:
+    """HBM bytes the compiled apply actually moves, per the roofline HLO
+    cost model — a cross-check column, never a fit input."""
+    try:
+        import jax
+
+        from ..roofline.hlo_cost import analyze_hlo
+
+        text = jax.jit(apply).lower(obj, x).compile().as_text()
+        return float(analyze_hlo(text)["bytes"])
+    except Exception:    # noqa: BLE001 — HLO text/parse availability varies
+        # by backend; the cross-check column is best-effort
+        return None
+
+
+def measure_suite(names: Optional[Sequence[str]] = None, dtype=None, *,
+                  formats: Optional[Sequence[str]] = None,
+                  context: str = "spmv", k: int = 1,
+                  hlo: bool = True) -> List[dict]:
+    """Time every eligible format on the calibration suite.
+
+    Returns one sample dict per (matrix, format): ``matrix``, ``format``,
+    ``measured_s``, ``terms`` (per-``cost.TERMS`` byte split),
+    ``modeled_bytes`` (their sum), and ``hlo_bytes`` (compiled-program
+    byte count, or None).  Formats whose kernels would run interpreted on
+    CPU are skipped — their timings say nothing about device performance,
+    which is the entire point of calibrating.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..autotune.cost import estimate_terms, matrix_stats
+    from ..autotune.registry import available_formats, get_format
+    from ..autotune.tuner import _time_spmv
+    from ..core.matrices import SUITE
+
+    dtype = dtype or jnp.float32
+    val_bytes = jnp.dtype(dtype).itemsize
+    on_cpu = jax.default_backend() == "cpu"
+    names = tuple(names or DEFAULT_SUITE)
+    fmts = tuple(formats or available_formats())
+    rng = np.random.default_rng(7)
+    samples: List[dict] = []
+    for name in names:
+        if name not in SUITE:
+            raise KeyError(f"unknown suite matrix {name!r}; "
+                           f"have {sorted(SUITE)}")
+        m = SUITE[name]()
+        stats = matrix_stats(m)
+        shared: dict = {}        # one host EHYB build serves the family
+        shape = (m.n,) if k == 1 else (m.n, k)
+        x = jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+        for f in fmts:
+            spec = get_format(f)
+            if on_cpu and spec.kernel != "xla":
+                continue
+            try:
+                terms = estimate_terms(m, f, val_bytes, shared, stats,
+                                       context, k)
+                obj, apply = spec.build(m, dtype, shared)
+                t = _time_spmv(apply, obj, x)
+            except Exception as e:    # noqa: BLE001 — a format that fails
+                # to build/run on this backend simply contributes no sample
+                import warnings
+
+                from ..reliability.policy import ReliabilityWarning
+
+                warnings.warn(
+                    f"calibration: {f!r} on {name!r} failed "
+                    f"({type(e).__name__}: {e}); skipping",
+                    ReliabilityWarning, stacklevel=2)
+                continue
+            samples.append({
+                "matrix": name, "format": f, "measured_s": float(t),
+                "terms": {tk: int(tv) for tk, tv in terms.items()},
+                "modeled_bytes": int(sum(terms.values())),
+                "hlo_bytes": _hlo_bytes(apply, obj, x) if hlo else None,
+            })
+    return samples
+
+
+# ---------------------------------------------------------------------------
+# fitting
+# ---------------------------------------------------------------------------
+
+def fit(samples: Sequence[dict], backend: Optional[str] = None
+        ) -> CalibrationModel:
+    """Least-squares per-term s/byte coefficients + per-format intercepts.
+
+    The design matrix has one column per ``cost.TERMS`` entry (the sample's
+    byte count for that traffic kind) and one indicator column per format
+    (its dispatch intercept).  The solve is weighted by ``1/measured_s`` —
+    relative error, not absolute — because the model's job is *ranking*:
+    an unweighted fit lets the suite's slowest matrices swallow the
+    residual budget and systematically over-predicts the fast ones (the
+    geomean prediction ratio drifts to several ×).  After the joint solve,
+    negative term coefficients are clamped to zero (a sparse design —
+    e.g. a term only one format exercises — can otherwise trade a negative
+    bandwidth against an inflated intercept) and the intercepts are
+    re-derived as each format's ``1/y²``-weighted mean residual, clamped
+    non-negative.
+    """
+    from ..autotune.cost import TERMS
+
+    if not samples:
+        raise ValueError("cannot fit a calibration from zero samples")
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    fmts = sorted({s["format"] for s in samples})
+    n, nt = len(samples), len(TERMS)
+    A = np.zeros((n, nt + len(fmts)))
+    y = np.zeros(n)
+    for i, s in enumerate(samples):
+        for j, t in enumerate(TERMS):
+            A[i, j] = float(s["terms"].get(t, 0))
+        A[i, nt + fmts.index(s["format"])] = 1.0
+        y[i] = float(s["measured_s"])
+    # scale byte columns to O(1) so lstsq conditioning doesn't mix 1e8-byte
+    # streams with 0/1 indicators
+    scale = np.maximum(np.abs(A[:, :nt]).max(axis=0), 1.0)
+    A[:, :nt] /= scale
+    # relative-error weighting: minimize sum((pred_i - y_i) / y_i)^2
+    w = 1.0 / np.maximum(y, 1e-12)
+    sol = np.linalg.lstsq(A * w[:, None], y * w, rcond=None)[0]
+    coef = {t: max(float(sol[j] / scale[j]), 0.0)
+            for j, t in enumerate(TERMS)}
+    # re-derive intercepts against the clamped slopes (same 1/y^2 weights)
+    resid = y - np.array([
+        sum(coef[t] * float(s["terms"].get(t, 0)) for t in TERMS)
+        for s in samples])
+    intercept = {}
+    for jf, f in enumerate(fmts):
+        mask = A[:, nt + jf] > 0.5
+        wf = w[mask] ** 2
+        intercept[f] = max(float((resid[mask] * wf).sum() / wf.sum()), 0.0)
+    pred = np.array([
+        intercept[s["format"]] + sum(coef[t] * float(s["terms"].get(t, 0))
+                                     for t in TERMS) for s in samples])
+    ratio = pred / np.maximum(y, 1e-12)
+    stats = {"ratio_min": float(ratio.min()),
+             "ratio_max": float(ratio.max()),
+             "ratio_geomean": float(np.exp(np.mean(np.log(
+                 np.maximum(ratio, 1e-12))))),
+             "r2": float(1.0 - ((pred - y) ** 2).sum()
+                         / max(((y - y.mean()) ** 2).sum(), 1e-24))}
+    return CalibrationModel(backend=backend, coef=coef, intercept=intercept,
+                            stats=stats, n_samples=n)
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+
+def evaluate(samples: Sequence[dict], model: CalibrationModel) -> dict:
+    """Per-matrix winner agreement + prediction-ratio spread.
+
+    For every suite matrix with >= 2 timed formats, compares the
+    measured-fastest format against (a) the raw modeled-bytes argmin and
+    (b) the calibrated predicted-seconds argmin.  The headline numbers —
+    ``agree_calibrated`` vs ``agree_raw`` and the in-sample
+    ``ratio_geomean``/band — are what the calibration benchmark gates.
+    """
+    by_matrix: Dict[str, List[dict]] = {}
+    for s in samples:
+        by_matrix.setdefault(s["matrix"], []).append(s)
+    rows, agree_raw, agree_cal, contested = [], 0, 0, 0
+    ratios = []
+    for name, group in sorted(by_matrix.items()):
+        pred = {g["format"]: model.predict(g["terms"], g["format"])
+                for g in group}
+        meas = {g["format"]: g["measured_s"] for g in group}
+        raw = {g["format"]: g["modeled_bytes"] for g in group}
+        for g in group:
+            ratios.append(pred[g["format"]] / max(meas[g["format"]], 1e-12))
+        w_meas = min(sorted(meas), key=meas.get)
+        w_raw = min(sorted(raw), key=raw.get)
+        w_cal = min(sorted(pred), key=pred.get)
+        rows.append({"matrix": name, "measured_winner": w_meas,
+                     "raw_winner": w_raw, "calibrated_winner": w_cal,
+                     "measured_s": meas, "predicted_s": pred})
+        if len(group) >= 2:
+            contested += 1
+            agree_raw += int(w_raw == w_meas)
+            agree_cal += int(w_cal == w_meas)
+    ratios_a = np.asarray(ratios) if ratios else np.asarray([1.0])
+    return {"matrices": rows, "contested": contested,
+            "agree_raw": agree_raw, "agree_calibrated": agree_cal,
+            "ratio_geomean": float(np.exp(np.mean(np.log(
+                np.maximum(ratios_a, 1e-12))))),
+            "ratio_min": float(ratios_a.min()),
+            "ratio_max": float(ratios_a.max())}
+
+
+# ---------------------------------------------------------------------------
+# the one-call runner
+# ---------------------------------------------------------------------------
+
+def calibrate(names: Optional[Sequence[str]] = None, dtype=None, *,
+              formats: Optional[Sequence[str]] = None,
+              context: str = "spmv", k: int = 1, hlo: bool = True,
+              persist: bool = True, install: bool = True) -> dict:
+    """Measure → fit → evaluate → (persist, install).  Returns a report
+    dict: ``model`` (payload), ``evaluation``, ``samples``, ``persisted``.
+
+    ``persist`` saves the fitted payload into the active tune store (no-op
+    without one, refused under chaos); ``install`` makes it the active
+    model for this process so subsequent ``autotune`` calls rank by
+    calibrated seconds immediately.
+    """
+    import jax
+
+    samples = measure_suite(names, dtype, formats=formats, context=context,
+                            k=k, hlo=hlo)
+    model = fit(samples, backend=jax.default_backend())
+    ev = evaluate(samples, model)
+    persisted = False
+    if persist:
+        from .store import get_store
+
+        st = get_store()
+        if st is not None:
+            persisted = st.save_calibration(model.to_dict(), model.backend)
+            _STORE_MODELS.pop((str(st.root), model.backend), None)
+    if install:
+        set_model(model)
+    return {"model": model.to_dict(), "evaluation": ev,
+            "samples": samples, "persisted": persisted}
+
+
+def report(model: Optional[CalibrationModel] = None) -> str:
+    """Human-readable calibration table (``python -m repro.tuning
+    --report``)."""
+    model = model if model is not None else get_model()
+    if model is None:
+        return ("no calibration model active "
+                "(set REPRO_TUNE_CACHE and run --calibrate)")
+    lines = [f"calibration [{model.backend}] "
+             f"fingerprint={model.fingerprint()} "
+             f"n_samples={model.n_samples}",
+             "  term coefficients (effective s/byte -> GB/s):"]
+    for t, c in sorted(model.coef.items()):
+        bw = (1.0 / c / 1e9) if c > 0 else float("inf")
+        lines.append(f"    {t:<14} {c:.3e} s/B   ({bw:8.2f} GB/s eff)")
+    lines.append("  per-format dispatch intercepts:")
+    for f, b in sorted(model.intercept.items()):
+        lines.append(f"    {f:<16} {b * 1e6:10.2f} us")
+    if model.stats:
+        lines.append("  fit: " + "  ".join(
+            f"{k}={v:.4g}" for k, v in sorted(model.stats.items())))
+    return "\n".join(lines)

@@ -1,0 +1,499 @@
+"""The calibrated-autotuning subsystem (repro.tuning): tunable kernel
+parameters in the plan identity, the measurement-fit calibration model, the
+hardened measured pass, and the persistent on-disk tune/plan store —
+including the counter-asserted zero-work warm start in a fresh process."""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro import autotune as at
+from repro import tuning
+from repro.core import counters, poisson3d, powerlaw
+from repro.core.matrices import SUITE
+from repro.reliability import chaos
+from repro.tuning import (DEFAULT_PARAMS, SEARCH_SPACE, TunedParams,
+                          TuneStore)
+from repro.tuning.calibration import CalibrationModel, evaluate, fit
+from repro.tuning.store import TuneEntry, entry_key
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(autouse=True)
+def _isolated_caches():
+    """Every test starts with no store, no calibration, empty plan/tune
+    memos — and leaks none of them to the next test."""
+    tuning.set_store(None)
+    tuning.set_model(None)
+    api.PLAN_CACHE.clear()
+    at.clear_cache()
+    yield
+    tuning.clear_store()
+    tuning.clear_model()
+    api.PLAN_CACHE.clear()
+    at.clear_cache()
+
+
+def _store(tmp_path) -> TuneStore:
+    return tuning.set_store(tmp_path / "tunecache")
+
+
+# ---------------------------------------------------------------------------
+# tunable parameters
+# ---------------------------------------------------------------------------
+
+class TestTunedParams:
+    def test_token_is_sorted_and_hashable(self):
+        t = TunedParams(gather_budget=1 << 20)
+        assert t.token() == (("gather_budget", 1 << 20), ("n_buckets", 4),
+                             ("rhs_chunk", 16))
+        assert hash(t.token())
+
+    def test_from_dict_ignores_unknown_and_defaults_missing(self):
+        t = TunedParams.from_dict({"gather_budget": 2 << 20,
+                                   "not_a_knob": 99})
+        assert t.gather_budget == 2 << 20
+        assert t.rhs_chunk == DEFAULT_PARAMS.rhs_chunk
+
+    @pytest.mark.parametrize("bad", [{"gather_budget": 1},
+                                     {"rhs_chunk": 100000},
+                                     {"n_buckets": 0}])
+    def test_out_of_bounds_raises(self, bad):
+        with pytest.raises(ValueError, match="declared bounds"):
+            TunedParams.from_dict(bad)
+
+    def test_candidates_inside_bounds(self):
+        for spec in SEARCH_SPACE.values():
+            for c in spec.candidates:
+                assert spec.lo <= c <= spec.hi
+            assert spec.lo <= spec.default <= spec.hi
+
+    def test_sweep_grid_per_format(self):
+        packed = list(tuning.sweep_grid("ehyb_packed"))
+        assert len(packed) == len(SEARCH_SPACE["gather_budget"].candidates)
+        spmm = list(tuning.sweep_grid("ehyb_packed", k=8))
+        assert len(spmm) == (len(SEARCH_SPACE["gather_budget"].candidates)
+                             * len(SEARCH_SPACE["rhs_chunk"].candidates))
+        assert list(tuning.sweep_grid("csr")) == [DEFAULT_PARAMS]
+
+
+# ---------------------------------------------------------------------------
+# plan identity: tuned params change the token, the treedef, the program
+# ---------------------------------------------------------------------------
+
+class TestTunedIdentity:
+    def test_execution_token_includes_tuned(self):
+        a = api.ExecutionConfig(format="ehyb_packed")
+        b = api.ExecutionConfig(format="ehyb_packed",
+                                tuned={"gather_budget": 1 << 20})
+        assert a.token() != b.token()
+        assert b.token()[-1] == b.tuned.token()
+
+    def test_config_accepts_dict_and_validates(self):
+        cfg = api.ExecutionConfig(tuned={"rhs_chunk": 8})
+        assert isinstance(cfg.tuned, TunedParams)
+        with pytest.raises(ValueError, match="declared bounds"):
+            api.ExecutionConfig(tuned={"rhs_chunk": 0})
+
+    def test_tuned_params_change_treedef_but_not_results(self, rng):
+        m = poisson3d(8)
+        op_a = api.plan(m, execution=api.ExecutionConfig(
+            format="ehyb_packed")).bind(m)
+        op_b = api.plan(m, execution=api.ExecutionConfig(
+            format="ehyb_packed",
+            tuned={"gather_budget": 1 << 20})).bind(m)
+        ta = jax.tree_util.tree_structure(op_a.obj)
+        tb = jax.tree_util.tree_structure(op_b.obj)
+        assert ta != tb          # different tuning can never share a jit slot
+        x = jnp.asarray(rng.standard_normal(m.n), jnp.float32)
+        np.testing.assert_allclose(np.asarray(op_a @ x, np.float64),
+                                   np.asarray(op_b @ x, np.float64),
+                                   rtol=5e-5, atol=5e-5)
+
+    def test_rebind_under_tuned_config_stays_refill_only(self, rng):
+        from repro.core.spmv import SparseCSR
+        from repro.kernels.ops import ehyb_spmv_packed_pallas
+
+        m1 = poisson3d(8)
+        m2 = SparseCSR(m1.n, m1.indptr, m1.indices,
+                       rng.standard_normal(m1.nnz))
+        p = api.plan(m1, execution=api.ExecutionConfig(
+            format="ehyb_packed", tuned={"gather_budget": 2 << 20}))
+        op1 = p.bind(m1)
+        x = jnp.ones(m1.n, jnp.float32)
+        jax.block_until_ready(op1 @ x)
+        probe = getattr(ehyb_spmv_packed_pallas, "_cache_size", None)
+        if probe is None:
+            pytest.skip("jit cache-size probe unavailable on this jax")
+        n0 = probe()
+        before = counters.snapshot()
+        op2 = op1.update_values(m2)
+        jax.block_until_ready(op2 @ x)
+        after = counters.snapshot()
+        assert probe() == n0                 # zero recompilation
+        assert after.get("partition", 0) == before.get("partition", 0)
+        assert op2.obj.kparams == op1.obj.kparams
+        np.testing.assert_allclose(np.asarray(op2 @ x, np.float64),
+                                   m2.spmv(np.ones(m1.n)), rtol=5e-5,
+                                   atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# the hardened measured pass
+# ---------------------------------------------------------------------------
+
+class TestMeasuredPass:
+    def test_ranking_stable_across_two_measured_passes(self):
+        """The regression the ``_time_spmv`` hardening exists for: two
+        back-to-back measured passes over the same candidates must agree
+        (median-of-repeats + min-duration inner loop lifts the timings out
+        of the clock/dispatch noise floor where rankings flip)."""
+        m = poisson3d(8)
+        kw = dict(mode="measure", candidates=("csr", "ell"),
+                  use_cache=False)
+        r1 = at.autotune(m, **kw)
+        r2 = at.autotune(m, **kw)
+        assert r1.measured_s and r2.measured_s
+        assert r1.format == r2.format
+
+    def test_time_spmv_bumps_measured_counter(self):
+        from repro.autotune.tuner import _time_spmv
+
+        before = counters.snapshot().get("tune.measured", 0)
+        _time_spmv(lambda o, x: x * 2.0, None, jnp.ones(8), repeats=1,
+                   min_duration_s=0.0)
+        assert counters.snapshot()["tune.measured"] == before + 1
+
+    def test_measured_sweep_picks_bucketed_knob(self):
+        m = powerlaw(2048, 6)
+        r = at.autotune(m, mode="measure", candidates=("ehyb_bucketed",),
+                        use_cache=False)
+        assert r.format == "ehyb_bucketed"
+        assert r.sweep_s is not None and len(r.sweep_s) == \
+            len(SEARCH_SPACE["n_buckets"].candidates)
+        assert r.tuned is not None
+        assert r.tuned["n_buckets"] in SEARCH_SPACE["n_buckets"].candidates
+
+
+# ---------------------------------------------------------------------------
+# the per-term cost split feeding calibration
+# ---------------------------------------------------------------------------
+
+class TestTerms:
+    @pytest.mark.parametrize("context", ["spmv", "solver"])
+    @pytest.mark.parametrize("fmt", ["csr", "ell", "hyb", "dense", "ehyb",
+                                     "ehyb_bucketed", "ehyb_packed"])
+    def test_terms_sum_to_estimate_bytes(self, fmt, context):
+        m = poisson3d(8)
+        shared = {}
+        terms = at.estimate_terms(m, fmt, 4, shared, context=context)
+        assert set(terms) == set(at.TERMS)
+        assert sum(terms.values()) == at.estimate_bytes(m, fmt, 4, shared,
+                                                        context=context)
+
+    def test_solver_context_drops_perm_term(self):
+        m = poisson3d(8)
+        shared = {}
+        spmv_t = at.estimate_terms(m, "ehyb", 4, shared)
+        solver_t = at.estimate_terms(m, "ehyb", 4, shared, context="solver")
+        assert spmv_t["perm"] > 0 and solver_t["perm"] == 0
+
+
+# ---------------------------------------------------------------------------
+# calibration: fit/predict mechanics (deterministic, no timing)
+# ---------------------------------------------------------------------------
+
+class TestCalibration:
+    def _samples(self):
+        """Synthetic ground truth: 1 GB/s effective bandwidth on every term
+        plus a fat per-call dispatch floor for format "b" — raw bytes
+        cannot see the floor, a fitted model must."""
+        coef = 1e-9
+        floors = {"a": 0.0, "b": 5e-3}
+        samples = []
+        for i, scale in enumerate((1, 2, 4)):
+            for f in ("a", "b"):
+                ell = int(1e6 * scale * (0.9 if f == "b" else 1.0))
+                terms = {"ell": ell, "er": int(1e5 * scale)}
+                t = floors[f] + coef * sum(terms.values())
+                samples.append({"matrix": f"m{i}", "format": f,
+                                "terms": terms,
+                                "modeled_bytes": sum(terms.values()),
+                                "measured_s": t, "hlo_bytes": None})
+        return samples
+
+    def test_fit_recovers_bandwidth_and_floor(self):
+        model = fit(self._samples(), backend="test")
+        assert model.coef["ell"] == pytest.approx(1e-9, rel=0.2)
+        assert model.intercept["b"] - model.intercept["a"] == \
+            pytest.approx(5e-3, rel=0.2)
+        # non-negativity is structural, not situational
+        assert all(v >= 0 for v in model.coef.values())
+        assert all(v >= 0 for v in model.intercept.values())
+
+    def test_calibrated_ranking_beats_raw_bytes_on_dispatch_floor(self):
+        samples = self._samples()
+        model = fit(samples, backend="test")
+        ev = evaluate(samples, model)
+        # raw bytes picks "b" (fewer bytes) every time; measured (and the
+        # calibrated prediction) know the dispatch floor makes "a" faster
+        assert ev["agree_calibrated"] == ev["contested"]
+        assert ev["agree_raw"] == 0
+        assert 0.5 < ev["ratio_geomean"] < 2.0
+
+    def test_fingerprint_tracks_payload(self):
+        m1 = fit(self._samples(), backend="test")
+        m2 = CalibrationModel.from_dict(m1.to_dict())
+        assert m1.fingerprint() == m2.fingerprint()
+        m3 = CalibrationModel(backend="test", coef={**m1.coef, "ell": 1.0},
+                              intercept=m1.intercept)
+        assert m3.fingerprint() != m1.fingerprint()
+
+    def test_model_reranks_autotune_and_keys_cache(self):
+        m = poisson3d(8)
+        r0 = at.autotune(m)
+        assert r0.calibrated_s is None
+        # a pathological model that makes "dense" free must flip the winner
+        bad = CalibrationModel(
+            backend=jax.default_backend(),
+            coef={t: 1e-6 for t in at.TERMS},
+            intercept={f: (0.0 if f == "dense" else 1.0)
+                       for f in at.available_formats()})
+        bad = CalibrationModel(backend=bad.backend,
+                               coef={**bad.coef, "ell": 0.0,
+                                     "x_cache": 0.0, "y": 0.0},
+                               intercept=bad.intercept)
+        tuning.set_model(bad)
+        r1 = at.autotune(m)
+        assert r1.calibrated_s is not None
+        assert r1.format == "dense"
+        # model fingerprint is in the tune-cache key: clearing the model
+        # must NOT serve the calibrated decision
+        tuning.set_model(None)
+        assert at.autotune(m).format == r0.format
+
+
+# ---------------------------------------------------------------------------
+# the persistent store
+# ---------------------------------------------------------------------------
+
+def _entry(**kw) -> TuneEntry:
+    base = dict(pattern="deadbeef", backend="cpu", dtype="float32",
+                context="spmv", k=1, n_dev=1, format="ehyb",
+                partition_method="bfs", tuned=DEFAULT_PARAMS.to_dict())
+    base.update(kw)
+    return TuneEntry(**base)
+
+
+class TestStore:
+    def test_round_trip_entry_and_partition(self, tmp_path):
+        from repro.core.partition import make_partition
+
+        st = _store(tmp_path)
+        m = poisson3d(8)
+        part = make_partition(m, method="bfs")
+        key = at.pattern_hash(m)
+        assert st.save(_entry(pattern=key), part)
+        entry, part2 = st.load(key, "cpu", "float32", "spmv")
+        assert entry.format == "ehyb"
+        assert entry.tuned_params() == DEFAULT_PARAMS
+        np.testing.assert_array_equal(part2.perm, part.perm)
+        np.testing.assert_array_equal(part2.part_vec, part.part_vec)
+        assert st.counters["hit"] == 1
+
+    def test_miss_counts(self, tmp_path):
+        st = _store(tmp_path)
+        assert st.load("nope", "cpu", "float32", "spmv") is None
+        assert st.counters["miss"] == 1
+
+    def test_truncated_json_quarantined(self, tmp_path):
+        st = _store(tmp_path)
+        st.save(_entry())
+        key = entry_key("deadbeef", "cpu", "float32", "spmv")
+        jp = st._json_path(key)
+        jp.write_text(jp.read_text()[:37])          # truncate mid-payload
+        with pytest.warns(UserWarning, match="quarantined"):
+            assert st.load("deadbeef", "cpu", "float32", "spmv") is None
+        assert st.counters["quarantined"] == 1
+        assert not jp.exists()
+        assert jp.with_suffix(".json.bad").exists()   # kept for post-mortem
+
+    def test_out_of_bounds_tuned_is_corruption(self, tmp_path):
+        st = _store(tmp_path)
+        st.save(_entry(tuned={"gather_budget": 7}))   # below lo bound
+        with pytest.warns(UserWarning, match="quarantined"):
+            assert st.load("deadbeef", "cpu", "float32", "spmv") is None
+        assert st.counters["quarantined"] == 1
+
+    def test_corrupt_partition_npz_quarantined(self, tmp_path):
+        from repro.core.partition import make_partition
+
+        st = _store(tmp_path)
+        m = poisson3d(8)
+        key = at.pattern_hash(m)
+        st.save(_entry(pattern=key), make_partition(m, method="bfs"))
+        skey = entry_key(key, "cpu", "float32", "spmv")
+        st._npz_path(skey).write_bytes(b"not an npz at all")
+        with pytest.warns(UserWarning, match="quarantined"):
+            assert st.load(key, "cpu", "float32", "spmv") is None
+        assert st.counters["quarantined"] == 1
+
+    def test_stale_version_evicted(self, tmp_path):
+        st = _store(tmp_path)
+        st.save(_entry())
+        key = entry_key("deadbeef", "cpu", "float32", "spmv")
+        jp = st._json_path(key)
+        raw = json.loads(jp.read_text())
+        raw["version"] = 999
+        jp.write_text(json.dumps(raw))
+        assert st.load("deadbeef", "cpu", "float32", "spmv") is None
+        assert st.counters["stale"] == 1
+        assert not jp.exists()                       # deleted, not .bad
+
+    def test_evict_by_pattern_and_all(self, tmp_path):
+        st = _store(tmp_path)
+        st.save(_entry(pattern="aaa"))
+        st.save(_entry(pattern="bbb"))
+        assert st.evict("aaa") == 1
+        assert st.entries() and st.evict() == 1
+        assert st.entries() == []
+
+    def test_env_var_activation(self, tmp_path, monkeypatch):
+        tuning.clear_store()       # drop the fixture's explicit None
+        monkeypatch.setenv(tuning.ENV_VAR, str(tmp_path / "envstore"))
+        st = tuning.get_store()
+        assert st is not None
+        assert str(tmp_path) in str(st.root)
+        tuning.set_store(None)
+        assert tuning.get_store() is None            # explicit None wins
+
+
+# ---------------------------------------------------------------------------
+# chaos hygiene: nothing decided under fault injection reaches disk
+# ---------------------------------------------------------------------------
+
+class TestChaosHygiene:
+    def test_save_refused_under_chaos(self, tmp_path):
+        st = _store(tmp_path)
+        with chaos(kernel_failure=("tune:ell",)):
+            assert not st.save(_entry())
+        assert st.counters["refused_chaos"] == 1
+        assert st.entries() == []
+
+    def test_calibration_persist_refused_under_chaos(self, tmp_path):
+        st = _store(tmp_path)
+        with chaos(kernel_failure=("tune:ell",)):
+            assert not st.save_calibration({"coef": {}}, "cpu")
+        assert st.load_calibration("cpu") is None
+        assert st.counters["refused_chaos"] == 1
+
+    def test_store_stays_clean_through_chaotic_planning(self, tmp_path):
+        """End to end: plans created while fault injection is active leave
+        ZERO files behind — a poisoned decision must never outlive the
+        process, let alone reach the fleet."""
+        st = _store(tmp_path)
+        m = poisson3d(8)
+        with chaos(kernel_failure=("tune:ehyb",)):
+            with pytest.warns(Warning):
+                api.plan(m, execution=api.ExecutionConfig(mode="measure"))
+        assert st.entries() == []
+        assert st.counters["refused_chaos"] >= 1
+        # and once chaos exits, the same plan persists normally
+        api.PLAN_CACHE.clear()
+        at.clear_cache()
+        api.plan(m)
+        assert len(st.entries()) == 1
+
+
+# ---------------------------------------------------------------------------
+# warm-start: the whole point of the store
+# ---------------------------------------------------------------------------
+
+class TestWarmStart:
+    def test_warm_plan_identity_matches_cold(self, tmp_path):
+        st = _store(tmp_path)
+        m = SUITE["poisson3d_16"]()
+        cold = api.plan(m)
+        assert st.counters["saved"] == 1
+        api.PLAN_CACHE.clear()
+        at.clear_cache()
+        before = counters.snapshot()
+        warm = api.plan(m)
+        after = counters.snapshot()
+        assert st.counters["hit"] == 1
+        assert warm.identity() == cold.identity()
+        assert after.get("partition", 0) == before.get("partition", 0)
+        assert after.get("tune.measured", 0) == before.get("tune.measured", 0)
+
+    def test_plan_cache_stats_surface_disk_counters(self, tmp_path):
+        _store(tmp_path)
+        m = poisson3d(8)
+        api.plan(m)
+        disk = api.PLAN_CACHE.stats()["tune"]["disk"]
+        assert disk is not None and disk["saved"] == 1
+
+    def test_incompatible_stored_format_is_ignored(self, tmp_path):
+        st = _store(tmp_path)
+        m = poisson3d(8)
+        key = at.pattern_hash(m)
+        st.save(_entry(pattern=key, format="dense"))
+        p = api.plan(m, execution=api.ExecutionConfig(
+            candidates=("csr", "ehyb")))
+        assert p.format in ("csr", "ehyb")
+
+
+def _run_plan_subprocess(store_dir, tmp_path, tag):
+    """Plan + bind + apply in a FRESH interpreter; print the counters and
+    the plan identity as JSON."""
+    script = r"""
+import json, sys
+import numpy as np
+import repro.api as api
+from repro.core import counters
+from repro.core.matrices import SUITE
+
+m = SUITE["poisson3d_16"]()
+p = api.plan(m, execution=api.ExecutionConfig(mode="measure"))
+op = p.bind(m)
+x = np.ones(m.n, np.float32)
+y = np.asarray(op @ x)
+print(json.dumps({"counters": counters.snapshot(),
+                  "identity": list(map(str, p.identity())),
+                  "y0": float(y[0])}))
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["REPRO_TUNE_CACHE"] = str(store_dir)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"{tag} subprocess failed:\n{out.stderr}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_fresh_process_warm_start_does_zero_tuning_work(tmp_path):
+    """The ISSUE's acceptance criterion, verbatim: a fresh process with a
+    populated store reaches a bound operator with ZERO partitioning passes
+    and ZERO tuner measurements (counter-asserted), and its plan identity
+    is bit-identical to the cold process's."""
+    store = tmp_path / "fleet-cache"
+    cold = _run_plan_subprocess(store, tmp_path, "cold")
+    assert cold["counters"].get("partition", 0) >= 1
+    assert cold["counters"].get("tune.measured", 0) >= 1
+    assert cold["counters"].get("tune_store.saved", 0) >= 1
+
+    warm = _run_plan_subprocess(store, tmp_path, "warm")
+    assert warm["counters"].get("tune_store.hit", 0) == 1
+    assert warm["counters"].get("partition", 0) == 0
+    assert warm["counters"].get("tune.measured", 0) == 0
+    assert warm["identity"] == cold["identity"]
+    assert warm["y0"] == pytest.approx(cold["y0"], rel=1e-6)
